@@ -1,0 +1,64 @@
+"""Emit the §Roofline table from dry-run artifacts (benchmarks read-side)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts(art_dir: str = ART) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def bench_roofline_summary(rows):
+    arts = load_artifacts()
+    if not arts:
+        rows.append(("R1_roofline", 0.0, "no_dryrun_artifacts_yet"))
+        return
+    for a in arts:
+        r = a["roofline"]
+        rows.append((
+            f"R1_{a['arch']}__{a['shape']}__{a['mesh']}",
+            r["step_time_lower_bound_s"] * 1e6,
+            f"bound={r['bound']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};"
+            f"useful_ratio={r.get('useful_flops_ratio', 0):.3f};"
+            f"GiB_per_dev={a['memory']['per_device_total'] / 2**30:.2f}"))
+
+
+def markdown_table(arts: list[dict]) -> str:
+    """The EXPERIMENTS.md §Roofline table."""
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bound | MODEL_FLOPS | useful ratio | GiB/dev | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for a in arts:
+        r = a["roofline"]
+        mf = a["model_flops"]["model_flops"]
+        note = _note(a)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['bound']}** "
+            f"| {mf:.2e} | {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {a['memory']['per_device_total'] / 2**30:.1f} | {note} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def _note(a) -> str:
+    r = a["roofline"]
+    b = r["bound"]
+    if b == "collective":
+        kinds = r.get("coll_by_kind", {})
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return f"dominant coll: {top} — reshard/SP to shrink"
+    if b == "memory":
+        return "fuse/chunk big intermediates; bf16 residuals"
+    return "near compute roof — keep MXU fed"

@@ -1,0 +1,29 @@
+# One function per paper claim/table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+    from . import bench_core, bench_distributed, bench_kernels, bench_roofline
+
+    bench_core.bench_linear_timesteps(rows)
+    bench_core.bench_esop_savings(rows)
+    bench_core.bench_esop_accuracy(rows)
+    bench_core.bench_staged_vs_elementwise(rows)
+    bench_core.bench_generality(rows)
+    bench_kernels.bench_sr_gemm_structure(rows)
+    bench_kernels.bench_esop_plan(rows)
+    bench_kernels.bench_xla_gemm_baseline(rows)
+    bench_distributed.bench_strong_scaling_model(rows)
+    bench_distributed.bench_shardmap_vs_auto(rows)
+    bench_roofline.bench_roofline_summary(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

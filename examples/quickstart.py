@@ -1,0 +1,45 @@
+"""Quickstart: the TriADA engine in five minutes.
+
+Runs a forward+inverse 3D DCT via the three-stage outer-product GEMT, shows
+the linear time-step count on the simulated cell device, and the ESOP
+savings on sparse data.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (coefficient_matrix, dxt3d, energy_joules, esop_gemt3,
+                        gemt3, macs, prune, simulate_dxt3, time_steps)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 12, 20)).astype(np.float32))
+
+    # --- forward / inverse 3D DCT (any sizes; no power-of-two limits) ----
+    y = dxt3d(x, "dct")
+    xr = dxt3d(y, "dct", inverse=True)
+    print(f"3D DCT roundtrip max|err| = {float(jnp.max(jnp.abs(xr - x))):.2e}")
+
+    # --- the isomorphic device: linear time-steps, hypercubic MACs -------
+    cs = [np.asarray(coefficient_matrix("dct", n)) for n in x.shape]
+    out, stats = simulate_dxt3(np.asarray(x), *cs, esop=False)
+    np.testing.assert_allclose(out, gemt3(x, *map(jnp.asarray, cs)),
+                               rtol=1e-3, atol=1e-3)
+    print(f"cell grid {x.shape}: {stats.steps_done} time-steps "
+          f"(= N1+N2+N3 = {time_steps(*x.shape)}), "
+          f"{stats.macs_done:,} MACs (= N1N2N3(N1+N2+N3) = {macs(*x.shape):,})")
+
+    # --- ESOP on sparse data ---------------------------------------------
+    xs = prune(x, 0.8)  # sparsify 'insignificant' values
+    _, st = esop_gemt3(xs, *map(jnp.asarray, cs))
+    e = energy_joules(st)
+    print(f"ESOP on {100 * float(jnp.mean(xs == 0)):.0f}%-sparse data: "
+          f"{100 * st.mac_savings:.0f}% MACs skipped, "
+          f"{100 * e['saving']:.0f}% dynamic energy saved "
+          f"(result bit-identical to dense)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving: prefill + decode with KV cache, greedy and sampled,
+slot-managed continuous batching.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import serve
+
+
+def main():
+    serve("qwen1_5_0_5b", batch=4, prompt_len=12, max_new=24)
+    serve("starcoder2_7b", batch=2, prompt_len=12, max_new=12,
+          temperature=0.8)  # windowed (rolling-cache) arch
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — TriADA (trilinear matrix-by-tensor multiply-add) JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,125 @@
+"""Sharded checkpointing: per-leaf .npy files + JSON manifest, atomic step
+directories, async save thread, retention policy.
+
+Multi-host note: each host would write only its addressable shards (the
+leaf loop uses ``jax.experimental.multihost_utils`` hooks in a real pod);
+on this single-host container the full array is written.  Restore reshards
+onto whatever mesh the caller provides (elastic restarts — see
+runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+_SEP = "."
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for k, v in flat.items():
+        parts = k.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save(ckpt_dir: str, step: int, state, keep: int = 3,
+         blocking: bool = True) -> str:
+    """Write state to <ckpt_dir>/step_<N> atomically; prune old steps."""
+    flat = _flatten(state)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {}
+        for k, v in host.items():
+            fname = re.sub(r"[^A-Za-z0-9_.-]", "_", k) + ".npy"
+            dtype_name = str(v.dtype)
+            if v.dtype.kind == "V" or dtype_name == "bfloat16":
+                # ml_dtypes (bf16/fp8): persist as raw uint bits
+                dtype_name = "bfloat16" if v.dtype.itemsize == 2 else dtype_name
+                v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+            np.save(os.path.join(tmp, fname), v)
+            manifest[k] = {"file": fname, "shape": list(v.shape),
+                           "dtype": dtype_name}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _prune(ckpt_dir, keep)
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, shardings=None,
+            dtypes=None):
+    """Load a checkpoint; optionally device_put onto ``shardings`` (a pytree
+    of NamedSharding matching the saved structure) for elastic re-meshing."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for k, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(d, meta["file"]))
+        if meta["dtype"] not in (str(arr.dtype),):
+            import ml_dtypes
+            target = getattr(ml_dtypes, meta["dtype"], None)
+            if target is not None:
+                arr = arr.view(target)
+        flat[k] = arr
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        tree = _unflatten({
+            k: jax.device_put(jnp.asarray(v), flat_sh[k]) if k in flat_sh
+            else jnp.asarray(v)
+            for k, v in _flatten(tree).items()})
+    return tree, manifest["step"]

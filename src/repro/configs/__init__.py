@@ -1,0 +1,3 @@
+"""Assigned architecture configs (+ the paper's own DXT workload)."""
+from .base import (ARCH_IDS, LONG_CONTEXT_OK, SHAPES, BlockCfg, ModelConfig,
+                   ShapeCfg, all_configs, input_specs, load_config)

@@ -1,0 +1,217 @@
+"""Config schema: ModelConfig, assigned input shapes, input_specs(), registry.
+
+Every assigned architecture provides ``CONFIG`` (exact published config) and
+``SMOKE`` (reduced same-family config for CPU smoke tests) in its module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Block / model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    mixer: str  # attn | mla | rglru | mlstm | slstm
+    mlp: str  # swiglu | geglu | gelu | moe | none
+    window: int | None = None  # sliding-window size for attn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio | dxt
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    segments: tuple[tuple[BlockCfg, int], ...] = ()
+    norm: str = "rms"  # rms | ln
+    qkv_bias: bool = False
+    pos: str = "rope"  # rope | mrope | sinusoidal | none
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] | None = None
+    tie_embeddings: bool = False
+    input_mode: str = "tokens"  # tokens | embeddings | codebooks
+    n_codebooks: int = 1
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # MLA (DeepSeek-V3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # Recurrent families
+    lru_width: int = 0
+    conv_width: int = 4
+    mlstm_chunk: int = 128
+    n_lstm_heads: int = 4
+    # numerics / execution
+    param_dtype: Any = jnp.bfloat16
+    act_dtype: Any = jnp.bfloat16
+    remat: str = "block"  # none | block | dots
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    scan_layers: bool = True
+    # sharding-time padding (set by finalize_for_mesh; identity by default)
+    pad_heads_to: int = 1
+    pad_kv_heads_to: int = 1
+    pad_vocab_to: int = 1
+    shard_attn_heads: bool = True
+    # paper-technique toggles (TriADA)
+    use_triada_mixer: bool = False
+    triada_kind: str = "dct"
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def eff_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def eff_n_heads(self) -> int:
+        return _ceil_to(self.n_heads, self.pad_heads_to)
+
+    @property
+    def eff_n_kv_heads(self) -> int:
+        if self.n_kv_heads >= self.pad_kv_heads_to:
+            return _ceil_to(self.n_kv_heads, self.pad_kv_heads_to)
+        # Fewer KV heads than TP degree: replicate (vLLM-style) to TP degree,
+        # exact math (each replica serves a subset of the query groups).
+        return self.pad_kv_heads_to
+
+    @property
+    def eff_vocab(self) -> int:
+        return _ceil_to(self.vocab_size, self.pad_vocab_to)
+
+    @property
+    def eff_segments(self) -> tuple[tuple[tuple[BlockCfg, ...], int], ...]:
+        """Normalized segments: ((sub_blocks...), repeat_count) per segment.
+
+        A segment scans ``repeat_count`` super-blocks; each super-block
+        applies its sub-blocks in order (heterogeneous patterns like
+        rgemma's (rec, rec, attn) or xLSTM's 7 mLSTM + 1 sLSTM).
+        """
+        if self.segments:
+            out = []
+            for blocks, count in self.segments:
+                if isinstance(blocks, BlockCfg):
+                    blocks = (blocks,)
+                out.append((tuple(blocks), count))
+            return tuple(out)
+        return (((BlockCfg("attn", "swiglu"),), self.n_layers),)
+
+    def finalize_for_mesh(self, tp: int) -> "ModelConfig":
+        """Apply TP-divisibility padding (heads, kv heads, vocab)."""
+        if not self.shard_attn_heads:
+            tp_heads = 1
+        else:
+            tp_heads = tp
+        return dataclasses.replace(
+            self,
+            pad_heads_to=tp_heads,
+            pad_kv_heads_to=tp_heads,
+            pad_vocab_to=_ceil_to_mult(tp),
+        )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _ceil_to_mult(tp: int) -> int:
+    return max(tp, 1)
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (seq_len × global_batch per the task spec)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k (sub-quadratic / windowed state); see
+# DESIGN.md §5 for the skip rationale on pure full-attention archs.
+LONG_CONTEXT_OK = {"recurrentgemma-9b", "xlstm-350m", "starcoder2-7b"}
+
+ARCH_IDS = (
+    "qwen1_5_0_5b",
+    "starcoder2_7b",
+    "deepseek_coder_33b",
+    "yi_34b",
+    "qwen2_vl_72b",
+    "musicgen_large",
+    "recurrentgemma_9b",
+    "xlstm_350m",
+    "granite_moe_1b",
+    "deepseek_v3_671b",
+)
+
+
+def load_config(arch: str, smoke: bool = False) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> dict[str, ModelConfig]:
+    return {a: load_config(a, smoke=smoke) for a in ARCH_IDS}
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """Model inputs as ShapeDtypeStructs for the given (arch × shape) cell.
+
+    train:   {tokens/embeddings, labels}
+    prefill: {tokens/embeddings}
+    decode:  {tokens/embeddings for ONE new token}  (cache comes separately)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        s_in = 1
+    else:
+        s_in = s
+    if cfg.input_mode == "tokens":
+        inputs = {"tokens": sds((b, s_in), jnp.int32)}
+    elif cfg.input_mode == "codebooks":
+        inputs = {"tokens": sds((b, s_in, cfg.n_codebooks), jnp.int32)}
+    else:  # embeddings (modality frontend stub: precomputed patch/frame embs)
+        inputs = {"embeddings": sds((b, s_in, cfg.d_model), cfg.act_dtype)}
+    if cfg.pos == "mrope":
+        inputs["positions"] = sds((3, b, s_in), jnp.int32)
+    if shape.kind == "train":
+        inputs["labels"] = sds((b, s), jnp.int32)
+    return inputs

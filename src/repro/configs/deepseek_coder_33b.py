@@ -1,0 +1,25 @@
+"""DeepSeek-Coder-33B [dense] — arXiv:2401.14196 (llama arch).
+
+62L, d_model=7168, 56H (GQA kv=8), d_ff=19200, vocab=32256; RMSNorm,
+SwiGLU, RoPE theta=1e5 (linear scaling omitted — base arch).
+56 heads pad to 64 for TP=16 (DESIGN.md §4).
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "swiglu"),)
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab_size=32256,
+    segments=((_BLK, 62),),
+    rope_theta=100_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-coder-33b-smoke", family="dense",
+    n_layers=2, d_model=112, n_heads=7, n_kv_heads=1,
+    d_ff=320, vocab_size=256,
+    segments=((_BLK, 2),),
+    rope_theta=100_000.0,
+)

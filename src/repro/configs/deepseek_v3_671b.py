@@ -1,0 +1,33 @@
+"""DeepSeek-V3-671B [moe] — arXiv:2412.19437.
+
+61L, d_model=7168, 128H MLA (q_lora=1536, kv_lora=512, qk_nope=128,
+qk_rope=64, v=128), MoE 1 shared + 256 routed top-8 with expert d_ff=2048,
+first 3 layers dense (d_ff=18432), vocab=129280.
+MTP (multi-token prediction) head is out of scope (DESIGN.md §5).
+"""
+from .base import BlockCfg, ModelConfig
+
+_DENSE = (BlockCfg("mla", "swiglu"),)
+_MOE = (BlockCfg("mla", "moe"),)
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    d_ff=18432, vocab_size=129280,
+    segments=((_DENSE, 3), (_MOE, 58)),
+    n_experts=256, top_k=8, n_shared_experts=1, moe_d_ff=2048,
+    q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v3-671b-smoke", family="moe",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=256,
+    segments=((_DENSE, 1), (_MOE, 2)),
+    n_experts=4, top_k=2, n_shared_experts=1, moe_d_ff=32,
+    capacity_factor=4.0,  # dropless at smoke scale: train==decode exactly
+    q_lora_rank=32, kv_lora_rank=16,
+    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+)

@@ -1,0 +1,28 @@
+"""Granite-3.0-1B-A400M [moe] — hf:ibm-granite/granite-3.0-1b-a400m-base.
+
+24L, d_model=1024, 16H (GQA kv=8), MoE 32 experts top-8, expert d_ff=512,
+vocab=49155; RMSNorm + SwiGLU experts; tied embeddings; RoPE.
+Vocab pads 49155 → TP multiple (DESIGN.md §4).
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "moe"),)
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    segments=((_BLK, 24),),
+    n_experts=32, top_k=8, moe_d_ff=512,
+    tie_embeddings=True, rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="granite-moe-1b-a400m-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab_size=259,  # deliberately non-multiple: exercises padding
+    segments=((_BLK, 2),),
+    n_experts=4, top_k=2, moe_d_ff=64,
+    capacity_factor=4.0,  # dropless at smoke scale: train==decode exactly
+    tie_embeddings=True,
+)

@@ -1,0 +1,27 @@
+"""MusicGen-large [audio] — arXiv:2306.05284.
+
+Decoder-only over EnCodec tokens: 48L, d_model=2048, 32H (MHA kv=32),
+d_ff=8192, vocab=2048 per codebook; LayerNorm, GELU MLP, sinusoidal
+positions.  The EnCodec frontend + delay-pattern interleaving is a STUB:
+``input_specs`` provides 4-codebook token frames (B, S, 4); the embedding
+sums the per-codebook tables (faithful to the backbone input interface).
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "gelu"),)
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    segments=((_BLK, 48),),
+    norm="ln", pos="sinusoidal", input_mode="codebooks", n_codebooks=4,
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab_size=64,
+    segments=((_BLK, 2),),
+    norm="ln", pos="sinusoidal", input_mode="codebooks", n_codebooks=4,
+)

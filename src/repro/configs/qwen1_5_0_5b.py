@@ -1,0 +1,24 @@
+"""Qwen1.5-0.5B [dense] — hf:Qwen/Qwen1.5-0.5B.
+
+24L, d_model=1024, 16H (kv=16), d_ff=2816, vocab=151936; QKV bias; tied
+embeddings; RoPE theta=1e6 (Qwen1.5 family); RMSNorm + SwiGLU.
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "swiglu"),)
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=2816, vocab_size=151936,
+    segments=((_BLK, 24),),
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-0.5b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=176, vocab_size=256,
+    segments=((_BLK, 2),),
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+)

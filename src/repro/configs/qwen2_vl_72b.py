@@ -1,0 +1,28 @@
+"""Qwen2-VL-72B [vlm] — arXiv:2409.12191.
+
+Backbone only (assignment): 80L, d_model=8192, 64H (GQA kv=8), d_ff=29568,
+vocab=152064; M-RoPE (sections t=16, h=24, w=24 over head_dim/2=64);
+QKV bias; RMSNorm + SwiGLU.  The vision frontend is a STUB — ``input_specs``
+provides precomputed patch embeddings (B, S, d_model) and position triples.
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "swiglu"),)
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab_size=152064,
+    segments=((_BLK, 80),),
+    qkv_bias=True, pos="mrope", mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0, input_mode="embeddings",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-72b-smoke", family="vlm",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=256, vocab_size=256, head_dim=32,
+    segments=((_BLK, 2),),
+    qkv_bias=True, pos="mrope", mrope_sections=(4, 6, 6),
+    rope_theta=1_000_000.0, input_mode="embeddings",
+)

@@ -1,0 +1,27 @@
+"""RecurrentGemma-9B [hybrid] — arXiv:2402.19427 (Griffin).
+
+38L, d_model=4096, 16H (MQA kv=1), d_ff=12288, vocab=256000; pattern
+(recurrent, recurrent, local-attention) at 1:2 attention:recurrent ratio,
+local window 2048; RG-LRU + GeGLU MLP; RMSNorm.
+38 = 12×(rec,rec,attn) + (rec,rec).
+"""
+from .base import BlockCfg, ModelConfig
+
+_REC = BlockCfg("rglru", "geglu")
+_ATT = BlockCfg("attn", "geglu", window=2048)
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab_size=256000, head_dim=256,
+    segments=(((_REC, _REC, _ATT), 12), ((_REC, _REC), 1)),
+    lru_width=4096, conv_width=4, rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-9b-smoke", family="hybrid",
+    n_layers=3, d_model=64, n_heads=2, n_kv_heads=1,
+    d_ff=192, vocab_size=256, head_dim=32,
+    segments=(((_REC, _REC, BlockCfg("attn", "geglu", window=8)), 1),),
+    lru_width=64, conv_width=4,
+)

@@ -1,0 +1,25 @@
+"""StarCoder2-7B [dense] — arXiv:2402.19173.
+
+32L, d_model=4608, 36H (GQA kv=4), d_ff=18432, vocab=49152; sliding-window
+attention (w=4096); LayerNorm; GELU MLP; RoPE theta=1e5; QKV bias.
+Window attention makes the rolling-cache long_500k decode cell admissible.
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "gelu", window=4096),)
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab_size=49152,
+    segments=((_BLK, 32),),
+    norm="ln", qkv_bias=True, rope_theta=100_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-7b-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=2,
+    d_ff=384, vocab_size=256,
+    segments=(((BlockCfg("attn", "gelu", window=16),), 2),),
+    norm="ln", qkv_bias=True, rope_theta=100_000.0,
+)

@@ -1,0 +1,29 @@
+"""xLSTM-350M [ssm] — arXiv:2405.04517.
+
+24L, d_model=1024, 4 heads, d_ff=0 (no separate MLP — the m/sLSTM blocks
+carry their own up/gate/down projections), vocab=50304; 7:1 mLSTM:sLSTM
+pattern (3 super-blocks of 7 mLSTM + 1 sLSTM = 24 layers); no positional
+encoding (recurrence carries order).
+"""
+from .base import BlockCfg, ModelConfig
+
+_M = BlockCfg("mlstm", "none")
+_S = BlockCfg("slstm", "none")
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    segments=(((_M,) * 7 + (_S,), 3),),
+    pos="none", n_lstm_heads=4, mlstm_chunk=128,
+    shard_attn_heads=False,  # 4 heads < TP: replicate mixers, TP on vocab
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-350m-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+    d_ff=0, vocab_size=256,
+    segments=(((_M, _S), 1),),
+    pos="none", n_lstm_heads=2, mlstm_chunk=16,
+    shard_attn_heads=False,
+)

@@ -1,0 +1,24 @@
+"""Yi-34B [dense] — arXiv:2403.04652 (llama arch, GQA).
+
+60L, d_model=7168, 56H (GQA kv=8), d_ff=20480, vocab=64000; RMSNorm,
+SwiGLU, RoPE theta=5e6.  56 heads pad to 64 for TP=16.
+"""
+from .base import BlockCfg, ModelConfig
+
+_BLK = (BlockCfg("attn", "swiglu"),)
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+    segments=((_BLK, 60),),
+    rope_theta=5_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi-34b-smoke", family="dense",
+    n_layers=2, d_model=112, n_heads=7, n_kv_heads=1,
+    d_ff=320, vocab_size=256,
+    segments=((_BLK, 2),),
+    rope_theta=5_000_000.0,
+)

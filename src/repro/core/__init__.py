@@ -1,0 +1,14 @@
+"""TriADA core: trilinear matrix-by-tensor multiply-add (the paper's contribution)."""
+from .gemt import (PAREN_ORDERS, dxt3d, gemt3, gemt3_outer, macs, mode_product,
+                   time_steps)
+from .transforms import (TRANSFORM_KINDS, coefficient_matrix, dct2_matrix,
+                         dft_matrix, dht_matrix, dwht_matrix,
+                         inverse_coefficient_matrix)
+from .esop import (EsopStats, accumulation_error, block_nonzero_mask,
+                   energy_joules, esop_gemt3, esop_stage_counts, prune,
+                   sparsity)
+from .cellsim import TriadaCellGrid, simulate_dxt3
+from .tucker import hosvd, tucker_compress, tucker_expand, tucker_roundtrip_error
+from .distributed import gemt3_auto, gemt3_shardmap, tensor_spec
+from .layers import (apply_triada_dense, apply_triada_mixer, init_triada_dense,
+                     make_mixer_coeffs)

@@ -1,0 +1,200 @@
+"""ESOP — Elastic Sparse Outer-Product processing (paper §6).
+
+The outer-product formulation lets TriADA skip *both* compute and
+communication on zero operands:
+
+  * an all-zero streamed coefficient vector is never sent by the actuator
+    (saves a whole time-step),
+  * zero coefficients (tag=0) are never put on an operand bus,
+  * pivot cells holding a zero data element do not broadcast it, leaving all
+    cells on that bus idle for the step.
+
+On TPU the per-element mechanism has no MXU analogue, so the production path
+is **block-ESOP** (`kernels/esop_gemm.py`): whole MXU blocks are skipped when
+a block of the streamed coefficient matrix (or of the resident tensor) is
+zero.  This module provides
+
+  * exact, vectorized *accounting* of the paper's per-element model
+    (`esop_stage_counts`, `esop_gemt3`) — how many MACs / sends / time-steps
+    the cellular device would skip,
+  * a simple energy model (`energy_joules`) used by the benchmarks,
+  * block-mask construction shared with the Pallas kernel,
+  * threshold pruning for the "insignificant values" regime and an
+    accuracy-accounting helper (`accumulation_error`) for the paper's
+    accuracy/stability claim.
+
+Note on exactness: skipping true zeros is *bit-exact* (x + 0·c == x in IEEE
+arithmetic except for signed-zero), so ESOP results equal the dense results;
+the accuracy benefit materializes in the pruning regime, where shorter
+accumulation chains accumulate less rounding error — quantified in
+``benchmarks/esop_accuracy.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "EsopStats",
+    "sparsity",
+    "esop_stage_counts",
+    "esop_gemt3",
+    "block_nonzero_mask",
+    "prune",
+    "energy_joules",
+    "accumulation_error",
+]
+
+
+@dataclasses.dataclass
+class EsopStats:
+    """Operation accounting for one or more ESOP stages (device model units)."""
+
+    macs_dense: int  # MACs the dense schedule would execute
+    macs_done: int  # MACs actually executed under ESOP
+    steps_dense: int  # time-steps of the dense schedule (Σ N_s)
+    steps_done: int  # time-steps after all-zero-vector skipping
+    coeff_sends_dense: int  # coefficient-element bus transactions, dense
+    coeff_sends_done: int  # after zero-coefficient suppression
+    data_sends_dense: int  # pivot-cell data broadcasts, dense
+    data_sends_done: int  # after zero-data suppression
+
+    def __add__(self, other: "EsopStats") -> "EsopStats":
+        return EsopStats(*(getattr(self, f.name) + getattr(other, f.name)
+                           for f in dataclasses.fields(self)))
+
+    @property
+    def macs_skipped(self) -> int:
+        return self.macs_dense - self.macs_done
+
+    @property
+    def mac_savings(self) -> float:
+        return self.macs_skipped / max(self.macs_dense, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["mac_savings"] = self.mac_savings
+        return d
+
+
+def sparsity(x: jnp.ndarray) -> float:
+    """Fraction of exactly-zero elements."""
+    return float(jnp.mean((x == 0).astype(jnp.float32)))
+
+
+def esop_stage_counts(resident: jnp.ndarray, coeff: jnp.ndarray, mode: int) -> EsopStats:
+    """Exact ESOP accounting for one stage contracting ``mode`` (vectorized).
+
+    At time-step n the actuator streams coefficient row ``coeff[n, :]``
+    (length K) and the n-th mode-``mode`` slice of ``resident`` (A×B cells)
+    forms the data vector.  Cell (a, b, k) executes a MAC iff both its data
+    element and its coefficient are nonzero.
+    """
+    r = np.moveaxis(np.asarray(resident), mode - 1, 0)  # (N, A, B)
+    n = r.shape[0]
+    ab = r.shape[1] * r.shape[2]
+    coeff = np.asarray(coeff)
+    k = coeff.shape[1]
+
+    x_nnz = np.sum((r != 0).reshape(n, -1), axis=1, dtype=np.int64)  # per step
+    c_nnz = np.sum(coeff != 0, axis=1, dtype=np.int64)
+    step_live = (c_nnz > 0).astype(np.int64)  # all-zero vector => skip step
+
+    macs_done = int(np.sum(x_nnz * c_nnz))
+    return EsopStats(
+        macs_dense=int(n) * ab * k,
+        macs_done=macs_done,
+        steps_dense=int(n),
+        steps_done=int(np.sum(step_live)),
+        coeff_sends_dense=int(n) * k,
+        coeff_sends_done=int(np.sum(c_nnz)),
+        data_sends_dense=int(n) * ab,
+        data_sends_done=int(np.sum(x_nnz * step_live)),
+    )
+
+
+def esop_gemt3(
+    x: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    order: Sequence[int] = (3, 1, 2),
+) -> tuple[jnp.ndarray, EsopStats]:
+    """3-stage GEMT with ESOP accounting.  Result is bit-identical to dense."""
+    from .gemt import mode_product
+
+    cs = {1: c1, 2: c2, 3: c3}
+    stats: EsopStats | None = None
+    y = x
+    for mode in order:
+        s = esop_stage_counts(y, cs[mode], mode)
+        stats = s if stats is None else stats + s
+        y = mode_product(y, cs[mode], mode)
+    assert stats is not None
+    return y, stats
+
+
+def block_nonzero_mask(a: jnp.ndarray, block: tuple[int, int]) -> jnp.ndarray:
+    """(rows/bm, cols/bn) boolean mask: True where the block has any nonzero.
+
+    Shared between the ESOP accounting and the Pallas block-ESOP kernel
+    (`kernels/esop_gemm.py`).  Dimensions must divide evenly (pad upstream).
+    """
+    bm, bn = block
+    m, n = a.shape
+    if m % bm or n % bn:
+        raise ValueError(f"shape {a.shape} not divisible by block {block}")
+    blocks = a.reshape(m // bm, bm, n // bn, bn)
+    return jnp.any(blocks != 0, axis=(1, 3))
+
+
+def prune(x: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """Zero out 'insignificant' values (|x| < threshold) — paper §6 regime."""
+    return jnp.where(jnp.abs(x) < threshold, jnp.zeros_like(x), x)
+
+
+def energy_joules(
+    stats: EsopStats,
+    e_mac: float = 1.0e-12,
+    e_coeff_send: float = 2.0e-12,
+    e_data_send: float = 2.0e-12,
+) -> dict:
+    """Simple dynamic-energy model (defaults ~pJ-scale per op/transaction).
+
+    Returns dense vs ESOP energy and the saving fraction.  The absolute
+    constants are placeholders for a device model; the *ratio* is the
+    paper-relevant quantity.
+    """
+    dense = (stats.macs_dense * e_mac
+             + stats.coeff_sends_dense * e_coeff_send
+             + stats.data_sends_dense * e_data_send)
+    esop = (stats.macs_done * e_mac
+            + stats.coeff_sends_done * e_coeff_send
+            + stats.data_sends_done * e_data_send)
+    return {"dense_j": dense, "esop_j": esop,
+            "saving": (dense - esop) / max(dense, 1e-30)}
+
+
+def accumulation_error(x, c1, c2, c3, order=(3, 1, 2)) -> dict:
+    """Rounding-error accounting: fp32 staged GEMT vs fp64 oracle.
+
+    Used by ``benchmarks/esop_accuracy.py`` to quantify the paper's claim
+    that shorter accumulation chains (ESOP + pruning) reduce rounding error.
+    """
+    from .gemt import gemt3
+
+    f64 = [np.asarray(a, dtype=np.float64) for a in (x, c1, c2, c3)]
+    ref = gemt3(*[jnp.asarray(a) for a in f64], order=order)
+    f32 = gemt3(*[jnp.asarray(a, dtype=jnp.float32) for a in (x, c1, c2, c3)],
+                order=order)
+    err = jnp.asarray(f32, jnp.float64) - ref
+    denom = float(jnp.max(jnp.abs(ref))) or 1.0
+    return {
+        "max_abs_err": float(jnp.max(jnp.abs(err))),
+        "rel_err": float(jnp.max(jnp.abs(err)) / denom),
+        "rms_err": float(jnp.sqrt(jnp.mean(err * err))),
+    }

@@ -1,0 +1,65 @@
+"""The paper's technique as first-class NN layers.
+
+* ``TriadaDense`` — a Tucker-factorized linear layer ``y = x·U_in·G·U_out``:
+  the GEMT compression/expansion case (paper §2.3) applied to a weight
+  matrix; backed by the same chained-GEMM dataflow the SR-GEMM kernel
+  implements (square-ish core streamed, activations resident).
+* ``Triada3DMixer`` — DXT-based token/channel mixing (FNet-style): activations
+  ``(B, S, D)`` are treated as a 3-mode tensor and transformed along S and D
+  by orthonormal DCT/DHT matrices via the GEMT engine.  This is literally the
+  paper's bilinear transform of each batch slice (identity on mode 1).
+
+Pure-functional: ``init_*`` returns a params pytree; ``apply_*`` consumes it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gemt import mode_product
+from .transforms import coefficient_matrix
+
+__all__ = [
+    "init_triada_dense",
+    "apply_triada_dense",
+    "make_mixer_coeffs",
+    "apply_triada_mixer",
+]
+
+
+def init_triada_dense(key, d_in: int, d_out: int, rank: int,
+                      dtype=jnp.float32) -> dict:
+    """Tucker-2 factorization of a (d_in, d_out) weight: U_in·G·U_out."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_in ** -0.5
+    return {
+        "u_in": (jax.random.normal(k1, (d_in, rank)) * scale_in).astype(dtype),
+        "core": (jax.random.normal(k2, (rank, rank)) * rank ** -0.5).astype(dtype),
+        "u_out": (jax.random.normal(k3, (rank, d_out)) * rank ** -0.5).astype(dtype),
+    }
+
+
+def apply_triada_dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Chained GEMM schedule: each stage's output is the next stage's resident
+    operand (the SR-GEMM chaining case of paper §5.1)."""
+    y = x @ params["u_in"]
+    y = y @ params["core"]
+    return y @ params["u_out"]
+
+
+def make_mixer_coeffs(seq_len: int, d_model: int, kind: str = "dct",
+                      dtype=jnp.float32) -> dict:
+    """Precomputed orthonormal coefficient matrices for the mixer (the
+    'Actuator contents' — constants, as paper §2.2 notes they can be)."""
+    return {
+        "c_seq": coefficient_matrix(kind, seq_len, dtype=dtype),
+        "c_dim": coefficient_matrix(kind, d_model, dtype=dtype),
+    }
+
+
+def apply_triada_mixer(coeffs: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Bilinear DXT mixing of (B, S, D): X ×₂ C_seq ×₃ C_dim via the GEMT
+    engine (mode 1 = batch is untouched)."""
+    y = mode_product(x, coeffs["c_seq"].astype(x.dtype), 2)
+    y = mode_product(y, coeffs["c_dim"].astype(x.dtype), 3)
+    return y

@@ -1,0 +1,1 @@
+from .pipeline import TokenSource, make_source, shard_batch

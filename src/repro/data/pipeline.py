@@ -1,0 +1,67 @@
+"""Deterministic synthetic data pipeline with sharded host→device transfer.
+
+Real deployments swap ``TokenSource`` for a tokenized corpus reader; the
+interface (seeded, stateless ``batch(step)``) is what the fault-tolerance
+layer relies on for exact resume-after-restart (data order is a pure
+function of the step number — no iterator state to checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TokenSource:
+    """Zipf-distributed token stream; batch content = f(seed, step)."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    n_codebooks: int = 0  # >0: (B, S, n_codebooks) frames (musicgen)
+    embedding_dim: int = 0  # >0: continuous embeddings (vlm stub)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        b, s = self.global_batch, self.seq_len
+        if self.embedding_dim:
+            emb = rng.normal(size=(b, s, self.embedding_dim)).astype(np.float32)
+            labels = self._tokens(rng, (b, s))
+            return {"embeddings": emb, "labels": labels}
+        shape = (b, s + 1, self.n_codebooks) if self.n_codebooks else (b, s + 1)
+        toks = self._tokens(rng, shape)
+        if self.n_codebooks:
+            return {"tokens": toks[:, :-1], "labels": toks[:, 1:, 0]}
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _tokens(self, rng, shape) -> np.ndarray:
+        z = rng.zipf(self.zipf_a, size=shape)
+        return np.minimum(z - 1, self.vocab_size - 1).astype(np.int32)
+
+
+def shard_batch(batch: dict, mesh, batch_axes) -> dict:
+    """Host numpy batch -> globally-sharded device arrays (batch dim over DP)."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = {}
+    for k, v in batch.items():
+        spec = P(batch_axes) + P(*([None] * (v.ndim - 1)))
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def make_source(cfg, shape, seed: int = 0) -> TokenSource:
+    return TokenSource(
+        vocab_size=cfg.vocab_size,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+        n_codebooks=cfg.n_codebooks if cfg.input_mode == "codebooks" else 0,
+        embedding_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0,
+    )

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ ops wrappers, refs)."""
+from .ops import esop_gemm, flash_attention, on_tpu, sr_gemm

@@ -1,0 +1,101 @@
+"""Blockwise (flash) attention forward kernel — perf-critical LM substrate.
+
+Output-stationary in the same sense as SR-GEMM: the (q-block × head-dim)
+output tile and the running softmax statistics stay in VMEM scratch while
+K/V blocks are streamed along the innermost grid dimension.  Causal blocks
+strictly above the diagonal are skipped with ``pl.when`` (no MACs; on real
+TPU the fetch is also elided for fully-masked blocks via the same
+scalar-prefetch technique as the ESOP kernel — kept simple here).
+
+Layout: q, k, v are (B*H, S, D); grid = (B*H, S/bq, S/bkv).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, kv_steps: int, bq: int, bkv: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bkv, d)
+        v = v_ref[0]  # (bkv, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip blocks strictly above the diagonal: all their MACs are masked.
+        pl.when(ki * bkv <= qi * bq + (bq - 1))(_update)
+    else:
+        _update()
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    bq: int = 128,
+    bkv: int = 128,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q, k, v: (BH, S, D) -> (BH, S, D).  S divisible by bq and bkv."""
+    bh, s, d = q.shape
+    assert k.shape == v.shape == (bh, s, d)
+    assert s % bq == 0 and s % bkv == 0
+    kv_steps = s // bkv
+    grid = (bh, s // bq, kv_steps)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=kv_steps, bq=bq, bkv=bkv,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # stationary output tile
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,87 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, dtype policy, and the CPU/TPU dispatch:
+on a TPU backend the kernels run compiled; elsewhere they run in
+``interpret=True`` mode (bit-faithful emulation) unless ``use_pallas=False``
+routes to the jnp reference (the default inside the big-model dry-run, where
+interpret-mode loops would bloat compile times — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .attention import flash_attention_pallas
+from .esop_gemm import esop_gemm_pallas
+from .sr_gemm import sr_gemm_pallas
+
+__all__ = ["sr_gemm", "esop_gemm", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
+            bm: int = 128, bn: int = 128, bk: int = 128,
+            use_pallas: bool | None = None) -> jnp.ndarray:
+    """Y = (out +) X @ C via the streaming outer-product kernel."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas and not on_tpu():
+        interpret = True
+    else:
+        interpret = not on_tpu()
+    if use_pallas is False:
+        return ref.ref_sr_gemm(x, c, out)
+    m, n = x.shape[0], c.shape[1]
+    o = out if out is not None else jnp.zeros((m, n), dtype=x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    cp = _pad_to(c, (bk, bn))
+    op = _pad_to(o, (bm, bn))
+    y = sr_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n]
+
+
+def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
+              bm: int = 128, bn: int = 128, bk: int = 128,
+              use_pallas: bool | None = None):
+    """Block-ESOP Y = (out +) X @ C skipping zero C blocks. Returns (y, info)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas is False:
+        return ref.ref_esop_gemm(x, c, (bk, bn), out), {"fetch_savings": 0.0}
+    interpret = not on_tpu()
+    m, n = x.shape[0], c.shape[1]
+    o = out if out is not None else jnp.zeros((m, n), dtype=x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    cp = _pad_to(c, (bk, bn))
+    op = _pad_to(o, (bm, bn))
+    y, info = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
+                               interpret=interpret)
+    return y[:m, :n], info
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, bq: int = 128, bkv: int = 128,
+                    use_pallas: bool | None = None) -> jnp.ndarray:
+    """(B, H, S, D) flash attention; jnp blockwise reference off-TPU by default."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas is False:
+        return ref.ref_attention(q, k, v, causal=causal)
+    b, h, s, d = q.shape
+    fold = lambda t: t.reshape(b * h, s, d)
+    y = flash_attention_pallas(fold(q), fold(k), fold(v), bq=bq, bkv=bkv,
+                               causal=causal, interpret=not on_tpu())
+    return y.reshape(b, h, s, d)

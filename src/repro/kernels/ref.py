@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_attention"]
+
+
+def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
+                out: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Oracle for the streaming outer-product SR-GEMM: Y (+)= X @ C."""
+    y = jnp.dot(x.astype(jnp.float32), c.astype(jnp.float32))
+    if out is not None:
+        y = y + out.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ref_esop_gemm(x: jnp.ndarray, c: jnp.ndarray,
+                  block: tuple[int, int],
+                  out: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Oracle for block-ESOP: identical to SR-GEMM with *block-zeroed* C.
+
+    Zero blocks of C contribute nothing; the kernel skips them.  Because
+    skipped blocks are exactly zero, the oracle is just the dense product.
+    """
+    del block  # exactness of zero-skipping: dense result is the oracle
+    return ref_sr_gemm(x, c, out=out)
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Oracle for flash attention: q,k,v are (B, H, S, D); returns (B, H, S, D)."""
+    s = q.shape[-2]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Analytic MODEL_FLOPS (the §Roofline 'useful work' numerator).
+
+Convention (standard MFU accounting): MODEL_FLOPS = 6·N_eff·tokens for
+training (fwd+bwd), 2·N_eff·tokens for prefill/decode forward, where N_eff
+is the matmul-visible parameter count — embedding *lookup* excluded, tied
+LM head *matmul* included, MoE experts scaled to the active fraction
+(top_k + shared)/E.  Attention's quadratic term is excluded (convention),
+which makes the reported useful-flops ratio conservative for long-seq cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _param_sizes(cfg) -> tuple[float, float]:
+    """(n_total_matmul, n_active_matmul) parameter counts."""
+    from ..models import init_model
+
+    sds = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    total = 0.0
+    expert_total = 0.0
+    embed = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+    for path, leaf in flat:
+        keys = [getattr(p, "key", str(p)) for p in path]
+        n = float(leaf.size)
+        if "embed" in keys and "lm_head" not in keys:
+            embed += n
+            continue
+        total += n
+        if any("moe" == k for k in keys) and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys):
+            expert_total += n
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        total += cfg.eff_vocab * cfg.d_model  # tied head matmul
+    active_frac = (cfg.top_k / cfg.n_experts) if cfg.n_experts else 1.0
+    active = total - expert_total * (1.0 - active_frac)
+    return total, active
+
+
+def model_flops(cfg, shape) -> dict:
+    """Global per-step MODEL_FLOPS for this (arch × shape) cell."""
+    n_total, n_active = _param_sizes(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        flops = 2.0 * n_active * tokens
+    return {"n_params_total": n_total, "n_params_active": n_active,
+            "tokens": tokens, "model_flops": flops}

@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf-iteration driver (§Perf): lower one cell with lever overrides,
+# compare its roofline terms against the paper-faithful baseline artifact,
+# and log the hypothesis→change→before→after record.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb \
+#       --arch yi_34b --shape train_4k --mesh single --tag fused_loss \
+#       --fused-loss --hypothesis "CE loss materializes ~7 (B,S,V) f32 ..."
+#
+# Levers: --fused-loss, --act k=v (activation rules), --param k=v (param
+# rules), --cfg k=v (ModelConfig fields, e.g. remat=dots q_chunk=256),
+# --microbatch N.
+
+import argparse
+import gzip
+import json
+
+import jax.numpy as jnp
+
+
+def _parse_kv(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v in ("None", "none", "null"):
+            out[k] = None
+        elif v in ("True", "False"):
+            out[k] = v == "True"
+        elif v.startswith("(") or "," in v:
+            out[k] = tuple(x.strip() for x in v.strip("()").split(",") if x.strip())
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        if k.endswith("dtype") and isinstance(out[k], str):
+            out[k] = getattr(jnp, out[k])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--fused-loss", action="store_true")
+    ap.add_argument("--loss-chunk", type=int, default=8192)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--act", nargs="*", default=None)
+    ap.add_argument("--param", nargs="*", default=None)
+    ap.add_argument("--cfg", nargs="*", default=None)
+    ap.add_argument("--baseline-dir", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+
+    multi = args.mesh == "multi"
+    cell = f"{args.arch}__{args.shape}__{args.mesh}"
+    artifact, hlo = lower_cell(
+        args.arch, args.shape, multi,
+        act_overrides=_parse_kv(args.act),
+        param_overrides=_parse_kv(args.param),
+        cfg_overrides=_parse_kv(args.cfg),
+        microbatch=args.microbatch,
+        fused_loss=args.fused_loss,
+        loss_chunk=args.loss_chunk,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    artifact["tag"] = args.tag
+    artifact["hypothesis"] = args.hypothesis
+    artifact["levers"] = {
+        "fused_loss": args.fused_loss, "microbatch": args.microbatch,
+        "act": args.act, "param": args.param, "cfg": args.cfg,
+    }
+    out_json = os.path.join(args.out, f"{cell}__{args.tag}.json")
+    with open(out_json, "w") as f:
+        json.dump(artifact, f, indent=1)
+    with gzip.open(out_json.replace(".json", ".hlo.txt.gz"), "wt") as f:
+        f.write(hlo)
+
+    base_path = os.path.join(args.baseline_dir, cell + ".json")
+    print(f"\n=== {cell} [{args.tag}] ===")
+    if args.hypothesis:
+        print(f"hypothesis: {args.hypothesis}")
+    r = artifact["roofline"]
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            b = json.load(f)["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s"):
+            delta = (r[k] - b[k]) / max(b[k], 1e-12)
+            print(f"{k:14s} {b[k]:.3e} -> {r[k]:.3e}  ({delta:+.1%})")
+        print(f"bound          {b['bound']} -> {r['bound']}")
+        print(f"step lower bnd {b['step_time_lower_bound_s']:.3e} -> "
+              f"{r['step_time_lower_bound_s']:.3e}  "
+              f"({(r['step_time_lower_bound_s'] / b['step_time_lower_bound_s'] - 1):+.1%})")
+        print(f"roofline frac  {b.get('roofline_fraction', 0):.4f} -> "
+              f"{r.get('roofline_fraction', 0):.4f}")
+    else:
+        print("(no baseline artifact found)")
+        for k in ("compute_s", "memory_s", "collective_s", "bound"):
+            print(f"{k:14s} {r[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Offline re-analysis: regenerate roofline terms in dry-run JSONs from the
+saved (gzipped) HLO — lets parser/model refinements apply without
+recompiling 66 cells.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.roofline import analyze_hlo, roofline_terms
+
+
+def reanalyze(art_dir: str) -> int:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.txt.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            a = json.load(f)
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        counts = analyze_hlo(hlo, a["n_devices"])
+        a["roofline"] = roofline_terms(
+            counts, a["n_devices"], a["model_flops"]["model_flops"])
+        with open(jpath, "w") as f:
+            json.dump(a, f, indent=1)
+        n += 1
+        print(f"re-analyzed {os.path.basename(jpath)}: "
+              f"bound={a['roofline']['bound']}")
+    return n
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    print(f"{reanalyze(d)} artifacts re-analyzed")

@@ -1,0 +1,483 @@
+"""Roofline-term extraction from compiled HLO.
+
+Why a hand-rolled parser: XLA's ``compiled.cost_analysis()`` counts
+``while`` (scan) bodies **once** (verified empirically — see EXPERIMENTS.md
+§Methodology), which under-counts layer-scanned models by ~n_layers×, and
+it reports no collective traffic at all.  This module parses
+``compiled.as_text()`` into computations, counts per-computation
+
+  * dot FLOPs (from dot_dimension_numbers),
+  * HBM traffic (operand+output bytes of memory-moving top-level ops),
+  * per-device ICI collective traffic (ring-model per collective kind),
+
+then walks the call graph (fusion/call/while/conditional) multiplying
+while-bodies by trip counts recovered from their loop-condition constants.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (task-prescribed constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link / chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# HBM model (TPU-oriented): every materialized buffer is written once
+# (output bytes of all real ops), but operand *reads* are charged only at
+# compute-heavy consumers — elementwise chains that the CPU backend leaves
+# unfused would be fused on the TPU target, so their reads collapse into
+# their producers' writes.  See EXPERIMENTS.md §Methodology.
+_NO_OUTPUT_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "while", "conditional", "call",
+}
+_READ_CHARGED_OPS = {
+    "dot", "convolution", "fusion", "custom-call", "gather", "scatter",
+    "reduce", "sort", "select-and-scatter", "reduce-window", "copy",
+    "concatenate", "cholesky", "triangular-solve",
+}
+
+# Buffers below this size are assumed VMEM-resident on the TPU target
+# (loop-carried recurrent states, softmax stats, norms): no HBM charge.
+# The CPU backend materializes them per step, which would otherwise make
+# sequential-scan models (sLSTM) look absurdly memory-bound.
+VMEM_RESIDENT_BYTES = 2**20
+
+
+# ---------------------------------------------------------------------------
+# Shape parsing
+# ---------------------------------------------------------------------------
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one HLO type string (handles tuples)."""
+    total = 0.0
+    for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue  # token[] / opaque
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = re.search(r"[a-z0-9]+\[([\d,]*)\]", type_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+# ---------------------------------------------------------------------------
+# HLO text -> computations
+# ---------------------------------------------------------------------------
+
+
+# Computation header: `%name (args...) -> type {` (instr lines have ` = `).
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s+\(.*->.*\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_instr(line: str):
+    """Parse `%name = TYPE opcode(...), attrs`.  TYPE may be a tuple type
+    containing nested parens and `/*index=N*/` comments."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple type: scan to matching close paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    m = _OPCODE_RE.match(rest)
+    if not m:
+        return None
+    return Instr(name, type_str, m.group(1), rest[m.end():],
+                 is_root=line.lstrip().startswith("ROOT "))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes (raw tail of the line)
+    is_root: bool = False
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    """Returns ({comp_name: [Instr, ...]}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    cur_name = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if " = " in line:
+                continue
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur_name = m.group(2)
+                cur = []
+                if m.group(1):
+                    entry = cur_name
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("} "):
+            comps[cur_name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.append(ins)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _operands(instr: Instr) -> list[str]:
+    """Operand instruction names — the argument list of ``opcode( ... )``.
+
+    ``instr.rest`` is everything after the opening paren; scan to its
+    matching close (attributes after it may also contain %names — excluded).
+    """
+    depth = 1
+    buf = []
+    for ch in instr.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return re.findall(r"%[\w.\-]+", "".join(buf))
+
+
+def _attr(instr: Instr, key: str) -> str | None:
+    m = re.search(key + r"=([^,]+(?:\{[^}]*\})?)", instr.rest)
+    return m.group(1) if m else None
+
+
+# ---------------------------------------------------------------------------
+# Per-computation direct counts + call graph walk
+# ---------------------------------------------------------------------------
+
+
+def _group_size(instr: Instr, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", instr.rest)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _dot_flops(instr: Instr, symtab: dict) -> float:
+    out_dims = _shape_dims(instr.type_str)
+    ops = _operands(instr)
+    if not ops:
+        return 0.0
+    lhs_type = symtab.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contract
+
+
+@dataclasses.dataclass
+class Counts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0  # per-device collective traffic (ring model)
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Counts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.ici_bytes += other.ici_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        self.while_trips.update(other.while_trips)
+
+
+def _collective_bytes(instr: Instr, symtab: dict, opcode: str,
+                      total_devices: int) -> float:
+    n = max(_group_size(instr, total_devices), 1)
+    ring = (n - 1) / n
+    in_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in _operands(instr))
+    out_bytes = _shape_bytes(instr.type_str)
+    if opcode.startswith("all-gather"):
+        return out_bytes * ring
+    if opcode.startswith("reduce-scatter"):
+        return in_bytes * ring
+    if opcode.startswith("all-reduce"):
+        return 2.0 * in_bytes * ring
+    if opcode.startswith("all-to-all"):
+        return in_bytes * ring
+    if opcode.startswith("collective-permute"):
+        return in_bytes
+    return 0.0
+
+
+def _resolve_root(instrs: list[Instr]) -> Instr | None:
+    """Fused-computation root, looking through bitcast/copy/convert."""
+    by_name = {i.name: i for i in instrs}
+    root = next((i for i in instrs if i.is_root), None)
+    seen = 0
+    while root is not None and root.opcode in ("bitcast", "copy", "convert") \
+            and seen < 8:
+        ops = _operands(root)
+        root = by_name.get(ops[0]) if ops else None
+        seen += 1
+    return root
+
+
+def _fusion_param_reads(instrs: list[Instr], operand_types: list[str]) -> float:
+    """HBM bytes a fusion actually reads from its operands.
+
+    A parameter consumed only via (dynamic-)slice reads just the slices —
+    the scan-saved-activations pattern (per-trip slice of a stacked (L, …)
+    buffer) must not be charged the full buffer each trip.
+    """
+    by_name = {i.name: i for i in instrs}
+    consumers: dict[str, list[Instr]] = {}
+    for ins in instrs:
+        for o in _operands(ins):
+            consumers.setdefault(o, []).append(ins)
+
+    def effective_read(name: str, full_bytes: float, depth: int = 0) -> float:
+        if depth > 6:
+            return full_bytes
+        total = 0.0
+        for cons in consumers.get(name, []):
+            if cons.opcode in ("bitcast", "reshape", "copy", "transpose"):
+                total += effective_read(cons.name, full_bytes, depth + 1)
+            elif cons.opcode in ("dynamic-slice", "slice"):
+                total += _shape_bytes(cons.type_str)
+            elif cons.opcode == "dynamic-update-slice":
+                # reads only the update operand; base buffer is aliased
+                ops = _operands(cons)
+                if ops and ops[0] == name:
+                    continue
+                total += full_bytes
+            elif cons.opcode == "get-tuple-element":
+                total += effective_read(cons.name, full_bytes, depth + 1)
+            else:
+                return full_bytes  # generic consumer: full read
+        return min(total, full_bytes)
+
+    params = sorted((i for i in instrs if i.opcode == "parameter"),
+                    key=lambda i: int(re.match(r"(\d+)", i.rest).group(1)))
+    total = 0.0
+    for i, p in enumerate(params):
+        full = _shape_bytes(operand_types[i]) if i < len(operand_types) \
+            else _shape_bytes(p.type_str)
+        if full < VMEM_RESIDENT_BYTES:
+            continue
+        total += effective_read(p.name, full)
+    return total
+
+
+def _trip_count(instr: Instr, cond_instrs: list[Instr]) -> int:
+    """Loop trip count: XLA's backend_config known_trip_count when present,
+    else the max integer constant in the loop condition (≈ scan length)."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.rest)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"^(\d+)\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(hlo: str, total_devices: int) -> Counts:
+    comps, entry = parse_computations(hlo)
+    symtabs = {cn: {i.name: i.type_str for i in instrs}
+               for cn, instrs in comps.items()}
+    cache: dict[str, Counts] = {}
+
+    def walk(comp_name: str, stack=(), as_fusion: bool = False) -> Counts:
+        key = (comp_name, as_fusion)
+        if key in cache:
+            return cache[key]
+        if comp_name in stack or comp_name not in comps:
+            return Counts()
+        c = Counts()
+        symtab = symtabs[comp_name]
+        is_fusion = as_fusion
+        for ins in comps[comp_name]:
+            op = ins.opcode
+            if op == "while":
+                body = _attr(ins, "body")
+                cond = _attr(ins, "condition")
+                body_name = body.lstrip("%") if body else None
+                cond_name = cond.lstrip("%") if cond else None
+                trips = _trip_count(ins, comps.get(cond_name, []))
+                c.while_trips[body_name] = trips
+                if body_name:
+                    c.add(walk(body_name, stack + (comp_name,)), trips)
+                continue
+            if op == "conditional":
+                m = re.findall(r"%[\w.\-]+", _attr(ins, "branch_computations")
+                               or "")
+                for br in m:  # upper bound: sum all branches
+                    c.add(walk(br.lstrip("%"), stack + (comp_name,)))
+                continue
+            if op == "dot":
+                c.flops += _dot_flops(ins, symtab)
+            elif any(op.startswith(k) for k in _COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(k for k in _COLLECTIVES if op.startswith(k))
+                b = _collective_bytes(ins, symtab, op, total_devices)
+                c.ici_bytes += b
+                c.coll_by_kind[base] = c.coll_by_kind.get(base, 0.0) + b
+            elif op in ("fusion", "call", "async-start"):
+                callee = _attr(ins, "calls") or _attr(ins, "to_apply")
+                callee_name = callee.lstrip("%") if callee else None
+                if callee_name and callee_name in comps:
+                    inner = walk(callee_name, stack + (comp_name,),
+                                 as_fusion=True)
+                    # Only flops/collectives propagate out of fusions: the
+                    # fusion's HBM traffic is charged here at the call site.
+                    c.flops += inner.flops
+                    c.ici_bytes += inner.ici_bytes
+                    for k, v in inner.coll_by_kind.items():
+                        c.coll_by_kind[k] = c.coll_by_kind.get(k, 0.0) + v
+                    if is_fusion:
+                        continue  # nested fusion: outermost caller charges
+                    callee_instrs = comps[callee_name]
+                    callee_tab = symtabs[callee_name]
+                    op_types = [symtab.get(o, "") for o in _operands(ins)]
+                    # reads: slice-aware per-parameter accounting
+                    c.hbm_bytes += _fusion_param_reads(callee_instrs, op_types)
+                    # write: in-place DUS root writes only the slice
+                    root = _resolve_root(callee_instrs)
+                    if root is not None and root.opcode == "dynamic-update-slice":
+                        ops2 = _operands(root)
+                        if len(ops2) >= 2:
+                            b2 = _shape_bytes(callee_tab.get(ops2[1], ""))
+                            if b2 >= VMEM_RESIDENT_BYTES:
+                                c.hbm_bytes += b2
+                    else:
+                        ob = _shape_bytes(ins.type_str)
+                        if ob >= VMEM_RESIDENT_BYTES:
+                            c.hbm_bytes += ob
+                    continue
+            # ---- HBM model (skip inside fusion computations: the caller
+            # charges the fused region's in/out) -------------------------
+            if is_fusion:
+                continue
+            if op in _NO_OUTPUT_OPS:
+                continue
+            if op == "dynamic-update-slice":
+                # In-place slice update: traffic = read+write of the slice,
+                # not of the full (aliased) buffer the output type names.
+                ops_ = _operands(ins)
+                if len(ops_) >= 2:
+                    b_ = _shape_bytes(symtab.get(ops_[1], ""))
+                    if b_ >= VMEM_RESIDENT_BYTES:
+                        c.hbm_bytes += 2 * b_
+                continue
+            out_b = _shape_bytes(ins.type_str)
+            if out_b >= VMEM_RESIDENT_BYTES:
+                c.hbm_bytes += out_b  # one write per materialized buffer
+            if op in _READ_CHARGED_OPS or any(
+                    op.startswith(k) for k in _COLLECTIVES):
+                c.hbm_bytes += sum(
+                    b_ for o in _operands(ins)
+                    if (b_ := _shape_bytes(symtab.get(o, "")))
+                    >= VMEM_RESIDENT_BYTES)
+        cache[key] = c
+        return c
+
+    # Fusion computations are only counted via their callers; walk from entry.
+    return walk(entry)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(counts: Counts, n_devices: int,
+                   model_flops_global: float | None = None) -> dict:
+    """All terms are per-chip per-step seconds.
+
+    ``counts`` comes from the SPMD-partitioned module, i.e. already
+    per-device quantities.
+    """
+    compute_s = counts.flops / PEAK_FLOPS
+    memory_s = counts.hbm_bytes / HBM_BW
+    collective_s = counts.ici_bytes / ICI_BW
+    bound = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])
+    out = {
+        "flops_per_device": counts.flops,
+        "hbm_bytes_per_device": counts.hbm_bytes,
+        "ici_bytes_per_device": counts.ici_bytes,
+        "coll_by_kind": counts.coll_by_kind,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bound": bound[0],
+        "step_time_lower_bound_s": max(compute_s, memory_s, collective_s),
+    }
+    if model_flops_global:
+        hlo_global = counts.flops * n_devices
+        out["model_flops_global"] = model_flops_global
+        out["useful_flops_ratio"] = (model_flops_global / hlo_global
+                                     if hlo_global else 0.0)
+        # roofline fraction: useful work vs what the chips could do in the
+        # bottleneck-bound step time
+        t = out["step_time_lower_bound_s"]
+        out["roofline_fraction"] = (
+            model_flops_global / (n_devices * PEAK_FLOPS * t) if t else 0.0)
+    return out

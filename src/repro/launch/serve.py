@@ -1,0 +1,58 @@
+"""Batched serving driver: prefill + decode loop with slot management."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import load_config
+from repro.models import init_model
+from repro.serve import ServeSession, SlotManager
+
+import jax
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 16,
+          max_new: int = 32, smoke: bool = True, temperature: float = 0.0):
+    cfg = load_config(arch, smoke=smoke)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(batch, prompt_len)).astype(np.int32)
+    if cfg.input_mode == "codebooks":
+        prompts = rng.integers(0, cfg.vocab_size,
+                               size=(batch, prompt_len, cfg.n_codebooks)
+                               ).astype(np.int32)
+    session = ServeSession(cfg=cfg, params=params, temperature=temperature)
+    slots = SlotManager(n_slots=batch, max_len=prompt_len + max_new)
+    for rid in range(batch):
+        slots.admit(rid)
+    t0 = time.time()
+    if cfg.input_mode == "tokens":
+        out = session.generate(prompts, max_new)
+    else:
+        raise SystemExit(f"serving loop demo targets token archs; "
+                         f"{arch} uses {cfg.input_mode} inputs")
+    dt = time.time() - t0
+    tok_s = batch * max_new / dt
+    print(f"[serve] {arch}: {batch}×{max_new} tokens in {dt:.2f}s "
+          f"({tok_s:.1f} tok/s), slot utilization={slots.utilization:.2f}")
+    print(f"[serve] sample output ids: {out[0][:16].tolist()}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+          max_new=args.max_new, temperature=args.temperature)
+
+
+if __name__ == "__main__":
+    main()

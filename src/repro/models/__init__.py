@@ -1,0 +1,4 @@
+"""LM model substrate for the assigned architectures."""
+from .common import ShardCtx
+from .transformer import (apply_decode, apply_prefill, apply_train,
+                          cache_axes_tree, init_cache, init_model, model_axes)

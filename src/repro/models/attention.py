@@ -1,0 +1,277 @@
+"""Attention mixers: GQA (w/ sliding window, RoPE/M-RoPE, QKV bias) and MLA.
+
+Head-count padding for TP divisibility (DESIGN.md §4):
+  * query heads are padded up to a multiple of TP with zero-initialized
+    wq columns / wo rows (exact at init; the padded heads are real capacity
+    thereafter — recorded in the MODEL_FLOPS ratio);
+  * KV heads below the TP degree are *replicated* (vLLM-style): replicas are
+    initialized equal and stay equal under synchronized updates — exact GQA
+    math at every step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ShardCtx, apply_norm, apply_rope, blockwise_attention,
+                     decode_attention, dense_init, init_norm, norm_axes)
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, block) -> dict:
+    d, hd = cfg.d_model, cfg.eff_head_dim
+    h, kv = cfg.eff_n_heads, cfg.eff_n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    wq = dense_init(ks[0], (d, cfg.n_heads, hd), d, dt)
+    if h > cfg.n_heads:  # zero-init padded query heads (exact at init)
+        wq = jnp.concatenate(
+            [wq, jnp.zeros((d, h - cfg.n_heads, hd), dt)], axis=1)
+    n_kv_orig = min(cfg.n_kv_heads, kv)
+    wk = dense_init(ks[1], (d, n_kv_orig, hd), d, dt)
+    wv = dense_init(ks[2], (d, n_kv_orig, hd), d, dt)
+    if kv > n_kv_orig:  # replicate KV heads to the TP degree (exact math)
+        reps = kv // n_kv_orig
+        wk = jnp.repeat(wk, reps, axis=1)
+        wv = jnp.repeat(wv, reps, axis=1)
+    wo = dense_init(ks[3], (cfg.n_heads, hd, d), cfg.n_heads * hd, dt)
+    if h > cfg.n_heads:
+        wo = jnp.concatenate(
+            [wo, jnp.zeros((h - cfg.n_heads, hd, d), dt)], axis=0)
+    p = {"wq": wq.reshape(d, h * hd), "wk": wk.reshape(d, kv * hd),
+         "wv": wv.reshape(d, kv * hd), "wo": wo.reshape(h * hd, d),
+         "norm": init_norm(cfg)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def attn_axes(cfg, block) -> dict:
+    a = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+         "wv": ("embed", "kv_heads"), "wo": ("heads", "embed"),
+         "norm": norm_axes(cfg)}
+    if cfg.qkv_bias:
+        a.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    return a
+
+
+def _qkv(p, x, cfg):
+    b, s, _ = x.shape
+    hd = cfg.eff_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.eff_n_heads, hd)
+    k = k.reshape(b, s, cfg.eff_n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.eff_n_kv_heads, hd)
+    return q, k, v
+
+
+def _rope(cfg, t, positions):
+    if cfg.pos == "rope":
+        return apply_rope(t, positions, cfg.rope_theta)
+    if cfg.pos == "mrope":
+        return apply_rope(t, positions, cfg.rope_theta,
+                          mrope_sections=cfg.mrope_sections)
+    return t  # sinusoidal/none: positions handled at the embedding
+
+
+def apply_attn(p, x, cfg, block, ctx: ShardCtx, positions) -> jnp.ndarray:
+    """Full-sequence (train/prefill) GQA with blockwise flash attention."""
+    h = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    q = ctx.shard(q, "batch", None, "heads_act", None)
+    k = ctx.shard(k, "batch", None, "kv_heads_act", None)
+    o = blockwise_attention(q, k, v, causal=True, window=block.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = o.reshape(*x.shape[:2], -1)
+    from .common import row_parallel_matmul
+    y = row_parallel_matmul(o, p["wo"], ctx, "heads_act")
+    return ctx.shard(y, "batch", "seq_act", None)
+
+
+def init_attn_cache(cfg, block, batch: int, max_len: int) -> dict:
+    """Windowed archs keep a rolling cache of the window size only."""
+    w = min(block.window or max_len, max_len)
+    kv, hd = cfg.eff_n_kv_heads, cfg.eff_head_dim
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), cfg.act_dtype),
+        "v": jnp.zeros((batch, w, kv, hd), cfg.act_dtype),
+        "pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def cache_axes(cfg, block) -> dict:
+    return {"k": ("batch", None, "kv_heads_act", None),
+            "v": ("batch", None, "kv_heads_act", None),
+            "pos": (None,)}
+
+
+def apply_attn_decode(p, x, cache, cfg, block, ctx: ShardCtx, pos) -> tuple:
+    """One-token decode: x (B, 1, D); pos scalar int32 (current position)."""
+    h = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)  # (B,1,H,hd)
+    pvec = jnp.broadcast_to(pos, (x.shape[0], 1))
+    if cfg.pos == "mrope":
+        pvec = jnp.broadcast_to(pos, (3, x.shape[0], 1))
+    q = _rope(cfg, q, pvec)
+    k = _rope(cfg, k, pvec)
+    w = cache["k"].shape[1]
+    slot = pos % w  # rolling for windowed caches; plain append otherwise
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    positions = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(pos, (1,)).astype(jnp.int32), slot, axis=0)
+    o = decode_attention(q[:, 0], k_cache, v_cache, positions, pos,
+                         window=block.window)
+    y = o.reshape(x.shape[0], 1, -1) @ p["wo"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    return y, {"k": k_cache, "v": v_cache, "pos": positions}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank latent KV, decoupled RoPE, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, block) -> dict:
+    d, h = cfg.d_model, cfg.eff_n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    qn, qp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "norm": init_norm(cfg),
+        "wq_a": dense_init(ks[0], (d, qr), d, dt),
+        "q_norm": {"scale": jnp.ones((qr,), jnp.float32)},
+        "wq_b": dense_init(ks[1], (qr, h * (qn + qp)), qr, dt),
+        "wkv_a": dense_init(ks[2], (d, kvr + qp), d, dt),
+        "kv_norm": {"scale": jnp.ones((kvr,), jnp.float32)},
+        "wk_b": dense_init(ks[3], (kvr, h * qn), kvr, dt),
+        "wv_b": dense_init(ks[4], (kvr, h * vd), kvr, dt),
+        "wo": dense_init(ks[5], (h * vd, d), h * vd, dt),
+    }
+
+
+def mla_axes(cfg, block) -> dict:
+    return {
+        "norm": norm_axes(cfg),
+        "wq_a": ("embed", "lora"),
+        "q_norm": {"scale": ("lora",)},
+        "wq_b": ("lora", "heads"),
+        "wkv_a": ("embed", "lora"),
+        "kv_norm": {"scale": ("lora",)},
+        "wk_b": ("lora", "heads"),
+        "wv_b": ("lora", "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            * scale).astype(x.dtype)
+
+
+def _mla_qkv(p, h, cfg, positions):
+    """Non-absorbed path (train/prefill): materialize per-head k, v."""
+    b, s, _ = h.shape
+    nh = cfg.eff_n_heads
+    qn, qp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = _rms(h @ p["wq_a"], p["q_norm"]["scale"]) @ p["wq_b"]
+    q = q.reshape(b, s, nh, qn + qp)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = h @ p["wkv_a"]
+    ckv = _rms(kv[..., : cfg.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)  # (B,S,1,qp) shared across heads
+    k_nope = (ckv @ p["wk_b"]).reshape(b, s, nh, qn)
+    v = (ckv @ p["wv_b"]).reshape(b, s, nh, vd)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, nh, qp))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    return q_full, k, v, ckv, k_rope
+
+
+def apply_mla(p, x, cfg, block, ctx: ShardCtx, positions) -> jnp.ndarray:
+    h = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v, _, _ = _mla_qkv(p, h, cfg, positions)
+    q = ctx.shard(q, "batch", None, "heads_act", None)
+    k = ctx.shard(k, "batch", None, "heads_act", None)
+    # v head dim (vd) != qk dim: blockwise_attention handles d_k == d_v only;
+    # pad v to qk dim if needed, slice after (vd=128, qk=192 for DSv3).
+    dk, dv = q.shape[-1], v.shape[-1]
+    if dv < dk:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dk - dv)))
+    o = blockwise_attention(q, k, v, causal=True,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = o[..., :dv].reshape(*x.shape[:2], -1)
+    y = o @ p["wo"]
+    return ctx.shard(y, "batch", "seq_act", None)
+
+
+def init_mla_cache(cfg, block, batch: int, max_len: int) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.act_dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), cfg.act_dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_cache_axes(cfg, block) -> dict:
+    return {"ckv": ("batch", None, None), "k_rope": ("batch", None, None),
+            "pos": (None,)}
+
+
+def apply_mla_decode(p, x, cache, cfg, block, ctx: ShardCtx, pos) -> tuple:
+    """Absorbed decode: scores/values computed in the latent space —
+    the KV cache holds only (ckv, k_rope) per token (the MLA innovation)."""
+    b = x.shape[0]
+    nh = cfg.eff_n_heads
+    qn, qp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    h = apply_norm(p["norm"], x, cfg.norm)
+    pvec = jnp.broadcast_to(pos, (b, 1))
+    q = _rms(h @ p["wq_a"], p["q_norm"]["scale"]) @ p["wq_b"]
+    q = q.reshape(b, 1, nh, qn + qp)
+    q_nope, q_rope = q[..., :qn], apply_rope(q[..., qn:], pvec, cfg.rope_theta)
+
+    kv = h @ p["wkv_a"]
+    ckv_new = _rms(kv[..., :kvr], p["kv_norm"]["scale"])  # (B,1,kvr)
+    k_rope_new = apply_rope(kv[..., kvr:][:, :, None, :], pvec,
+                            cfg.rope_theta)[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new, pos, 1)
+    positions = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(pos, (1,)).astype(jnp.int32), pos, 0)
+
+    # Absorb wk_b into the query: q_abs[b,h,r] = Σ_n q_nope[b,h,n] wk_b[r,(h,n)]
+    wk_b = p["wk_b"].reshape(kvr, nh, qn)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = (qn + qp) ** -0.5
+    s_nope = jnp.einsum("bhr,bwr->bhw", q_abs, ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhp,bwp->bhw", q_rope[:, 0].astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale
+    valid = (positions >= 0) & (positions <= pos)
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhw,bwr->bhr", pr, ckv.astype(jnp.float32))
+    wv_b = p["wv_b"].reshape(kvr, nh, vd)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wv_b.astype(jnp.float32))
+    y = o.reshape(b, 1, nh * vd).astype(x.dtype) @ p["wo"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    return y, {"ckv": ckv, "k_rope": k_rope, "pos": positions}

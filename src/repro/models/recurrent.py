@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma) — Griffin-style.
+
+Block: norm → {branch A: linear → GELU; branch B: linear → causal conv1d(w=4)
+→ RG-LRU} → A ⊙ B → linear out.
+
+RG-LRU recurrence (De et al., 2024):
+    r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+Train path uses ``jax.lax.associative_scan`` over time (the recurrence is an
+affine scan); decode carries (h, conv state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, apply_norm, dense_init, init_norm, norm_axes
+
+_C = 8.0  # RG-LRU temperature constant
+
+
+def init_rglru(key, cfg, block) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    dt = cfg.param_dtype
+    return {
+        "norm": init_norm(cfg),
+        "w_x": dense_init(ks[0], (d, w), d, dt),  # branch B in-proj
+        "w_y": dense_init(ks[1], (d, w), d, dt),  # branch A (gate) in-proj
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_rec_r": dense_init(ks[3], (w, w), w, dt),
+        "w_rec_i": dense_init(ks[4], (w, w), w, dt),
+        "lam": jnp.log(jnp.expm1(  # softplus^-1 so a^c in [0.9, 0.999]
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), w, dt),
+    }
+
+
+def rglru_axes(cfg, block) -> dict:
+    return {
+        "norm": norm_axes(cfg),
+        "w_x": ("embed", "mlp"), "w_y": ("embed", "mlp"),
+        "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+        # Dedicated logical axes: default rules map lru_in->'model' (row-
+        # parallel gates => all-reduce); the hillclimb flips to lru_out
+        # (column-parallel => all-gather of u, 4x cheaper in bf16).
+        "w_rec_r": ("lru_in", "lru_out"), "w_rec_i": ("lru_in", "lru_out"),
+        "lam": ("mlp",),
+        "w_out": ("mlp", "embed"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv, width W.  x: (B,S,D); state: (B,W-1,D)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_rec_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_rec_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (…, W) in log space
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def apply_rglru(p, x, cfg, block, ctx: ShardCtx, positions) -> jnp.ndarray:
+    del positions
+    h = apply_norm(p["norm"], x, cfg.norm)
+    gate = jax.nn.gelu((h @ p["w_y"]).astype(jnp.float32))
+    u = h @ p["w_x"]
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gated = _rglru_gates(p, u)
+
+    # h_t = a_t h_{t-1} + b_t — an affine scan: associative combine.
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (hs * gate).astype(x.dtype) @ p["w_out"]
+    return ctx.shard(y, "batch", "seq_act", None)
+
+
+def init_rglru_cache(cfg, block, batch: int, max_len: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.act_dtype),
+    }
+
+
+def rglru_cache_axes(cfg, block) -> dict:
+    return {"h": ("batch", "mlp_act"), "conv": ("batch", None, "mlp_act")}
+
+
+def apply_rglru_decode(p, x, cache, cfg, block, ctx: ShardCtx, pos) -> tuple:
+    del pos
+    h = apply_norm(p["norm"], x, cfg.norm)
+    gate = jax.nn.gelu((h @ p["w_y"]).astype(jnp.float32))  # (B,1,W)
+    u = h @ p["w_x"]
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], cache["conv"])
+    a, gated = _rglru_gates(p, u)  # (B,1,W)
+    h_new = a[:, 0] * cache["h"] + gated[:, 0]
+    y = (h_new[:, None, :] * gate).astype(x.dtype) @ p["w_out"]
+    return ctx.shard(y, "batch", "seq_act", None), {"h": h_new, "conv": conv_state}

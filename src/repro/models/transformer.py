@@ -1,0 +1,506 @@
+"""Unified causal LM assembly for all assigned architectures.
+
+A model is a sequence of *segments*, each a homogeneous stack of blocks
+scanned with ``lax.scan`` (stacked params) — heterogeneous architectures
+(rgemma's (rec, rec, attn) pattern, xLSTM's 7:1 mLSTM:sLSTM, DeepSeek-V3's
+dense→MoE split) are expressed as multiple segments.  Three entry modes:
+
+  * ``apply_train``   — full-sequence logits (B, S, V_eff) + MoE aux loss,
+  * ``apply_prefill`` — last-token logits + a filled decode cache,
+  * ``apply_decode``  — one-token step against the cache.
+
+Vocab is padded to ``cfg.eff_vocab`` for TP divisibility; padded logits are
+masked with -1e30 so they never receive probability mass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import recurrent as rec_mod
+from . import xlstm as xlstm_mod
+from .common import ShardCtx, apply_norm, embed_init, init_norm, norm_axes, \
+    sinusoidal_positions, dense_init
+
+# ---------------------------------------------------------------------------
+# Mixer dispatch
+# ---------------------------------------------------------------------------
+
+_MIXERS = {
+    "attn": (attn_mod.init_attn, attn_mod.attn_axes, attn_mod.apply_attn,
+             attn_mod.apply_attn_decode, attn_mod.init_attn_cache,
+             attn_mod.cache_axes),
+    "mla": (attn_mod.init_mla, attn_mod.mla_axes, attn_mod.apply_mla,
+            attn_mod.apply_mla_decode, attn_mod.init_mla_cache,
+            attn_mod.mla_cache_axes),
+    "rglru": (rec_mod.init_rglru, rec_mod.rglru_axes, rec_mod.apply_rglru,
+              rec_mod.apply_rglru_decode, rec_mod.init_rglru_cache,
+              rec_mod.rglru_cache_axes),
+    "mlstm": (xlstm_mod.init_mlstm, xlstm_mod.mlstm_axes,
+              xlstm_mod.apply_mlstm, xlstm_mod.apply_mlstm_decode,
+              xlstm_mod.init_mlstm_cache, xlstm_mod.mlstm_cache_axes),
+    "slstm": (xlstm_mod.init_slstm, xlstm_mod.slstm_axes,
+              xlstm_mod.apply_slstm, xlstm_mod.apply_slstm_decode,
+              xlstm_mod.init_slstm_cache, xlstm_mod.slstm_cache_axes),
+}
+
+
+def _mixer(block):
+    return _MIXERS[block.mixer]
+
+
+# ---------------------------------------------------------------------------
+# Block = mixer + (optional) mlp/moe, pre-norm residual
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, block) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"mixer": _mixer(block)[0](k1, cfg, block)}
+    if block.mlp == "moe":
+        p["moe"] = ffn_mod.init_moe(k2, cfg, block)
+    elif block.mlp != "none":
+        p["mlp"] = ffn_mod.init_mlp(k2, cfg, block)
+    return p
+
+
+def block_axes(cfg, block) -> dict:
+    a = {"mixer": _mixer(block)[1](cfg, block)}
+    if block.mlp == "moe":
+        a["moe"] = ffn_mod.moe_axes(cfg, block)
+    elif block.mlp != "none":
+        a["mlp"] = ffn_mod.mlp_axes(cfg, block)
+    return a
+
+
+def apply_block(bp, x, cfg, block, ctx, positions):
+    """Train-mode block.  Returns (x, aux)."""
+    x = x + _mixer(block)[2](bp["mixer"], x, cfg, block, ctx, positions)
+    aux = jnp.zeros((), jnp.float32)
+    if block.mlp == "moe":
+        y, aux = ffn_mod.apply_moe(bp["moe"], x, cfg, block, ctx)
+        x = x + y
+    elif block.mlp != "none":
+        x = x + ffn_mod.apply_mlp(bp["mlp"], x, cfg, block, ctx)
+    return x, aux
+
+
+def apply_block_decode(bp, x, cache, cfg, block, ctx, pos):
+    y, new_cache = _mixer(block)[3](bp["mixer"], x, cache, cfg, block, ctx, pos)
+    x = x + y
+    if block.mlp == "moe":
+        y, _ = ffn_mod.apply_moe(bp["moe"], x, cfg, block, ctx)
+        x = x + y
+    elif block.mlp != "none":
+        x = x + ffn_mod.apply_mlp(bp["mlp"], x, cfg, block, ctx)
+    return x, new_cache
+
+
+def init_block_cache(cfg, block, batch: int, max_len: int) -> dict:
+    return _mixer(block)[4](cfg, block, batch, max_len)
+
+
+def block_cache_axes(cfg, block) -> dict:
+    return _mixer(block)[5](cfg, block)
+
+
+# ---------------------------------------------------------------------------
+# Super-block = ordered tuple of sub-blocks (heterogeneous patterns)
+# ---------------------------------------------------------------------------
+
+
+def init_superblock(key, cfg, blocks) -> dict:
+    ks = jax.random.split(key, len(blocks))
+    return {f"sub{i}": init_block(ks[i], cfg, bc)
+            for i, bc in enumerate(blocks)}
+
+
+def superblock_axes(cfg, blocks) -> dict:
+    return {f"sub{i}": block_axes(cfg, bc) for i, bc in enumerate(blocks)}
+
+
+def apply_superblock(sp, x, cfg, blocks, ctx, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i, bc in enumerate(blocks):
+        x, a = apply_block(sp[f"sub{i}"], x, cfg, bc, ctx, positions)
+        aux = aux + a
+    return x, aux
+
+
+def apply_superblock_decode(sp, x, cache, cfg, blocks, ctx, pos):
+    new_cache = {}
+    for i, bc in enumerate(blocks):
+        x, nc = apply_block_decode(sp[f"sub{i}"], x, cache[f"sub{i}"], cfg,
+                                   bc, ctx, pos)
+        new_cache[f"sub{i}"] = nc
+    return x, new_cache
+
+
+def init_superblock_cache(cfg, blocks, batch, max_len) -> dict:
+    return {f"sub{i}": init_block_cache(cfg, bc, batch, max_len)
+            for i, bc in enumerate(blocks)}
+
+
+def superblock_cache_axes(cfg, blocks) -> dict:
+    return {f"sub{i}": block_cache_axes(cfg, bc)
+            for i, bc in enumerate(blocks)}
+
+
+def apply_superblock_prefill(sp, x, cfg, blocks, ctx, positions, seq_len,
+                             cache_len):
+    cache = {}
+    for i, bc in enumerate(blocks):
+        x, c = _prefill_block(sp[f"sub{i}"], x, cfg, bc, ctx, positions,
+                              seq_len, cache_len)
+        cache[f"sub{i}"] = c
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg) -> dict:
+    ks = jax.random.split(key, 3 + len(cfg.eff_segments))
+    p: dict = {"final_norm": init_norm(cfg)}
+    if cfg.input_mode == "tokens":
+        p["embed"] = embed_init(ks[0], (cfg.eff_vocab, cfg.d_model),
+                                cfg.param_dtype)
+    elif cfg.input_mode == "codebooks":
+        p["embed"] = embed_init(
+            ks[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+            cfg.param_dtype)
+    if not cfg.tie_embeddings or cfg.input_mode == "embeddings":
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.eff_vocab),
+                                  cfg.d_model, cfg.param_dtype)
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        seg_keys = jax.random.split(ks[3 + si], count)
+        p[f"seg{si}"] = jax.vmap(
+            lambda k: init_superblock(k, cfg, blocks))(seg_keys)
+    return p
+
+
+def model_axes(cfg) -> dict:
+    a: dict = {"final_norm": norm_axes(cfg)}
+    if cfg.input_mode == "tokens":
+        a["embed"] = ("vocab", "embed")
+    elif cfg.input_mode == "codebooks":
+        a["embed"] = (None, "vocab", "embed")
+    if not cfg.tie_embeddings or cfg.input_mode == "embeddings":
+        a["lm_head"] = ("embed", "vocab")
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        a[f"seg{si}"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, superblock_axes(cfg, blocks),
+            is_leaf=lambda x: isinstance(x, tuple))
+    return a
+
+
+def _embed(p, batch, cfg, ctx, pos0: jnp.ndarray | int = 0):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(cfg.act_dtype)
+    elif cfg.input_mode == "codebooks":
+        toks = batch["tokens"]  # (B, S, n_codebooks)
+        x = jnp.zeros(toks.shape[:2] + (cfg.d_model,), cfg.act_dtype)
+        for cb in range(cfg.n_codebooks):
+            x = x + jnp.take(p["embed"][cb], toks[..., cb], axis=0)
+    else:
+        x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    b, s = x.shape[:2]
+    if cfg.pos == "mrope":
+        positions = batch.get("positions")
+        if positions is None:
+            base = pos0 + jnp.arange(s)[None]
+            positions = jnp.broadcast_to(base, (3, b, s))
+    else:
+        positions = jnp.broadcast_to(pos0 + jnp.arange(s)[None], (b, s))
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_positions(
+            positions if positions.ndim == 2 else positions[0],
+            cfg.d_model).astype(x.dtype)
+    x = ctx.shard(x, "batch", "seq_act", None)
+    return x, positions
+
+
+def _lm_head(p, x, cfg, ctx):
+    w = p["lm_head"] if "lm_head" in p else p["embed"].T
+    logits = x @ w
+    if cfg.eff_vocab != cfg.vocab_size:
+        mask = jnp.where(jnp.arange(cfg.eff_vocab) < cfg.vocab_size, 0.0,
+                         -1e30).astype(jnp.float32)
+        logits = logits.astype(jnp.float32) + mask
+    return ctx.shard(logits, "batch", None, "vocab_act")
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "block": save nothing
+
+
+# ---------------------------------------------------------------------------
+# Entry modes
+# ---------------------------------------------------------------------------
+
+
+def apply_backbone(p, batch, cfg, ctx: ShardCtx):
+    """Full-sequence forward up to the final norm (no LM head).
+    Returns (x (B, S, D), aux_loss)."""
+    x, positions = _embed(p, batch, cfg, ctx)
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        def block_body(lp, x, _blocks=blocks):
+            # Residual-stream constraint: under sequence parallelism
+            # (act rule seq_act='model') GSPMD gathers/scatters around the
+            # per-block compute; default (None) is a no-op.
+            x = ctx.shard(x, "batch", "seq_act", None)
+            return apply_superblock(lp, x, cfg, _blocks, ctx, positions)
+
+        body = _remat(block_body, cfg)
+
+        if cfg.scan_layers and count > 1:
+            def scan_fn(carry, lp):
+                x, aux = carry
+                x, a = body(lp, x)
+                return (x, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                scan_fn, (x, aux_total), p[f"seg{si}"])
+        else:
+            for li in range(count):
+                lp = jax.tree.map(lambda t: t[li], p[f"seg{si}"])
+                x, a = body(lp, x)
+                aux_total = aux_total + a
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    return x, aux_total
+
+
+def apply_train(p, batch, cfg, ctx: ShardCtx):
+    """Full-sequence forward.  Returns (logits_f32, aux_loss)."""
+    x, aux_total = apply_backbone(p, batch, cfg, ctx)
+    return _lm_head(p, x, cfg, ctx), aux_total
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    cache = {}
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        one = init_superblock_cache(cfg, blocks, batch, max_len)
+        cache[f"seg{si}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (count,) + t.shape)
+            .astype(t.dtype), one)
+    return cache
+
+
+def cache_axes_tree(cfg) -> dict:
+    return {f"seg{si}": jax.tree.map(
+        lambda ax: ("layers",) + ax, superblock_cache_axes(cfg, blocks),
+        is_leaf=lambda x: isinstance(x, tuple))
+        for si, (blocks, count) in enumerate(cfg.eff_segments)}
+
+
+def apply_decode(p, batch, cache, cfg, ctx: ShardCtx, pos):
+    """One-token step.  batch holds the new token; pos is its position.
+    Returns (logits (B, V_eff), new_cache)."""
+    x, _ = _embed(p, batch, cfg, ctx, pos0=pos)
+    new_cache = {}
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        seg_cache = cache[f"seg{si}"]
+
+        def step(x, layer_in, _blocks=blocks):
+            lp, lc = layer_in
+            x, nc = apply_superblock_decode(lp, x, lc, cfg, _blocks, ctx, pos)
+            return x, nc
+
+        if cfg.scan_layers and count > 1:
+            x, nc = jax.lax.scan(step, x, (p[f"seg{si}"], seg_cache))
+        else:
+            ncs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda t: t[li], p[f"seg{si}"])
+                lc = jax.tree.map(lambda t: t[li], seg_cache)
+                x, c1 = apply_superblock_decode(lp, x, lc, cfg, blocks, ctx,
+                                                pos)
+                ncs.append(c1)
+            nc = jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+        new_cache[f"seg{si}"] = nc
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    logits = _lm_head(p, x[:, -1:, :], cfg, ctx)[:, 0]
+    return logits, new_cache
+
+
+def apply_prefill(p, batch, cfg, ctx: ShardCtx, cache_len: int | None = None):
+    """Full-sequence forward that also fills the decode cache.
+
+    ``cache_len`` sizes the returned KV caches (≥ seq_len leaves headroom
+    for subsequent decode steps; default = seq_len, the dry-run cell shape).
+    Returns (last_token_logits (B, V_eff), cache).
+    """
+    x, positions = _embed(p, batch, cfg, ctx)
+    s = x.shape[1]
+    cache_len = cache_len or s
+    cache = {}
+    for si, (blocks, count) in enumerate(cfg.eff_segments):
+        def body(lp, x, _blocks=blocks):
+            return apply_superblock_prefill(lp, x, cfg, _blocks, ctx,
+                                            positions, s, cache_len)
+
+        if cfg.scan_layers and count > 1:
+            def scan_fn(x, lp):
+                x, c = body(lp, x)
+                return x, c
+            x, seg_cache = jax.lax.scan(scan_fn, x, p[f"seg{si}"])
+        else:
+            cs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda t: t[li], p[f"seg{si}"])
+                x, c1 = body(lp, x)
+                cs.append(c1)
+            seg_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *cs)
+        cache[f"seg{si}"] = seg_cache
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    logits = _lm_head(p, x[:, -1:, :], cfg, ctx)[:, 0]
+    return logits, cache
+
+
+def _prefill_block(bp, x, cfg, block, ctx, positions, seq_len, cache_len=None):
+    y, cache_entry = _PREFILL[block.mixer](
+        bp["mixer"], x, cfg, block, ctx, positions, seq_len,
+        cache_len or seq_len)
+    x = x + y
+    if block.mlp == "moe":
+        y, _ = ffn_mod.apply_moe(bp["moe"], x, cfg, block, ctx)
+        x = x + y
+    elif block.mlp != "none":
+        x = x + ffn_mod.apply_mlp(bp["mlp"], x, cfg, block, ctx)
+    return x, cache_entry
+
+
+# -- per-mixer prefill hooks (forward + cache extraction) -------------------
+
+
+def _prefill_attn(p, x, cfg, block, ctx, positions, seq_len, cache_len):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v = attn_mod._qkv(p, h, cfg)
+    q = attn_mod._rope(cfg, q, positions)
+    k = attn_mod._rope(cfg, k, positions)
+    q = ctx.shard(q, "batch", None, "heads_act", None)
+    k = ctx.shard(k, "batch", None, "kv_heads_act", None)
+    from .common import blockwise_attention
+    o = blockwise_attention(q, k, v, causal=True, window=block.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    w = min(block.window or cache_len, cache_len)
+    if w <= seq_len:  # keep the last w positions, decode-compatible slots
+        slots_pos = _rolling_positions(seq_len, w)
+        cache = {
+            "k": jnp.take(k, slots_pos, axis=1),
+            "v": jnp.take(v, slots_pos, axis=1),
+            "pos": slots_pos.astype(jnp.int32),
+        }
+    else:  # headroom: slots [seq_len, w) stay empty
+        pad = [(0, 0), (0, w - seq_len), (0, 0), (0, 0)]
+        cache = {
+            "k": jnp.pad(k, pad),
+            "v": jnp.pad(v, pad),
+            "pos": jnp.concatenate([
+                jnp.arange(seq_len, dtype=jnp.int32),
+                jnp.full((w - seq_len,), -1, jnp.int32)]),
+        }
+    return y, cache
+
+
+def _rolling_positions(seq_len: int, w: int) -> jnp.ndarray:
+    """positions p ∈ [S-w, S) placed at slot p % w (decode-compatible)."""
+    base = seq_len - w
+    offs = (jnp.arange(w) - base) % w
+    return base + offs
+
+
+def _prefill_mla(p, x, cfg, block, ctx, positions, seq_len, cache_len):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    q, k, v, ckv, k_rope = attn_mod._mla_qkv(p, h, cfg, positions)
+    q = ctx.shard(q, "batch", None, "heads_act", None)
+    from .common import blockwise_attention
+    dk, dv = q.shape[-1], v.shape[-1]
+    if dv < dk:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dk - dv)))
+    o = blockwise_attention(q, k, v, causal=True,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = o[..., :dv].reshape(*x.shape[:2], -1) @ p["wo"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    extra = max(cache_len - seq_len, 0)
+    pad2 = [(0, 0), (0, extra), (0, 0)]
+    cache = {"ckv": jnp.pad(ckv, pad2),
+             "k_rope": jnp.pad(k_rope[:, :, 0, :], pad2),
+             "pos": jnp.concatenate([
+                 jnp.arange(seq_len, dtype=jnp.int32),
+                 jnp.full((extra,), -1, jnp.int32)])}
+    return y, cache
+
+
+def _prefill_rglru(p, x, cfg, block, ctx, positions, seq_len, cache_len):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    gate = jax.nn.gelu((h @ p["w_y"]).astype(jnp.float32))
+    u = h @ p["w_x"]
+    u, conv_state = rec_mod._causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gated = rec_mod._rglru_gates(p, u)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (hs * gate).astype(x.dtype) @ p["w_out"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    cache = {"h": hs[:, -1], "conv": conv_state}
+    return y, cache
+
+
+def _prefill_mlstm(p, x, cfg, block, ctx, positions, seq_len, cache_len):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    u = h @ p["w_up"]
+    gate = jax.nn.silu(h @ p["w_gate"])
+    q, k, v, i_t, f_t = xlstm_mod._mlstm_heads(p, u, cfg)
+    y, carry = xlstm_mod._mlstm_chunk_scan_with_state(
+        q, k, v, i_t, f_t, min(cfg.mlstm_chunk, x.shape[1]))
+    y = (y.astype(x.dtype) * gate) @ p["w_down"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    C, n, m = carry
+    return y, {"C": C, "n": n, "m": m}
+
+
+def _prefill_slstm(p, x, cfg, block, ctx, positions, seq_len, cache_len):
+    b, s, d = x.shape
+    nh = cfg.n_lstm_heads
+    dh = d // nh
+    h0 = apply_norm(p["norm"], x, cfg.norm)
+    xw = (h0 @ p["w_in"]).astype(jnp.float32)
+
+    def step(carry, xt):
+        return xlstm_mod._slstm_step(p, carry, xt, cfg)
+
+    init = (jnp.zeros((b, nh, dh), jnp.float32),
+            jnp.zeros((b, nh, dh), jnp.float32),
+            jnp.full((b, nh, dh), -1e30, jnp.float32),
+            jnp.zeros((b, nh, dh), jnp.float32))
+    carry, hs = jax.lax.scan(step, init, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype) @ p["w_out"]
+    y = ctx.shard(y, "batch", "seq_act", None)
+    return y, dict(zip(("c", "n", "m", "h"), carry))
+
+
+_PREFILL = {
+    "attn": _prefill_attn,
+    "mla": _prefill_mla,
+    "rglru": _prefill_rglru,
+    "mlstm": _prefill_mlstm,
+    "slstm": _prefill_slstm,
+}

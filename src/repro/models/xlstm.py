@@ -1,0 +1,279 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan with block-diagonal recurrent weights).
+
+mLSTM recurrence (Beck et al., 2024), stabilized in log space:
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_tᵀ q_t|, exp(-m_t))
+with f_t = σ(f̃_t) (log-sigmoid cumulative decay), i_t = exp(ĩ_t), and running
+stabilizer m.  The chunkwise train path processes chunks of ``cfg.mlstm_chunk``
+tokens: quadratic (masked) attention within a chunk + carried (C, n, m) state
+across chunks — MXU-friendly, O(S·chunk) memory, exact w.r.t. the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, apply_norm, dense_init, init_norm, norm_axes
+
+_UP = 2  # mLSTM pre-up-projection factor (xLSTM paper)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, block) -> dict:
+    d = cfg.d_model
+    du = _UP * d
+    nh = cfg.n_lstm_heads
+    dh = du // nh
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    return {
+        "norm": init_norm(cfg),
+        "w_up": dense_init(ks[0], (d, du), d, dt),
+        "w_gate": dense_init(ks[1], (d, du), d, dt),
+        "w_q": dense_init(ks[2], (du, du), du, dt),
+        "w_k": dense_init(ks[3], (du, du), du, dt),
+        "w_v": dense_init(ks[4], (du, du), du, dt),
+        "w_if": dense_init(ks[5], (du, 2 * nh), du, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)),  # input-gate bias 0
+                                 jnp.linspace(3.0, 6.0, nh)]),  # forget-gate
+        "w_down": dense_init(ks[6], (du, d), du, dt),
+    }
+
+
+def mlstm_axes(cfg, block) -> dict:
+    return {
+        "norm": norm_axes(cfg),
+        "w_up": ("embed", "mlp"), "w_gate": ("embed", "mlp"),
+        "w_q": ("mlp", None), "w_k": ("mlp", None), "w_v": ("mlp", None),
+        "w_if": ("mlp", None), "b_if": (None,),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def _mlstm_heads(p, u, cfg):
+    b, s, du = u.shape
+    nh = cfg.n_lstm_heads
+    dh = du // nh
+    q = (u @ p["w_q"]).reshape(b, s, nh, dh) * dh ** -0.5
+    k = (u @ p["w_k"]).reshape(b, s, nh, dh) * dh ** -0.5
+    v = (u @ p["w_v"]).reshape(b, s, nh, dh)
+    gif = u.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_t, f_t = gif[..., :nh], gif[..., nh:]  # (B,S,H) pre-activations
+    return q, k, v, i_t, f_t
+
+
+def _mlstm_chunk_scan(q, k, v, i_t, f_t, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.  All inputs (B, S, H, ...)."""
+    b, s, nh, dh = q.shape
+    s_orig = s
+    if s % chunk:
+        # Identity-pad to a chunk multiple: f=1 (log f = 0), i = 0
+        # (ĩ = -inf) makes padded steps state-neutral; outputs are sliced.
+        pad = chunk - s % chunk
+        zpad = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, zpad) for t in (q, k, v))
+        i_t = jnp.pad(i_t, [(0, 0), (0, pad), (0, 0)], constant_values=-1e30)
+        f_t = jnp.pad(f_t, [(0, 0), (0, pad), (0, 0)], constant_values=1e30)
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+    # (B,S,H,*) -> (nc, B, H, chunk, *)
+    rs = lambda t: t.reshape(b, nc, chunk, nh, -1).transpose(1, 0, 3, 2, 4)
+    qc, kc, vc = rs(q.astype(f32)), rs(k.astype(f32)), rs(v.astype(f32))
+    ic = i_t.reshape(b, nc, chunk, nh).transpose(1, 0, 3, 2).astype(f32)
+    fc = f_t.reshape(b, nc, chunk, nh).transpose(1, 0, 3, 2).astype(f32)
+
+    def step(carry, xs):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qq, kk, vv, ii, ff = xs  # (B,H,L,*)
+        logf = jax.nn.log_sigmoid(ff)  # (B,H,L)
+        lb = jnp.cumsum(logf, axis=-1)  # inclusive cumulative log-decay
+        # intra-chunk scores: decay from s+1..t plus input gate at s
+        sc = lb[..., :, None] - lb[..., None, :] + ii[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        sc = jnp.where(mask, sc, -jnp.inf)
+        inter = lb + m[..., None]  # (B,H,L): decay from chunk start + carry
+        m_t = jnp.maximum(jnp.max(sc, axis=-1), inter)  # (B,H,L)
+        w_intra = jnp.exp(sc - m_t[..., None])  # (B,H,L,L)
+        g_inter = jnp.exp(inter - m_t)  # (B,H,L)
+
+        qk = jnp.einsum("bhld,bhsd->bhls", qq, kk)
+        num = (jnp.einsum("bhls,bhsd->bhld", w_intra * qk, vv)
+               + g_inter[..., None] * jnp.einsum("bhld,bhde->bhle", qq, C))
+        den = (jnp.einsum("bhls,bhls->bhl", w_intra, qk)
+               + g_inter * jnp.einsum("bhld,bhd->bhl", qq, n))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # carry update to end of chunk
+        total = lb[..., -1]  # (B,H)
+        m_next = jnp.maximum(m + total,
+                             jnp.max(total[..., None] - lb + ii, axis=-1))
+        decay_state = jnp.exp(m + total - m_next)  # (B,H)
+        w_new = jnp.exp(total[..., None] - lb + ii - m_next[..., None])  # (B,H,L)
+        C_next = (decay_state[..., None, None] * C
+                  + jnp.einsum("bhs,bhsd,bhse->bhde", w_new, kk, vv))
+        n_next = (decay_state[..., None] * n
+                  + jnp.einsum("bhs,bhsd->bhd", w_new, kk))
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((b, nh, dh, dh), f32)
+    n0 = jnp.zeros((b, nh, dh), f32)
+    m0 = jnp.full((b, nh), -1e30, f32)
+    carry, hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    # (nc, B, H, L, dh) -> (B, S, H*dh)
+    out = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, nh * dh)
+    return out[:, :s_orig], carry
+
+
+def _mlstm_chunk_scan_with_state(q, k, v, i_t, f_t, chunk: int):
+    return _mlstm_chunk_scan(q, k, v, i_t, f_t, chunk)
+
+
+def apply_mlstm(p, x, cfg, block, ctx: ShardCtx, positions) -> jnp.ndarray:
+    del positions
+    h = apply_norm(p["norm"], x, cfg.norm)
+    u = h @ p["w_up"]
+    gate = jax.nn.silu(h @ p["w_gate"])
+    q, k, v, i_t, f_t = _mlstm_heads(p, u, cfg)
+    y, _ = _mlstm_chunk_scan(q, k, v, i_t, f_t,
+                             min(cfg.mlstm_chunk, x.shape[1]))
+    y = (y.astype(x.dtype) * gate) @ p["w_down"]
+    return ctx.shard(y, "batch", "seq_act", None)
+
+
+def init_mlstm_cache(cfg, block, batch: int, max_len: int) -> dict:
+    du = _UP * cfg.d_model
+    nh = cfg.n_lstm_heads
+    dh = du // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_cache_axes(cfg, block) -> dict:
+    return {"C": ("batch", None, None, None), "n": ("batch", None, None),
+            "m": ("batch", None)}
+
+
+def apply_mlstm_decode(p, x, cache, cfg, block, ctx: ShardCtx, pos) -> tuple:
+    del pos
+    h = apply_norm(p["norm"], x, cfg.norm)
+    u = h @ p["w_up"]
+    gate = jax.nn.silu(h @ p["w_gate"])
+    q, k, v, i_t, f_t = _mlstm_heads(p, u, cfg)  # (B,1,H,dh)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    ii, ff = i_t[:, 0], f_t[:, 0]  # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    logf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(logf + m, ii)
+    f_s = jnp.exp(logf + m - m_new)
+    i_s = jnp.exp(ii - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = f_s[..., None] * n + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(x.shape[0], 1, -1)
+    y = (y.astype(x.dtype) * gate) @ p["w_down"]
+    return ctx.shard(y, "batch", "seq_act", None), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, truly sequential (recurrent R), per-head block-diag
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, block) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_lstm_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    return {
+        "norm": init_norm(cfg),
+        "w_in": dense_init(ks[0], (d, 4 * d), d, dt),  # z, o, i, f pre-acts
+        "r": (jax.random.normal(ks[1], (4, nh, dh, dh)) * dh ** -0.5
+              ).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((3 * d,)),
+                              jnp.broadcast_to(jnp.linspace(3., 6., nh)[:, None],
+                                               (nh, dh)).reshape(-1)]),
+        "w_out": dense_init(ks[2], (d, d), d, dt),
+    }
+
+
+def slstm_axes(cfg, block) -> dict:
+    return {"norm": norm_axes(cfg), "w_in": ("embed", None),
+            "r": (None, None, None, None), "b": (None,),
+            "w_out": ("embed", None)}
+
+
+def _slstm_step(p, carry, xw, cfg):
+    """One sLSTM time-step.  xw: (B, 4D) input pre-activations."""
+    c, n, m, h = carry  # each (B, H, dh)
+    b, nh, dh = c.shape
+    d = nh * dh
+    rh = jnp.einsum("bhd,ghde->bghe", h, p["r"]).reshape(b, 4 * d)
+    pre = (xw + rh + p["b"]).reshape(b, 4, nh, dh)
+    z = jnp.tanh(pre[:, 0])
+    o = jax.nn.sigmoid(pre[:, 1])
+    i_t = pre[:, 2]
+    f_t = pre[:, 3]
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm(p, x, cfg, block, ctx: ShardCtx, positions) -> jnp.ndarray:
+    del positions
+    b, s, d = x.shape
+    nh = cfg.n_lstm_heads
+    dh = d // nh
+    h0 = apply_norm(p["norm"], x, cfg.norm)
+    xw = (h0 @ p["w_in"]).astype(jnp.float32)  # (B,S,4D)
+
+    def step(carry, xt):
+        return _slstm_step(p, carry, xt, cfg)
+
+    init = tuple(jnp.zeros((b, nh, dh), jnp.float32) for _ in range(2)) + (
+        jnp.full((b, nh, dh), -1e30, jnp.float32),
+        jnp.zeros((b, nh, dh), jnp.float32))
+    _, hs = jax.lax.scan(step, init, xw.transpose(1, 0, 2))  # scan over S
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype) @ p["w_out"]
+    return ctx.shard(y, "batch", "seq_act", None)
+
+
+def init_slstm_cache(cfg, block, batch: int, max_len: int) -> dict:
+    nh = cfg.n_lstm_heads
+    dh = cfg.d_model // nh
+    z = lambda: jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((batch, nh, dh), -1e30,
+                                              jnp.float32), "h": z()}
+
+
+def slstm_cache_axes(cfg, block) -> dict:
+    return {k: ("batch", None, None) for k in ("c", "n", "m", "h")}
+
+
+def apply_slstm_decode(p, x, cache, cfg, block, ctx: ShardCtx, pos) -> tuple:
+    del pos
+    b = x.shape[0]
+    h0 = apply_norm(p["norm"], x, cfg.norm)
+    xw = (h0 @ p["w_in"]).astype(jnp.float32)[:, 0]  # (B,4D)
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    carry, h_new = _slstm_step(p, carry, xw, cfg)
+    y = h_new.reshape(b, 1, -1).astype(x.dtype) @ p["w_out"]
+    cache_new = dict(zip(("c", "n", "m", "h"), carry))
+    return ctx.shard(y, "batch", "seq_act", None), cache_new

@@ -1,0 +1,1 @@
+from .adamw import OptConfig, adamw_update, global_norm, init_opt_state, schedule

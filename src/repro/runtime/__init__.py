@@ -1,0 +1,6 @@
+from .fault_tolerance import (InjectedFailure, ResilienceConfig, RunReport,
+                              run_resilient)
+from .compression import (compressed_psum, compressed_psum_tree,
+                          dequantize_int8, error_feedback_update,
+                          quantize_int8)
+from .elastic import make_elastic_mesh, remesh_plan, reshard_state

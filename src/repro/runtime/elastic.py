@@ -1,0 +1,42 @@
+"""Elastic scaling: re-mesh a checkpointed run onto a different device count.
+
+Scenario: a pod loses a rack mid-run.  The job restarts on the surviving
+devices with the same *logical* sharding rules; only the mesh shape changes.
+Because checkpoints are stored as full logical arrays (per-leaf .npy) and
+shardings are derived from logical axes + rules at load time, restore is a
+``device_put`` onto the new mesh — no resharding tool needed.
+
+``remesh_plan`` computes the largest valid (data, model) sub-mesh for a
+surviving device count (model axis preserved first: TP degree is baked into
+padding choices; the data axis absorbs elasticity — the standard posture).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def remesh_plan(n_devices: int, tp: int, multi_pod: bool = False):
+    """Largest (dp, tp) grid with dp*tp <= n_devices, tp fixed."""
+    if n_devices < tp:
+        raise ValueError(
+            f"cannot keep TP={tp} with only {n_devices} devices; "
+            "TP degree is baked into head/vocab padding — restore requires "
+            "at least one full model-parallel group")
+    dp = n_devices // tp
+    return (dp, tp)
+
+
+def make_elastic_mesh(devices, tp: int) -> Mesh:
+    dp, tp = remesh_plan(len(devices), tp)
+    devs = devices[: dp * tp]
+    import numpy as np
+    return Mesh(np.asarray(devs).reshape(dp, tp), ("data", "model"))
+
+
+def reshard_state(state, old_shardings, new_mesh, spec_tree):
+    """device_put a (restored) state onto the new mesh's shardings."""
+    return jax.tree.map(
+        lambda x, spec: jax.device_put(x, NamedSharding(new_mesh, spec)),
+        state, spec_tree,
+        is_leaf=lambda x: not isinstance(x, dict))

@@ -1,0 +1,1 @@
+from .decode import ServeSession, SlotManager, build_decode_step, build_prefill_step

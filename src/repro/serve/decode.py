@@ -1,0 +1,97 @@
+"""Serving substrate: prefill/decode step builders + a batched greedy/temp
+sampling loop with a simple continuous-batching slot manager.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ShardCtx, apply_decode, apply_prefill, init_cache
+
+
+def build_prefill_step(cfg, ctx: ShardCtx):
+    def prefill_step(params, batch):
+        return apply_prefill(params, batch, cfg, ctx)
+    return prefill_step
+
+
+def build_decode_step(cfg, ctx: ShardCtx):
+    def decode_step(params, batch, cache, pos):
+        return apply_decode(params, batch, cache, cfg, ctx, pos)
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Batched autoregressive generation (greedy or temperature sampling)."""
+
+    cfg: Any
+    params: Any
+    ctx: ShardCtx = dataclasses.field(default_factory=ShardCtx)
+    temperature: float = 0.0
+
+    def generate(self, prompts: np.ndarray, max_new: int, seed: int = 0):
+        """prompts: (B, S0) int32 -> (B, max_new) generated ids."""
+        cfg = self.cfg
+        b, s0 = prompts.shape[:2]
+        max_len = s0 + max_new
+        prefill = jax.jit(
+            lambda p, batch: apply_prefill(p, batch, cfg, self.ctx,
+                                           cache_len=max_len))
+        decode = jax.jit(build_decode_step(cfg, self.ctx))
+
+        batch_tok = jnp.asarray(prompts, jnp.int32)
+        logits, cache = prefill(self.params, {"tokens": batch_tok})
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, key)
+        for t in range(max_new):
+            out.append(np.asarray(tok))
+            key, sub = jax.random.split(key)
+            logits, cache = decode(self.params, {"tokens": tok[:, None]},
+                                   cache, jnp.int32(s0 + t))
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        logits = logits[..., : self.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+
+class SlotManager:
+    """Continuous-batching bookkeeping: fixed decode slots, per-slot position,
+    admit-on-free semantics.  Host-side; the device step is shape-stable."""
+
+    def __init__(self, n_slots: int, max_len: int):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.free = list(range(n_slots))
+        self.pos = np.zeros((n_slots,), np.int64)
+        self.active: dict[int, Any] = {}
+
+    def admit(self, request_id) -> int | None:
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.active[slot] = request_id
+        self.pos[slot] = 0
+        return slot
+
+    def step(self, slot: int) -> int:
+        self.pos[slot] += 1
+        return int(self.pos[slot])
+
+    def finish(self, slot: int):
+        self.active.pop(slot, None)
+        self.free.append(slot)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_slots

@@ -1,0 +1,2 @@
+from .step import (build_train_step, cross_entropy, init_train_state,
+                   loss_fn, train_state_axes)

@@ -1,0 +1,151 @@
+"""Loss + train_step builders (sharding-aware, remat/microbatch-ready).
+
+``build_train_step`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+explicit in/out shardings; the builder also returns those shardings
+(derived from the logical-axis trees + rule set).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ShardCtx, apply_train, init_model, model_axes
+from ..optim import OptConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """Stable CE over (possibly vocab-sharded) logits.  Mean over tokens.
+
+    Written max/exp/sum-style so GSPMD keeps the vocab axis sharded and only
+    psums the (B, S) statistics.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def fused_lm_loss(x: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int, chunk: int = 8192) -> jnp.ndarray:
+    """Vocab-chunked softmax-xent: never materializes (B, S, V) logits.
+
+    Scans over vocab chunks of the LM head, keeping only running
+    (max, sumexp, gold) statistics of shape (B, S) — the classic fused-loss
+    optimization (beyond-paper; EXPERIMENTS.md §Perf).  The scan body is
+    rematerialized in the backward pass, trading ~2× head FLOPs for
+    O(B·S·V) → O(B·S·chunk) loss memory traffic.
+    """
+    b, s, d = x.shape
+    v = w.shape[1]
+    chunk = min(chunk, v)
+    assert v % chunk == 0, (v, chunk)
+    n_chunks = v // chunk
+    xf = x.reshape(b * s, d)
+    lab = labels.reshape(b * s)
+
+    @jax.checkpoint
+    def body(carry, i):
+        m, se, gold = carry
+        wc = jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, 1)
+        lg = (xf @ wc).astype(jnp.float32)  # (BS, chunk)
+        # mask padded vocab tail
+        ids = i * chunk + jnp.arange(chunk)
+        lg = jnp.where(ids[None, :] < vocab_size, lg, -1e30)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        se = se * jnp.exp(m - m_new) + jnp.sum(jnp.exp(lg - m_new[:, None]),
+                                               axis=-1)
+        in_chunk = (lab >= i * chunk) & (lab < (i + 1) * chunk)
+        g = jnp.take_along_axis(
+            lg, jnp.clip(lab - i * chunk, 0, chunk - 1)[:, None], axis=1)[:, 0]
+        gold = jnp.where(in_chunk, g, gold)
+        return (m_new, se, gold), None
+
+    init = (jnp.full((b * s,), -1e30, jnp.float32),
+            jnp.zeros((b * s,), jnp.float32),
+            jnp.zeros((b * s,), jnp.float32))
+    (m, se, gold), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return jnp.mean(jnp.log(se) + m - gold)
+
+
+def loss_fn(params, batch, cfg, ctx, fused: bool = False,
+            loss_chunk: int = 8192):
+    if fused:
+        from ..models.transformer import apply_backbone
+        x, aux = apply_backbone(params, batch, cfg, ctx)
+        w = params["lm_head"] if "lm_head" in params else params["embed"].T
+        ce = fused_lm_loss(x, w, batch["labels"], cfg.vocab_size, loss_chunk)
+    else:
+        logits, aux = apply_train(params, batch, cfg, ctx)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def build_train_step(cfg, ctx: ShardCtx, opt_cfg: OptConfig,
+                     microbatch: int = 1, fused_loss: bool = False,
+                     loss_chunk: int = 8192):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch > 1`` accumulates gradients over sequential micro-batches
+    (splits the leading batch dim) — the standard activation-memory lever.
+    ``fused_loss`` uses the vocab-chunked softmax-xent (§Perf lever).
+    """
+    _loss = functools.partial(loss_fn, fused=fused_loss,
+                              loss_chunk=loss_chunk)
+
+    def train_step(state, batch):
+        if microbatch == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                _loss, has_aux=True)(state["params"], batch, cfg, ctx)
+        else:
+            def mb_slice(i, t):
+                mb = t.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, 0)
+
+            def acc_step(carry, i):
+                gsum, lsum = carry
+                mb_batch = jax.tree.map(
+                    functools.partial(mb_slice, i),
+                    {k: v for k, v in batch.items() if k != "positions"})
+                if "positions" in batch:  # (3, B, S): slice dim 1
+                    mbp = jax.lax.dynamic_slice_in_dim(
+                        batch["positions"],
+                        i * (batch["positions"].shape[1] // microbatch),
+                        batch["positions"].shape[1] // microbatch, 1)
+                    mb_batch["positions"] = mbp
+                (l, _), g = jax.value_and_grad(_loss, has_aux=True)(
+                    state["params"], mb_batch, cfg, ctx)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatch))
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss = lsum / microbatch
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, om = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg, opt_cfg: OptConfig) -> dict:
+    params = init_model(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def train_state_axes(cfg) -> dict:
+    """Logical axes for the full train state (opt m/v inherit param axes)."""
+    pa = model_axes(cfg)
+    return {"params": pa, "opt": {"m": pa, "v": pa, "step": ()}}

@@ -1,0 +1,99 @@
+"""TriADA cell-grid simulator + ESOP: device-model validation of the
+paper's time-step/MAC/energy claims and the sparsity method."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EsopStats, block_nonzero_mask, coefficient_matrix,
+                        energy_joules, esop_gemt3, gemt3, macs, prune,
+                        simulate_dxt3, sparsity, time_steps)
+
+RNG = np.random.default_rng(7)
+
+
+def _problem(n1, n2, n3, kind="dct"):
+    x = RNG.normal(size=(n1, n2, n3)).astype(np.float32)
+    cs = [np.asarray(coefficient_matrix(kind, n)) for n in (n1, n2, n3)]
+    return x, cs
+
+
+class TestCellSim:
+    def test_dense_matches_gemt3_and_counts(self):
+        x, cs = _problem(5, 6, 7)
+        out, stats = simulate_dxt3(x, *cs, esop=False)
+        ref = gemt3(jnp.asarray(x), *map(jnp.asarray, cs))
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4)
+        # Paper §5.4: linear time-steps, hypercubic MACs, 100% efficiency.
+        assert stats.steps_done == time_steps(5, 6, 7)
+        assert stats.macs_done == macs(5, 6, 7)
+
+    @pytest.mark.parametrize("order", [(3, 1, 2), (1, 2, 3), (2, 3, 1)])
+    def test_stage_orders(self, order):
+        x, cs = _problem(4, 5, 6)
+        out, _ = simulate_dxt3(x, *cs, order=order, esop=False)
+        ref = gemt3(jnp.asarray(x), *map(jnp.asarray, cs), order=order)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4)
+
+    def test_esop_bit_identical_and_counts_match_analytic(self):
+        x, cs = _problem(6, 5, 4)
+        x *= RNG.random(x.shape) > 0.7  # ~70% sparse data
+        cs[2] = cs[2] * (RNG.random(cs[2].shape) > 0.4)
+        out_sim, st_sim = simulate_dxt3(x, *cs, esop=True)
+        out_ana, st_ana = esop_gemt3(jnp.asarray(x), *map(jnp.asarray, cs))
+        np.testing.assert_allclose(out_sim, out_ana, rtol=1e-3, atol=1e-4)
+        assert st_sim.macs_done == st_ana.macs_done
+        assert st_sim.steps_done == st_ana.steps_done
+        assert st_sim.coeff_sends_done == st_ana.coeff_sends_done
+        assert st_sim.data_sends_done == st_ana.data_sends_done
+        assert st_ana.macs_done < st_ana.macs_dense  # actually skipped work
+
+    def test_all_zero_vector_skips_time_step(self):
+        x, cs = _problem(4, 4, 4)
+        cs = [np.array(c) for c in cs]
+        cs[2][2, :] = 0.0  # one all-zero streamed coefficient row
+        _, stats = simulate_dxt3(x, *cs, esop=True)
+        assert stats.steps_done == time_steps(4, 4, 4) - 1
+
+    def test_esop_dense_data_no_skips(self):
+        x, cs = _problem(3, 3, 3)
+        x += 10.0  # strictly nonzero
+        _, stats = simulate_dxt3(x, *cs, esop=True)
+        # DCT row 0 is constant nonzero; other rows have no exact zeros.
+        assert stats.steps_done == stats.steps_dense
+
+
+class TestEsop:
+    @settings(max_examples=10, deadline=None)
+    @given(st.floats(0.0, 0.95))
+    def test_energy_savings_track_sparsity(self, p):
+        rng = np.random.default_rng(int(p * 1000))
+        x = rng.normal(size=(6, 6, 6)).astype(np.float32)
+        x *= rng.random(x.shape) >= p
+        cs = [np.asarray(coefficient_matrix("dht", 6))] * 3
+        _, stats = esop_gemt3(jnp.asarray(x), *map(jnp.asarray, cs))
+        e = energy_joules(stats)
+        assert 0.0 <= e["saving"] <= 1.0
+        if p > 0.5:
+            assert e["saving"] > 0.1  # visibly saves on sparse data
+
+    def test_prune_and_sparsity(self):
+        x = jnp.asarray([[0.001, 1.0], [-0.002, -2.0]])
+        xp = prune(x, 0.01)
+        assert sparsity(xp) == 0.5
+        np.testing.assert_array_equal(np.asarray(xp),
+                                      [[0.0, 1.0], [0.0, -2.0]])
+
+    def test_block_mask(self):
+        a = jnp.zeros((4, 6)).at[0, 0].set(1.0).at[3, 5].set(2.0)
+        m = block_nonzero_mask(a, (2, 3))
+        np.testing.assert_array_equal(np.asarray(m),
+                                      [[True, False], [False, True]])
+        with pytest.raises(ValueError):
+            block_nonzero_mask(a, (3, 3))
+
+    def test_stats_addition(self):
+        s = EsopStats(10, 5, 3, 2, 4, 2, 6, 3)
+        t = s + s
+        assert t.macs_dense == 20 and t.macs_done == 10
+        assert t.mac_savings == 0.5

@@ -1,0 +1,141 @@
+"""Launch-layer units: rules/specs, input_specs, MODEL_FLOPS accounting,
+report generation, hillclimb arg parsing."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, input_specs, load_config
+from repro.launch.flops import model_flops
+from repro.launch.mesh import (TP, act_rules, batch_specs, dp_axes,
+                               param_rules, spec_of, specs_from_axes)
+
+
+class TestRules:
+    def test_no_duplicate_mesh_axes_in_any_param_spec(self):
+        """Every (arch, serve/train, mesh) param spec must be legal."""
+        from repro.models import model_axes
+        from repro.train import train_state_axes
+        for arch in ARCH_IDS:
+            cfg = load_config(arch).finalize_for_mesh(TP)
+            for multi in (False, True):
+                for serve in (False, True):
+                    rules = param_rules(cfg, multi, serve=serve)
+                    axes = model_axes(cfg) if serve else train_state_axes(cfg)
+                    specs = specs_from_axes(axes, rules)
+                    for spec in jax.tree.leaves(
+                            specs, is_leaf=lambda x: isinstance(x, P)):
+                        flat = []
+                        for entry in spec:
+                            if entry is None:
+                                continue
+                            flat.extend(entry if isinstance(entry, tuple)
+                                        else [entry])
+                        assert len(flat) == len(set(flat)), (arch, spec)
+
+    def test_serve_rules_drop_fsdp(self):
+        cfg = load_config("yi_34b").finalize_for_mesh(TP)
+        assert param_rules(cfg, False, serve=False)["embed"] == ("data",)
+        assert param_rules(cfg, False, serve=True)["embed"] is None
+
+    def test_act_rules_batch_shardable(self):
+        cfg = load_config("yi_34b").finalize_for_mesh(TP)
+        assert act_rules(cfg, True)["batch"] == ("pod", "data")
+        assert act_rules(cfg, True, batch_shardable=False)["batch"] is None
+
+    def test_spec_of(self):
+        assert spec_of(("embed", "mlp"), {"embed": None, "mlp": "model"}) \
+            == P(None, "model")
+        assert spec_of((), {}) == P()
+
+
+class TestPadding:
+    def test_head_padding(self):
+        cfg = load_config("yi_34b").finalize_for_mesh(16)
+        assert cfg.n_heads == 56 and cfg.eff_n_heads == 64
+        assert cfg.n_kv_heads == 8 and cfg.eff_n_kv_heads == 16
+        cfg2 = load_config("qwen1_5_0_5b").finalize_for_mesh(16)
+        assert cfg2.eff_n_heads == 16 and cfg2.eff_n_kv_heads == 16
+
+    def test_vocab_padding(self):
+        cfg = load_config("granite_moe_1b").finalize_for_mesh(16)
+        assert cfg.vocab_size == 49155
+        assert cfg.eff_vocab % 16 == 0 and cfg.eff_vocab >= 49155
+
+    def test_xlstm_keeps_mixers_unsharded(self):
+        cfg = load_config("xlstm_350m").finalize_for_mesh(16)
+        rules = param_rules(cfg, False)
+        assert rules["heads"] is None and rules["mlp"] is None
+        assert rules["vocab"] == "model"  # TP stays on the big table
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_all_cells_have_specs(self, arch):
+        cfg = load_config(arch).finalize_for_mesh(TP)
+        for shape in SHAPES.values():
+            ins = input_specs(cfg, shape)
+            assert all(isinstance(v, jax.ShapeDtypeStruct)
+                       for v in ins.values())
+            b = shape.global_batch
+            key = ("embeddings" if cfg.input_mode == "embeddings"
+                   else "tokens")
+            assert ins[key].shape[0] == b
+            bs = batch_specs(cfg, shape.kind, act_rules(cfg, False))
+            assert set(bs) >= set(ins), (arch, shape.name)
+
+
+class TestModelFlops:
+    def test_dense_matches_6nd(self):
+        cfg = load_config("qwen1_5_0_5b", smoke=True)
+        mf = model_flops(cfg, SHAPES["train_4k"])
+        assert mf["model_flops"] == pytest.approx(
+            6.0 * mf["n_params_active"] * 4096 * 256)
+        assert mf["n_params_active"] == mf["n_params_total"]
+
+    def test_moe_active_fraction(self):
+        cfg = load_config("deepseek_v3_671b", smoke=True)
+        mf = model_flops(cfg, SHAPES["train_4k"])
+        assert mf["n_params_active"] < mf["n_params_total"]
+
+    def test_decode_counts_one_token_per_seq(self):
+        cfg = load_config("qwen1_5_0_5b", smoke=True)
+        mf = model_flops(cfg, SHAPES["decode_32k"])
+        assert mf["tokens"] == SHAPES["decode_32k"].global_batch
+
+
+class TestHillclimbParsing:
+    def test_kv_parser(self):
+        from repro.launch.hillclimb import _parse_kv
+        out = _parse_kv(["seq_act=model", "lru_in=None", "remat=dots",
+                         "q_chunk=256", "expert=(data,model)", "flag=True"])
+        assert out["seq_act"] == "model"
+        assert out["lru_in"] is None
+        assert out["q_chunk"] == 256
+        assert out["expert"] == ("data", "model")
+        assert out["flag"] is True
+
+
+class TestReport:
+    def test_tables_from_artifacts(self, tmp_path):
+        import json
+        from repro.launch.report import dryrun_table, load, roofline_table
+        art = {
+            "arch": "x", "shape": "train_4k", "mesh": "16x16",
+            "compile_s": 1.0, "n_devices": 256,
+            "memory": {"per_device_total": 2**30},
+            "model_flops": {"model_flops": 1e15},
+            "roofline": {"compute_s": 1.0, "memory_s": 2.0,
+                         "collective_s": 0.5, "bound": "memory",
+                         "flops_per_device": 1e12,
+                         "ici_bytes_per_device": 1e9,
+                         "useful_flops_ratio": 0.5,
+                         "roofline_fraction": 0.01,
+                         "coll_by_kind": {"all-reduce": 1e9}},
+        }
+        with open(tmp_path / "a.json", "w") as f:
+            json.dump(art, f)
+        arts = load(str(tmp_path))
+        assert "| x | train_4k |" in dryrun_table(arts)
+        assert "**memory**" in roofline_table(arts)

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU):
+one forward/train step — output shapes + no NaNs; axes-tree structural match;
+and the decode-vs-train-forward consistency check that validates every
+mixer's cache path (GQA rolling window, MLA absorbed decode, RG-LRU state,
+m/sLSTM state, MoE routing)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, load_config
+from repro.models import (ShardCtx, apply_decode, apply_prefill, apply_train,
+                          cache_axes_tree, init_cache, init_model, model_axes)
+
+CTX = ShardCtx()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b, s, rng):
+    if cfg.input_mode == "tokens":
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(b, s)).astype(np.int32))}
+    if cfg.input_mode == "codebooks":
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size,
+                         size=(b, s, cfg.n_codebooks)).astype(np.int32))}
+    return {"embeddings": jnp.asarray(
+        rng.normal(size=(b, s, cfg.d_model)).astype(np.float32),
+        dtype=cfg.act_dtype)}
+
+
+def _slice_batch(batch, t0, t1):
+    return {k: v[:, t0:t1] for k, v in batch.items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nans(self, arch):
+        cfg = load_config(arch, smoke=True)
+        p = init_model(KEY, cfg)
+        rng = np.random.default_rng(0)
+        b, s = 2, 32
+        logits, aux = apply_train(p, _batch(cfg, b, s, rng), cfg, CTX)
+        assert logits.shape == (b, s, cfg.eff_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert bool(jnp.isfinite(aux))
+
+    def test_axes_tree_matches_params(self, arch):
+        cfg = load_config(arch, smoke=True)
+        p = jax.eval_shape(lambda k: init_model(k, cfg), KEY)
+        ax = model_axes(cfg)
+        # structural zip: raises if structures differ
+        jax.tree.map(lambda a, leaf: None, ax,
+                     jax.tree.map(lambda x: 0, p),
+                     is_leaf=lambda x: isinstance(x, tuple))
+        # every leaf's axes tuple length == leaf rank
+        flat_ax = jax.tree.leaves(ax, is_leaf=lambda x: isinstance(x, tuple))
+        flat_p = jax.tree.leaves(p)
+        for a, leaf in zip(flat_ax, flat_p):
+            assert len(a) == leaf.ndim, (arch, a, leaf.shape)
+
+    def test_decode_matches_train_forward(self, arch):
+        """Token-by-token decode against the cache must reproduce the
+        train-mode forward logits (fp32 params for a tight comparison)."""
+        cfg = load_config(arch, smoke=True)
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                                  act_dtype=jnp.float32)
+        p = init_model(KEY, cfg)
+        rng = np.random.default_rng(1)
+        b, s = 2, 32
+        batch = _batch(cfg, b, s, rng)
+        logits_train, _ = apply_train(p, batch, cfg, CTX)
+
+        cache = init_cache(cfg, b, s)
+        logits_dec = []
+        for t in range(s):
+            lg, cache = apply_decode(p, _slice_batch(batch, t, t + 1), cache,
+                                     cfg, CTX, jnp.int32(t))
+            logits_dec.append(lg)
+        logits_dec = jnp.stack(logits_dec, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec, np.float32),
+            np.asarray(logits_train, np.float32), rtol=2e-2, atol=2e-2)
+
+    def test_prefill_matches_train_last_logits(self, arch):
+        cfg = load_config(arch, smoke=True)
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                                  act_dtype=jnp.float32)
+        p = init_model(KEY, cfg)
+        rng = np.random.default_rng(2)
+        b, s = 2, 32
+        batch = _batch(cfg, b, s, rng)
+        logits_train, _ = apply_train(p, batch, cfg, CTX)
+        last, cache = apply_prefill(p, batch, cfg, CTX)
+        np.testing.assert_allclose(np.asarray(last, np.float32),
+                                   np.asarray(logits_train[:, -1], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        # cache structure matches the declared axes tree
+        jax.tree.map(lambda a, leaf: None, cache_axes_tree(cfg),
+                     jax.tree.map(lambda x: 0, cache),
+                     is_leaf=lambda x: isinstance(x, tuple))
+
+    def test_prefill_cache_continues_decode(self, arch):
+        """prefill(x[:s]) then decode(x[s]) == train forward at position s."""
+        cfg = load_config(arch, smoke=True)
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                                  act_dtype=jnp.float32)
+        p = init_model(KEY, cfg)
+        rng = np.random.default_rng(3)
+        b, s = 2, 33
+        batch = _batch(cfg, b, s, rng)
+        logits_train, _ = apply_train(p, batch, cfg, CTX)
+        # prefill cache sized s: headroom slot for the decode step
+        _, cache = apply_prefill(p, _slice_batch(batch, 0, s - 1), cfg, CTX,
+                                 cache_len=s)
+        lg, _ = apply_decode(p, _slice_batch(batch, s - 1, s), cache, cfg,
+                             CTX, jnp.int32(s - 1))
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(logits_train[:, -1], np.float32),
+                                   rtol=2e-2, atol=2e-2)
