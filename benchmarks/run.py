@@ -1,12 +1,16 @@
-# One function per paper claim/table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper claim/table. Prints ``name,us_per_call,derived`` CSV;
+# ``--json OUT`` additionally writes the rows as a JSON artifact (e.g.
+# ``BENCH_engine.json``) for the perf trajectory.
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 
 
-def main() -> None:
+def collect_rows() -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
-    from . import bench_core, bench_distributed, bench_kernels, bench_roofline
+    from . import (bench_core, bench_distributed, bench_engine, bench_kernels,
+                   bench_roofline)
 
     bench_core.bench_linear_timesteps(rows)
     bench_core.bench_esop_savings(rows)
@@ -19,10 +23,30 @@ def main() -> None:
     bench_distributed.bench_strong_scaling_model(rows)
     bench_distributed.bench_shardmap_vs_auto(rows)
     bench_roofline.bench_roofline_summary(rows)
+    bench_engine.bench_planner_order(rows)
+    bench_engine.bench_esop_dispatch(rows)
+    bench_engine.bench_planned_vs_einsum(rows)
+    bench_engine.bench_autotune_cache(rows)
+    return rows
 
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write rows as a JSON artifact "
+                         "(e.g. BENCH_engine.json)")
+    args = ap.parse_args(argv)
+
+    rows = collect_rows()
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": round(us, 1), "derived": d}
+                       for n, us, d in rows], f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` lived in ``jax.experimental.shard_map`` through jax 0.4/0.5
+(with a ``check_rep`` kwarg) and graduated to ``jax.shard_map`` (with the
+kwarg renamed to ``check_vma``).  This module exposes one ``shard_map``
+callable with the modern keyword spelling that works on both.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax 0.4/0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map_impl).parameters
+    else "check_rep"
+)
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any supported jax."""
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )

@@ -1,6 +1,6 @@
 """TriADA core: trilinear matrix-by-tensor multiply-add (the paper's contribution)."""
-from .gemt import (PAREN_ORDERS, dxt3d, gemt3, gemt3_outer, macs, mode_product,
-                   time_steps)
+from .gemt import (PAREN_ORDERS, dxt3d, gemt3, gemt3_outer, gemt3_planned,
+                   macs, mode_product, time_steps)
 from .transforms import (TRANSFORM_KINDS, coefficient_matrix, dct2_matrix,
                          dft_matrix, dht_matrix, dwht_matrix,
                          inverse_coefficient_matrix)

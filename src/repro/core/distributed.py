@@ -32,7 +32,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 __all__ = ["gemt3_shardmap", "gemt3_auto", "tensor_spec"]
 

@@ -32,6 +32,7 @@ __all__ = [
     "mode_product",
     "gemt3",
     "gemt3_outer",
+    "gemt3_planned",
     "dxt3d",
     "macs",
     "time_steps",
@@ -140,6 +141,27 @@ def gemt3_outer(
     return y
 
 
+def gemt3_planned(
+    x: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    *,
+    out: jnp.ndarray | None = None,
+    **engine_kwargs,
+):
+    """Engine-scheduled GEMT: cost-model order search + kernel lowering.
+
+    Thin re-export of :func:`repro.engine.gemt3_planned` (lazy import keeps
+    ``core`` free of a hard dependency on the engine/kernels layers).  Unlike
+    ``gemt3`` it accepts a leading batch axis and, with ``with_info=True``,
+    returns per-stage dispatch accounting.
+    """
+    from ..engine import gemt3_planned as _planned
+
+    return _planned(x, c1, c2, c3, out=out, **engine_kwargs)
+
+
 def dxt3d(
     x: jnp.ndarray,
     kind: str = "dct",
@@ -147,8 +169,16 @@ def dxt3d(
     order: Sequence[int] = (3, 1, 2),
     out: jnp.ndarray | None = None,
     outer: bool = False,
+    engine: bool = False,
+    **engine_kwargs,
 ) -> jnp.ndarray:
-    """Forward/inverse separable 3D discrete orthogonal transform (Eq. 1/2)."""
+    """Forward/inverse separable 3D discrete orthogonal transform (Eq. 1/2).
+
+    ``engine=True`` routes through the planned execution engine
+    (``repro.engine``): the stage order is chosen by the cost model (the
+    ``order`` argument is ignored) and each stage runs on the Pallas kernel
+    dispatch; ``engine_kwargs`` (e.g. ``autotune=True``) pass through.
+    """
     from .transforms import coefficient_matrix, inverse_coefficient_matrix
 
     build = inverse_coefficient_matrix if inverse else coefficient_matrix
@@ -156,6 +186,8 @@ def dxt3d(
     c1, c2, c3 = build(kind, n1), build(kind, n2), build(kind, n3)
     if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x):
         x = x.astype(c1.dtype)
+    if engine:
+        return gemt3_planned(x, c1, c2, c3, out=out, **engine_kwargs)
     fn = gemt3_outer if outer else gemt3
     return fn(x, c1, c2, c3, order=order, out=out)
 

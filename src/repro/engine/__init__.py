@@ -1,0 +1,23 @@
+"""GEMT execution engine: cost-model planner → kernel lowering → autotune.
+
+The bridge between the algorithm layer (``core.gemt``) and the kernel layer
+(``kernels.ops``): plans the stage order and per-stage backend from the
+problem's shapes and block sparsity, lowers each mode contraction to a 2D
+GEMM on the Pallas kernels, and tunes tile sizes against a persisted cache.
+See ``docs/engine.md``.
+"""
+from .plan import (DEFAULT_ESOP_THRESHOLD, GemtPlan, StagePlan, build_plan,
+                   macs_for_order, order_costs, sparsity_signature)
+from .lower import lower_stage, mode_fold, mode_unfold
+from .autotune import AutotuneCache, autotune_gemm, default_cache_path, make_key
+from .executor import (clear_plan_cache, execute, execute_with_info,
+                       gemt3_planned, plan_cache_info, plan_gemt3)
+
+__all__ = [
+    "DEFAULT_ESOP_THRESHOLD", "GemtPlan", "StagePlan", "build_plan",
+    "macs_for_order", "order_costs", "sparsity_signature",
+    "lower_stage", "mode_fold", "mode_unfold",
+    "AutotuneCache", "autotune_gemm", "default_cache_path", "make_key",
+    "clear_plan_cache", "execute", "execute_with_info", "gemt3_planned",
+    "plan_cache_info", "plan_gemt3",
+]

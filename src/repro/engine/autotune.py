@@ -1,0 +1,179 @@
+"""Timing-based block-size autotuner with a JSON-persisted cache.
+
+Kernel tile sizes (``bm``/``bn``/``bk``) are a hardware- and shape-dependent
+choice; hard-coding 128³ leaves VMEM and MXU utilization on the table for
+skinny Tucker stages.  ``autotune_gemm`` hill-climbs the (power-of-two)
+block-size lattice by measuring the actual dispatch (``kernels.ops.sr_gemm``
+or ``esop_gemm``) and persists the winner in an :class:`AutotuneCache` keyed
+on ``(m, n, k, dtype, kind, sparsity signature)`` — the same signature the
+planner uses, so a C matrix with a different zero structure never reuses a
+stale ESOP tuning.
+
+The cache is a plain JSON file (default ``~/.cache/repro/autotune.json``,
+overridable via ``REPRO_AUTOTUNE_CACHE`` or the ``path`` argument), tolerant
+of missing/corrupt files so a cold or broken cache never fails a run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+__all__ = ["AutotuneCache", "autotune_gemm", "default_cache_path", "make_key"]
+
+_BOUNDS = (8, 512)  # power-of-two block-size lattice bounds
+_MIN_GAIN = 0.02  # relative speedup required to accept a move
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "") -> str:
+    return f"{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{sig}"
+
+
+class AutotuneCache:
+    """JSON-backed ``key -> {bm, bn, bk, us}`` store."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._entries: dict[str, dict] = {}
+        self.load()
+
+    def load(self) -> None:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self._entries = {k: v for k, v in data.items()
+                                 if isinstance(v, dict)}
+        except (OSError, ValueError):
+            self._entries = {}
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def get(self, key: str) -> dict | None:
+        return self._entries.get(key)
+
+    def put(self, key: str, entry: dict) -> None:
+        self._entries[key] = entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+def _time_us(fn, reps: int = 2) -> float:
+    jax.block_until_ready(fn())  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _pow2_floor(d: int) -> int:
+    return 1 << (max(int(d), 1).bit_length() - 1)
+
+
+def _neighbors(cfg: tuple[int, int, int],
+               caps: tuple[int, int, int]) -> list[tuple[int, int, int]]:
+    lo, hi = _BOUNDS
+    out = []
+    for i in range(3):
+        for factor in (2, 0.5):
+            v = int(cfg[i] * factor)
+            if lo <= v <= min(hi, caps[i]):
+                cand = list(cfg)
+                cand[i] = v
+                if tuple(cand) != cfg:
+                    out.append(tuple(cand))
+    return out
+
+
+def autotune_gemm(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    kind: str = "sr_gemm",
+    *,
+    sig: str = "",
+    cache: AutotuneCache | None = None,
+    max_steps: int = 6,
+    reps: int = 2,
+    use_pallas: bool | None = None,
+) -> tuple[int, int, int]:
+    """Hill-climb (bm, bn, bk) for ``x @ c`` under dispatch ``kind``.
+
+    Returns the best block sizes; a cache hit skips all measurement.
+    """
+    m, kdim = x.shape
+    n = c.shape[1]
+    cache = cache if cache is not None else AutotuneCache()
+    key = make_key(m, n, kdim, x.dtype, kind, sig)
+    knobs_live = use_pallas is True or ops.on_tpu()
+    hit = cache.get(key)
+    # An untuned entry (defaults recorded off-TPU) must not suppress real
+    # tuning once the cache file reaches a host where the knobs matter.
+    if hit is not None and (hit.get("tuned", True) or not knobs_live):
+        return int(hit["bm"]), int(hit["bn"]), int(hit["bk"])
+
+    lo, _hi = _BOUNDS
+    caps = tuple(max(lo, _pow2_floor(d)) for d in (m, n, kdim))
+
+    if not knobs_live:
+        # The reference paths ignore bm/bn/bk, so timing candidates here
+        # would hill-climb on pure noise and persist a meaningless winner.
+        # Cache the clamped defaults instead (still shape-correct for the
+        # Pallas path if this cache later reaches a TPU host).
+        cfg = tuple(min(128, cap) for cap in caps)
+        cache.put(key, {"bm": cfg[0], "bn": cfg[1], "bk": cfg[2],
+                        "us": 0.0, "kind": kind, "tuned": False})
+        try:
+            cache.save()
+        except OSError:
+            pass
+        return cfg
+
+    dispatch = {"sr_gemm": ops.sr_gemm, "esop": ops.esop_gemm,
+                "esop_gemm": ops.esop_gemm}[kind]
+
+    def measure(cfg):
+        bm, bn, bk = cfg
+
+        def call():
+            y = dispatch(x, c, bm=bm, bn=bn, bk=bk, use_pallas=use_pallas)
+            return y[0] if isinstance(y, tuple) else y
+
+        return _time_us(call, reps=reps)
+
+    cur = tuple(min(128, cap) for cap in caps)
+    cur_us = measure(cur)
+    for _ in range(max_steps):
+        moved = False
+        for cand in _neighbors(cur, caps):
+            us = measure(cand)
+            if us < cur_us * (1.0 - _MIN_GAIN):
+                cur, cur_us, moved = cand, us, True
+        if not moved:
+            break
+    cache.put(key, {"bm": cur[0], "bn": cur[1], "bk": cur[2],
+                    "us": round(cur_us, 2), "kind": kind, "tuned": True})
+    try:
+        cache.save()
+    except OSError:
+        pass  # read-only FS: tuning still applies in-process
+    return cur

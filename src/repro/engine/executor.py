@@ -1,0 +1,188 @@
+"""Plan caching + execution — the engine's public entry points.
+
+``gemt3_planned`` is the drop-in, data-driven counterpart of
+``core.gemt.gemt3``: it builds (or fetches from the in-process plan cache) a
+:class:`~repro.engine.plan.GemtPlan`, optionally autotunes per-stage block
+sizes against the persisted JSON cache, and executes the three lowered
+stages through the Pallas kernel dispatch.  Batched inputs (a leading batch
+axis) run each stage as a single fused GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..memo import ArrayMemo
+from .autotune import AutotuneCache, autotune_gemm, make_key
+from .lower import lower_stage
+from .plan import DEFAULT_ESOP_THRESHOLD, GemtPlan, build_plan
+
+__all__ = [
+    "plan_gemt3",
+    "execute",
+    "execute_with_info",
+    "gemt3_planned",
+    "clear_plan_cache",
+    "plan_cache_info",
+]
+
+_PLAN_CACHE: dict[tuple, GemtPlan] = {}
+_FP_MEMO = ArrayMemo()  # per-array-identity digests: plan-cache hits stay cheap
+
+
+def _fingerprint(c: jnp.ndarray) -> str:
+    """Digest of a coefficient matrix's shape/dtype/zero structure.
+
+    Memoized on array identity so a hot loop reusing the same coefficient
+    arrays doesn't pay a device sync + full-matrix hash per call.
+    """
+    def compute():
+        cn = np.asarray(c)
+        h = hashlib.sha1(f"{cn.shape}|{cn.dtype}".encode())
+        h.update(np.packbits(cn != 0).tobytes())
+        return h.hexdigest()[:16]
+
+    return _FP_MEMO.get_or_compute(c, "fp", compute)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_info() -> dict:
+    return {"entries": len(_PLAN_CACHE)}
+
+
+def plan_gemt3(
+    x_shape: tuple[int, ...],
+    x_dtype,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    *,
+    order: tuple[int, int, int] | None = None,
+    esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
+    block_sizes: tuple[int, int, int] | None = None,
+) -> GemtPlan:
+    """Build (or fetch) the plan for this problem; memoized in-process."""
+    key = (
+        tuple(x_shape), jnp.dtype(x_dtype).name,
+        tuple(order) if order is not None else None,
+        esop_threshold, block_sizes,
+        _fingerprint(c1), _fingerprint(c2), _fingerprint(c3),
+    )
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
+                          esop_threshold=esop_threshold,
+                          block_sizes=block_sizes)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def _autotuned_plan(
+    plan: GemtPlan,
+    cs: dict[int, jnp.ndarray],
+    batch: int,
+    cache: AutotuneCache,
+    use_pallas: bool | None,
+) -> GemtPlan:
+    """Replace each kernel stage's block sizes with tuned ones."""
+    stages = []
+    for st in plan.stages:
+        if st.backend == "einsum":
+            stages.append(st)
+            continue
+        rows = st.rows * max(batch, 1)
+        c = cs[st.mode]
+        sig = _fingerprint(c)
+        key = make_key(rows, st.k, st.n, c.dtype, st.backend, sig)
+        hit = cache.get(key)
+        knobs_live = use_pallas is True or ops.on_tpu()
+        # Warm-cache fast path (no probe allocation) — unless the entry is
+        # an untuned off-TPU default and the knobs are live here.
+        if hit is not None and (hit.get("tuned", True) or not knobs_live):
+            bm, bn, bk = int(hit["bm"]), int(hit["bn"]), int(hit["bk"])
+        else:
+            probe = jnp.ones((rows, st.n), dtype=c.dtype)
+            bm, bn, bk = autotune_gemm(probe, c, st.backend, sig=sig,
+                                       cache=cache, use_pallas=use_pallas)
+        stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
+    return dataclasses.replace(plan, stages=tuple(stages))
+
+
+def execute_with_info(
+    plan: GemtPlan,
+    x: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    out: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Run a plan; returns ``(y, info)`` with per-stage dispatch accounting."""
+    cs = {1: c1, 2: c2, 3: c3}
+    y = x
+    stage_infos = []
+    for st in plan.stages:
+        y, info = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
+        stage_infos.append(info)
+    if out is not None:
+        y = out + y
+    dense = sum(i.get("blocks_dense", 0) for i in stage_infos)
+    live = sum(i.get("blocks_live", 0) for i in stage_infos)
+    info = {
+        "order": plan.order,
+        "backends": plan.backends,
+        "macs": plan.macs,
+        "macs_effective": plan.macs_effective,
+        "stages": stage_infos,
+        "fetch_savings": (1.0 - live / dense) if dense else 0.0,
+    }
+    return y, info
+
+
+def execute(plan, x, c1, c2, c3, out=None, *, use_pallas=None):
+    """Run a plan, result only."""
+    y, _ = execute_with_info(plan, x, c1, c2, c3, out, use_pallas=use_pallas)
+    return y
+
+
+def gemt3_planned(
+    x: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    *,
+    out: jnp.ndarray | None = None,  # keyword-only: gemt3's 5th positional
+    order: tuple[int, int, int] | None = None,  # is `order`, not `out`
+    esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
+    block_sizes: tuple[int, int, int] | None = None,
+    autotune: bool = False,
+    autotune_cache: AutotuneCache | str | None = None,
+    use_pallas: bool | None = None,
+    with_info: bool = False,
+):
+    """Planned three-mode GEMT ẍ = X ×₁C1 ×₂C2 ×₃C3 (+ out).
+
+    Numerically equivalent to :func:`repro.core.gemt.gemt3` (any order gives
+    the same result up to float rounding) but the stage order, per-stage
+    dense/block-sparse backend and kernel tile sizes are chosen by the cost
+    model instead of hard-coded.  ``x`` may carry a leading batch axis.
+    """
+    plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
+                      esop_threshold=esop_threshold, block_sizes=block_sizes)
+    if autotune:
+        cache = (autotune_cache if isinstance(autotune_cache, AutotuneCache)
+                 else AutotuneCache(autotune_cache))
+        batch = int(x.shape[0]) if x.ndim == 4 else 1
+        plan = _autotuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch, cache,
+                               use_pallas)
+    y, info = execute_with_info(plan, x, c1, c2, c3, out,
+                                use_pallas=use_pallas)
+    return (y, info) if with_info else y

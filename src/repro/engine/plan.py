@@ -1,0 +1,308 @@
+"""GEMT schedule planner — cost model over the six stage orders (paper §3).
+
+The paper enumerates six parenthesizations of the 3-stage GEMT; with
+rectangular coefficient matrices (Tucker expansion/compression, §2.3) the
+order changes both the MAC count and the intermediate-tensor sizes by large
+factors — contracting compressive modes (K_s < N_s) first shrinks everything
+downstream.  Deinsum-style planning: the cost of contracting mode ``s`` on a
+tensor of current dims ``d`` is
+
+    MACs(s) = prod(d) / d[s] * N_s * K_s        (rows · N_s · K_s)
+
+and the intermediate after the stage has ``d[s] -> K_s``.  The planner
+scores every order by (effective MACs, peak intermediate bytes) and also
+chooses a per-stage backend from the coefficient matrix's *block* sparsity
+(``block_nonzero_mask``, shared with the Pallas block-ESOP kernel):
+
+  * ``esop``    — zero-block fraction >= ``esop_threshold``: the block-ESOP
+                  kernel skips fetching/multiplying those blocks, so the
+                  stage's effective MACs scale by the live-block fraction;
+  * ``sr_gemm`` — dense streaming outer-product kernel;
+  * ``einsum``  — fallback for complex dtypes (DFT) and tiny operands where
+                  kernel/padding overhead dominates.
+
+``build_plan`` is pure and host-side: it never touches device values beyond
+reading the coefficient matrices' zero structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.esop import block_nonzero_mask
+
+__all__ = [
+    "StagePlan",
+    "GemtPlan",
+    "build_plan",
+    "order_costs",
+    "macs_for_order",
+    "sparsity_signature",
+    "DEFAULT_ESOP_THRESHOLD",
+    "MIN_KERNEL_DIM",
+]
+
+DEFAULT_ESOP_THRESHOLD = 0.3  # zero-block fraction at which block-ESOP wins
+MIN_KERNEL_DIM = 8  # below this, padding overhead beats the kernels
+
+
+def _pow2_clamp(d: int, lo: int = 8, hi: int = 128) -> int:
+    """Largest power of two <= d, clamped to [lo, hi]."""
+    if d <= lo:
+        return lo
+    return min(hi, 1 << (int(d).bit_length() - 1))
+
+
+def _pad_up(d: int, b: int) -> int:
+    return -(-d // b) * b
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One lowered mode-s contraction: ``(rows, N_s) @ (N_s, K_s)``."""
+
+    mode: int  # which tensor mode (1, 2, 3) this stage contracts
+    n: int  # contraction extent N_s
+    k: int  # output extent K_s
+    rows: int  # unfolded GEMM rows (prod of untouched dims, excl. batch)
+    backend: str  # "sr_gemm" | "esop" | "einsum"
+    macs: int  # dense MACs = rows * n * k
+    macs_effective: int  # after live-block scaling (== macs unless esop)
+    zero_block_frac: float  # fraction of (bk, bn) blocks of C_s that are 0
+    bm: int
+    bn: int
+    bk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class GemtPlan:
+    """A fully scheduled 3-stage GEMT: order + per-stage lowering choices."""
+
+    order: tuple[int, int, int]
+    stages: tuple[StagePlan, ...]
+    in_shape: tuple[int, int, int]
+    out_shape: tuple[int, int, int]
+    macs: int  # total dense MACs over the three stages
+    macs_effective: int  # with block-sparsity scaling
+    peak_intermediate_bytes: int
+    key: str  # cache key this plan was built under
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["stages"] = [dataclasses.asdict(s) for s in self.stages]
+        return d
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        return tuple(s.backend for s in self.stages)
+
+
+def macs_for_order(
+    dims: tuple[int, int, int],
+    ks: tuple[int, int, int],
+    order: tuple[int, int, int],
+) -> int:
+    """Dense MAC count of staging ``order`` on input dims with C_s: N_s→K_s."""
+    d = list(dims)
+    total = 0
+    for mode in order:
+        rows = math.prod(d) // d[mode - 1]
+        total += rows * dims[mode - 1] * ks[mode - 1]
+        d[mode - 1] = ks[mode - 1]
+    return total
+
+
+def sparsity_signature(cs: dict[int, jnp.ndarray],
+                       blocks: dict[int, tuple[int, int]]) -> str:
+    """Stable digest of the coefficient matrices' block-zero structure.
+
+    Two problems with the same shapes but different zero patterns must not
+    share an autotune/plan cache entry — the ESOP schedule differs.
+    """
+    h = hashlib.sha1()
+    for mode in (1, 2, 3):
+        c = cs[mode]
+        bk, bn = blocks[mode]
+        mask = np.asarray(_padded_block_mask(c, bk, bn))
+        h.update(f"{mode}:{c.shape}:{bk}x{bn}:".encode())
+        h.update(np.packbits(mask).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _padded_block_mask(c: jnp.ndarray, bk: int, bn: int) -> jnp.ndarray:
+    n, k = c.shape
+    pad = ((0, (-n) % bk), (0, (-k) % bn))
+    cp = jnp.pad(c, pad) if any(p[1] for p in pad) else c
+    return block_nonzero_mask(cp, (bk, bn))
+
+
+def _stage_blocks(rows: int, n: int, k: int,
+                  block_sizes: tuple[int, int, int] | None) -> tuple[int, int, int]:
+    if block_sizes is not None:
+        return block_sizes
+    # Default: MXU-aligned 128, shrunk (power of two) for small operands so
+    # block-sparsity detection and padding stay proportionate.
+    return (_pow2_clamp(rows), _pow2_clamp(k), _pow2_clamp(n))
+
+
+def _plan_stage(
+    mode: int,
+    rows: int,
+    c: jnp.ndarray,
+    *,
+    batch: int,
+    esop_threshold: float,
+    block_sizes: tuple[int, int, int] | None,
+    mask_cache: dict[int, np.ndarray] | None = None,
+) -> StagePlan:
+    n, k = c.shape
+    # The lowering folds any batch axis into the GEMM rows, so backend and
+    # tile choices must see the batched row count (a large batch of skinny
+    # tensors is still a big GEMM).  MAC fields stay per-sample: the batch
+    # scales every order equally and cancels in the order search.
+    rows_total = rows * max(batch, 1)
+    bm, bn, bk = _stage_blocks(rows_total, n, k, block_sizes)
+    dense_macs = rows * n * k
+
+    if jnp.iscomplexobj(c):
+        # The Pallas kernels are real-valued; DFT stages stay on einsum.
+        return StagePlan(mode, n, k, rows, "einsum", dense_macs, dense_macs,
+                         0.0, bm, bn, bk)
+
+    # (bk, bn) depend only on C's shape, never on the stage order, so the
+    # mask (a device pad + host sync) is shared across all six candidates.
+    if mask_cache is not None and mode in mask_cache:
+        mask = mask_cache[mode]
+    else:
+        mask = np.asarray(_padded_block_mask(c, bk, bn))
+        if mask_cache is not None:
+            mask_cache[mode] = mask
+    zero_frac = 1.0 - float(mask.mean()) if mask.size else 0.0
+
+    if min(rows_total, n, k) < MIN_KERNEL_DIM:
+        backend = "einsum"
+        eff = dense_macs
+    elif zero_frac >= esop_threshold:
+        backend = "esop"
+        # Live blocks bound the executed MACs (block granularity on the
+        # streamed C grid; rows scale both sides equally, so they stay
+        # unpadded — padding them to bm would saturate the discount to
+        # dense for small-row/batched stages).
+        padded_c = _pad_up(n, bk) * _pad_up(k, bn)
+        eff = min(dense_macs, int(rows * padded_c * float(mask.mean())))
+    else:
+        backend = "sr_gemm"
+        eff = dense_macs
+    return StagePlan(mode, n, k, rows, backend, dense_macs, eff, zero_frac,
+                     bm, bn, bk)
+
+
+def _plan_for_order(
+    dims: tuple[int, int, int],
+    cs: dict[int, jnp.ndarray],
+    order: tuple[int, int, int],
+    *,
+    batch: int,
+    itemsize: int,
+    esop_threshold: float,
+    block_sizes: tuple[int, int, int] | None,
+    mask_cache: dict[int, np.ndarray] | None = None,
+) -> tuple[tuple[StagePlan, ...], int, int, int]:
+    d = list(dims)
+    stages = []
+    peak_bytes = 0
+    for mode in order:
+        rows = math.prod(d) // d[mode - 1]
+        stages.append(_plan_stage(mode, rows, cs[mode], batch=batch,
+                                  esop_threshold=esop_threshold,
+                                  block_sizes=block_sizes,
+                                  mask_cache=mask_cache))
+        d[mode - 1] = cs[mode].shape[1]
+        peak_bytes = max(peak_bytes, math.prod(d) * itemsize)
+    macs = sum(s.macs for s in stages)
+    eff = sum(s.macs_effective for s in stages)
+    return tuple(stages), macs, eff, peak_bytes
+
+
+def order_costs(
+    dims: tuple[int, int, int],
+    cs: dict[int, jnp.ndarray],
+    *,
+    batch: int = 1,
+    itemsize: int = 4,
+    esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
+    block_sizes: tuple[int, int, int] | None = None,
+) -> dict[tuple[int, int, int], dict]:
+    """Cost-model summary for all six orders (introspection/benchmarks)."""
+    out = {}
+    mask_cache: dict[int, np.ndarray] = {}
+    for order in itertools.permutations((1, 2, 3)):
+        _, macs, eff, peak = _plan_for_order(
+            dims, cs, order, batch=batch, itemsize=itemsize,
+            esop_threshold=esop_threshold, block_sizes=block_sizes,
+            mask_cache=mask_cache)
+        out[order] = {"macs": macs, "macs_effective": eff,
+                      "peak_intermediate_bytes": peak}
+    return out
+
+
+def build_plan(
+    x_shape: tuple[int, ...],
+    x_dtype,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    *,
+    order: tuple[int, int, int] | None = None,
+    esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
+    block_sizes: tuple[int, int, int] | None = None,
+) -> GemtPlan:
+    """Plan a 3-stage GEMT for a tensor of ``x_shape`` (3D, or 4D batched).
+
+    ``order=None`` searches all six parenthesizations and keeps the one with
+    minimal (effective MACs, peak intermediate bytes); passing an explicit
+    order pins it (the paper's reference chain is ``(3, 1, 2)``).
+    """
+    dims = tuple(int(d) for d in x_shape[-3:])
+    if len(x_shape) not in (3, 4):
+        raise ValueError(f"x must be 3D or 4D-batched, got shape {x_shape}")
+    batch = int(x_shape[0]) if len(x_shape) == 4 else 1
+    cs = {1: c1, 2: c2, 3: c3}
+    for mode in (1, 2, 3):
+        if cs[mode].ndim != 2 or cs[mode].shape[0] != dims[mode - 1]:
+            raise ValueError(
+                f"C{mode} shape {cs[mode].shape} incompatible with mode "
+                f"extent {dims[mode - 1]}")
+    itemsize = jnp.dtype(x_dtype).itemsize * max(batch, 1)
+
+    candidates = ([tuple(order)] if order is not None
+                  else list(itertools.permutations((1, 2, 3))))
+    best = None
+    mask_cache: dict[int, np.ndarray] = {}
+    for cand in candidates:
+        if sorted(cand) != [1, 2, 3]:
+            raise ValueError(f"order must be a permutation of (1,2,3), got {cand}")
+        stages, macs, eff, peak = _plan_for_order(
+            dims, cs, cand, batch=batch, itemsize=itemsize,
+            esop_threshold=esop_threshold, block_sizes=block_sizes,
+            mask_cache=mask_cache)
+        score = (eff, peak, cand)
+        if best is None or score < best[0]:
+            best = (score, cand, stages, macs, eff, peak)
+    _, chosen, stages, macs, eff, peak = best
+
+    out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
+    blocks = {s.mode: (s.bk, s.bn) for s in stages}
+    key = "|".join([
+        f"x={tuple(x_shape)}", f"dt={jnp.dtype(x_dtype).name}",
+        f"o={chosen}", f"th={esop_threshold}",
+        f"bs={block_sizes}", f"sig={sparsity_signature(cs, blocks)}",
+    ])
+    return GemtPlan(order=chosen, stages=stages, in_shape=dims,
+                    out_shape=out_shape, macs=macs, macs_effective=eff,
+                    peak_intermediate_bytes=peak, key=key)

@@ -13,12 +13,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..memo import ArrayMemo
 from . import ref
 from .attention import flash_attention_pallas
-from .esop_gemm import esop_gemm_pallas
+from .esop_gemm import esop_gemm_pallas, esop_plan
 from .sr_gemm import sr_gemm_pallas
 
 __all__ = ["sr_gemm", "esop_gemm", "flash_attention", "on_tpu"]
+
+_ESOP_INFO_MEMO = ArrayMemo()  # per-C-identity block stats (host-side loop)
+
+
+def _esop_ref_info(c: jnp.ndarray, bk: int, bn: int) -> dict:
+    """Block-ESOP accounting for the reference path, memoized on C.
+
+    The stats only depend on C's zero structure; recomputing the host-side
+    ``esop_plan`` loop per call would dominate small GEMMs and skew
+    autotune timings.
+    """
+    def compute():
+        cp = _pad_to(c, (bk, bn))
+        counts, _idx, t_steps = esop_plan(cp, bk, bn)
+        dense_blocks = (cp.shape[0] // bk) * (cp.shape[1] // bn)
+        live_blocks = int(counts.sum())
+        return {
+            "blocks_dense": dense_blocks,
+            "blocks_live": live_blocks,
+            "fetch_savings": 1.0 - live_blocks / max(dense_blocks, 1),
+            "t_steps": t_steps,
+            "t_steps_dense": cp.shape[0] // bk,
+        }
+
+    return _ESOP_INFO_MEMO.get_or_compute(c, (bk, bn), compute)
 
 
 def on_tpu() -> bool:
@@ -60,7 +86,9 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
     if use_pallas is None:
         use_pallas = on_tpu()
     if use_pallas is False:
-        return ref.ref_esop_gemm(x, c, (bk, bn), out), {"fetch_savings": 0.0}
+        # Backend-independent accounting: the reference path reports the same
+        # streamed-block savings the Pallas kernel would realize.
+        return ref.ref_esop_gemm(x, c, (bk, bn), out), _esop_ref_info(c, bk, bn)
     interpret = not on_tpu()
     m, n = x.shape[0], c.shape[1]
     o = out if out is not None else jnp.zeros((m, n), dtype=x.dtype)

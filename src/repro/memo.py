@@ -1,0 +1,41 @@
+"""Identity-keyed memoization for (immutable) device arrays.
+
+jax arrays are unhashable, so plain ``lru_cache``/dict keys don't work; and
+keying on content means hashing the whole array on every lookup — exactly
+the cost the memo is supposed to avoid.  :class:`ArrayMemo` keys on
+``id(array)`` and guards against id reuse by holding a weak reference to the
+keyed object (entries self-evict when the array is collected).  Objects that
+don't support weak references (e.g. raw ``np.ndarray``) are computed but not
+cached — correct, just not memoized.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Any, Callable, Hashable
+
+__all__ = ["ArrayMemo"]
+
+
+class ArrayMemo:
+    """``(array identity, extra key) -> value`` cache with weakref eviction."""
+
+    def __init__(self):
+        self._entries: dict[tuple, tuple[weakref.ref, Any]] = {}
+
+    def get_or_compute(self, array, extra: Hashable,
+                       compute: Callable[[], Any]) -> Any:
+        key = (id(array), extra)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0]() is array:
+            return hit[1]
+        value = compute()
+        try:
+            ref = weakref.ref(array,
+                              lambda _r, k=key: self._entries.pop(k, None))
+        except TypeError:
+            return value  # not weakref-able: skip caching
+        self._entries[key] = (ref, value)
+        return value
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -64,7 +64,7 @@ def row_parallel_matmul(a: jnp.ndarray, w: jnp.ndarray, ctx: "ShardCtx",
     axis = ctx.rules.get(in_rule) if ctx.rules else None
     if ctx.mesh is None or axis is None or not ctx.rules.get("rowp"):
         return a @ w
-    from jax import shard_map
+    from ..compat import shard_map
     from jax.sharding import PartitionSpec as P
     b_ax = ctx.rules.get("batch")
 

@@ -1,1 +1,2 @@
-from .decode import ServeSession, SlotManager, build_decode_step, build_prefill_step
+from .decode import (DxtServeSession, ServeSession, SlotManager,
+                     build_decode_step, build_prefill_step)

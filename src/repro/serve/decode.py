@@ -65,6 +65,60 @@ class ServeSession:
             key, logits / self.temperature, axis=-1).astype(jnp.int32)
 
 
+@dataclasses.dataclass
+class DxtServeSession:
+    """Batched 3D-transform serving on the planned GEMT engine.
+
+    Requests are (B, N1, N2, N3) tensor batches; the engine plan (stage
+    order, backend, tile sizes) is built once per distinct (shape, kind,
+    direction) and reused — the batch axis is folded into the lowered GEMM
+    rows so each stage is a single kernel launch for the whole batch.
+    """
+
+    kind: str = "dct"
+    inverse: bool = False
+    autotune: bool = False
+    autotune_cache: Any = None  # AutotuneCache | path | None
+    use_pallas: bool | None = None
+
+    def __post_init__(self):
+        self._coeffs: dict[tuple, tuple] = {}
+        self.requests_served = 0
+        self.last_info: dict | None = None
+
+    def _coeffs_for(self, dims: tuple[int, int, int]) -> tuple:
+        key = (self.kind, self.inverse, dims)
+        if key not in self._coeffs:
+            from ..core.transforms import (coefficient_matrix,
+                                           inverse_coefficient_matrix)
+            build = (inverse_coefficient_matrix if self.inverse
+                     else coefficient_matrix)
+            self._coeffs[key] = tuple(build(self.kind, n) for n in dims)
+        return self._coeffs[key]
+
+    def transform(self, batch) -> jnp.ndarray:
+        """Apply the transform to a (B, N1, N2, N3) batch."""
+        from ..engine import gemt3_planned
+
+        x = jnp.asarray(batch)
+        if x.ndim != 4:
+            raise ValueError(f"expected (B, N1, N2, N3), got shape {x.shape}")
+        dims = tuple(int(d) for d in x.shape[1:])
+        c1, c2, c3 = self._coeffs_for(dims)
+        if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x):
+            x = x.astype(c1.dtype)
+
+        # Plans and tunings are memoized inside the engine (keyed on shape,
+        # dtype, and the coefficient matrices' identity/zero structure —
+        # the session's _coeffs dict keeps those identities stable).
+        y, info = gemt3_planned(x, c1, c2, c3, autotune=self.autotune,
+                                autotune_cache=self.autotune_cache,
+                                use_pallas=self.use_pallas, with_info=True)
+        self.requests_served += int(x.shape[0])
+        self.last_info = info
+        return y
+
+
 class SlotManager:
     """Continuous-batching bookkeeping: fixed decode slots, per-slot position,
     admit-on-free semantics.  Host-side; the device step is shape-stable."""

@@ -1,0 +1,88 @@
+"""Optional-``hypothesis`` shim: property tests run either way.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged.  On a clean interpreter a deterministic fallback runs
+each property test over a small fixed grid of examples (endpoints + midpoint
+per strategy, capped cartesian product), so the properties are still
+exercised instead of silently skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    _MAX_CASES = 12  # cap on the cartesian product of example grids
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        """Mirror of the tiny slice of ``hypothesis.strategies`` we use."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Strategy(dict.fromkeys([min_value, mid, max_value]))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            mid = (min_value + max_value) / 2.0
+            return _Strategy(dict.fromkeys([min_value, mid, max_value]))
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    st = _St()
+
+    def settings(**_kwargs):  # noqa: D103 - options are meaningless here
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def _stride(j, l):
+        # Per-strategy stride, coprime with the example count so every
+        # example still appears, varying with position j so equal-length
+        # strategies don't march in lockstep (a plain diagonal would only
+        # ever emit n1 == n2 == n3 shapes).
+        s = (j % l) + 1
+        while math.gcd(s, l) != 1:
+            s += 1
+        return s
+
+    def given(*strategies):
+        def deco(fn):
+            # Decorrelated round-robin sampling: each strategy cycles
+            # through *all* of its examples within the case budget, with
+            # mixed combinations across strategies.  (A truncated cartesian
+            # product would pin the leading strategies to their first
+            # example.)
+            lens = [len(s.examples) for s in strategies]
+            n = min(_MAX_CASES, math.lcm(*lens)) if lens else 1
+            grid = [tuple(s.examples[(i * _stride(j, l) + j) % l]
+                          for j, (s, l) in enumerate(zip(strategies, lens)))
+                    for i in range(n)]
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):  # `self` passes through *args
+                for case in grid:
+                    fn(*args, *case, **kwargs)
+
+            # Hide the strategy parameters from pytest's fixture resolution:
+            # with __wrapped__ intact pytest would read fn's signature and
+            # treat (n1, n2, ...) as missing fixtures.
+            del runner.__wrapped__
+            return runner
+
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

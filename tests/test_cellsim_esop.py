@@ -3,7 +3,7 @@ paper's time-step/MAC/energy claims and the sparsity method."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (EsopStats, block_nonzero_mask, coefficient_matrix,
                         energy_joules, esop_gemt3, gemt3, macs, prune,

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (PAREN_ORDERS, coefficient_matrix, dxt3d, gemt3,
                         gemt3_outer, hosvd, inverse_coefficient_matrix, macs,
