@@ -7,6 +7,10 @@
                         reported fetch_savings tracks the zero-block fraction
   E3 planned vs einsum  end-to-end planned execution vs the einsum chain
   E4 autotune cache     cold hill-climb vs warm JSON-cache hit
+  F1 fused GEMT         fused two-stage kernel vs staged execution on the
+                        default DCT serving shapes: wall-clock both ways and
+                        the analytic HBM-bytes-moved model (the intermediate
+                        round-trip + transpose the fusion deletes)
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import tempfile
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import gemt3
@@ -22,6 +27,29 @@ from repro.engine import (AutotuneCache, autotune_gemm, gemt3_planned,
                           macs_for_order, order_costs, plan_gemt3)
 
 from .bench_core import _t
+
+
+def _tmin_interleaved(fns, n=9):
+    """Best-of-n wall clock (us) for several callables, rounds interleaved.
+
+    Interleaving (with the within-round order alternating) means every
+    candidate sees the same drifting background load, so A/B comparisons
+    stay meaningful on noisy shared hosts where back-to-back best-of runs
+    can flip by 2x.
+    """
+    def once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())  # accepts pytrees, incl. (y, info)
+        return (time.perf_counter() - t0) * 1e6
+
+    for fn in fns:
+        once(fn)  # warmup/compile
+    best = [float("inf")] * len(fns)
+    for r in range(n):
+        order = range(len(fns)) if r % 2 == 0 else reversed(range(len(fns)))
+        for i in order:
+            best[i] = min(best[i], once(fns[i]))
+    return best
 
 
 def _tucker_problem(dims=(64, 48, 32), ranks=(4, 24, 24), seed=0):
@@ -103,3 +131,42 @@ def bench_autotune_cache(rows):
     rows.append(("E4_autotune_cache_256x256x128", cold_us,
                  f"blocks={cfg[0]}x{cfg[1]}x{cfg[2]};warm_us={warm_us:.0f};"
                  f"roundtrip_ok={cfg == cfg2}"))
+
+
+def bench_fused_gemt(rows):
+    """F1: fused vs staged on the default DCT serving shapes.
+
+    The fused kernel must be numerically equivalent, move >= 1.5x fewer
+    modeled HBM bytes (the intermediate's write/read + transpose copy it
+    deletes) and be no slower in wall-clock on every benched shape.
+    """
+    from repro.core.transforms import coefficient_matrix
+
+    rng = np.random.default_rng(7)
+    # Serving-sized (N <= 256) working sets that stay timing-stable on small
+    # shared CI hosts; the HBM model, not wall-clock, is the paper claim.
+    for batch, n in [(8, 32), (4, 64), (16, 48)]:
+        x = jnp.asarray(rng.normal(size=(batch, n, n, n)).astype(np.float32))
+        c = coefficient_matrix("dct", n)
+        staged_us, fused_us = _tmin_interleaved(
+            [lambda: gemt3_planned(x, c, c, c, fuse=False),
+             lambda: gemt3_planned(x, c, c, c)])
+        y, info = gemt3_planned(x, c, c, c, with_info=True)
+        y0 = gemt3_planned(x, c, c, c, fuse=False)
+        err = float(jnp.max(jnp.abs(y - y0)))
+        fp = info["fused"]
+        hbm_reduction = info["hbm_bytes_staged"] / max(info["hbm_bytes_moved"], 1)
+        rows.append((
+            f"F1_fused_gemt_B{batch}_N{n}", fused_us,
+            f"staged_us={staged_us:.1f};"
+            f"speedup={staged_us / max(fused_us, 1e-9):.2f}x;"
+            f"wallclock_no_worse={fused_us <= staged_us};"
+            f"fused={fp is not None};"
+            f"modes={fp['modes'] if fp else None};"
+            f"hbm_bytes_staged={info['hbm_bytes_staged']};"
+            f"hbm_bytes_moved={info['hbm_bytes_moved']};"
+            f"hbm_reduction={hbm_reduction:.2f}x;"
+            f"hbm_reduction_ge_1.5={hbm_reduction >= 1.5};"
+            f"pair_savings={fp['hbm_savings'] if fp else 0:.2f}x;"
+            f"vmem_bytes={fp['vmem_bytes'] if fp else 0};"
+            f"max_abs_err={err:.1e}"))

@@ -1,52 +1,88 @@
 # One function per paper claim/table. Prints ``name,us_per_call,derived`` CSV;
-# ``--json OUT`` additionally writes the rows as a JSON artifact (e.g.
-# ``BENCH_engine.json``) for the perf trajectory.
+# ``--json`` additionally writes the rows as a JSON artifact whose path comes
+# from ``--out PATH`` (or ``--json PATH`` for backward compatibility), e.g.
+#
+#   python -m benchmarks.run --json BENCH_engine.json
+#   python -m benchmarks.run --filter fused --json --out BENCH_fused_gemt.json
+#
+# ``--filter SUBSTR`` runs only the bench functions whose name contains the
+# substring (cheap CI artifacts without paying for the whole sweep).
 from __future__ import annotations
 
 import argparse
 import json
 
 
-def collect_rows() -> list[tuple[str, float, str]]:
-    rows: list[tuple[str, float, str]] = []
+def _benches():
     from . import (bench_core, bench_distributed, bench_engine, bench_kernels,
                    bench_roofline)
 
-    bench_core.bench_linear_timesteps(rows)
-    bench_core.bench_esop_savings(rows)
-    bench_core.bench_esop_accuracy(rows)
-    bench_core.bench_staged_vs_elementwise(rows)
-    bench_core.bench_generality(rows)
-    bench_kernels.bench_sr_gemm_structure(rows)
-    bench_kernels.bench_esop_plan(rows)
-    bench_kernels.bench_xla_gemm_baseline(rows)
-    bench_distributed.bench_strong_scaling_model(rows)
-    bench_distributed.bench_shardmap_vs_auto(rows)
-    bench_roofline.bench_roofline_summary(rows)
-    bench_engine.bench_planner_order(rows)
-    bench_engine.bench_esop_dispatch(rows)
-    bench_engine.bench_planned_vs_einsum(rows)
-    bench_engine.bench_autotune_cache(rows)
+    return [
+        bench_core.bench_linear_timesteps,
+        bench_core.bench_esop_savings,
+        bench_core.bench_esop_accuracy,
+        bench_core.bench_staged_vs_elementwise,
+        bench_core.bench_generality,
+        bench_kernels.bench_sr_gemm_structure,
+        bench_kernels.bench_esop_plan,
+        bench_kernels.bench_xla_gemm_baseline,
+        bench_distributed.bench_strong_scaling_model,
+        bench_distributed.bench_shardmap_vs_auto,
+        bench_roofline.bench_roofline_summary,
+        bench_engine.bench_planner_order,
+        bench_engine.bench_esop_dispatch,
+        bench_engine.bench_planned_vs_einsum,
+        bench_engine.bench_autotune_cache,
+        bench_engine.bench_fused_gemt,
+    ]
+
+
+def collect_rows(name_filter: str | None = None) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    for fn in _benches():
+        if name_filter and name_filter not in fn.__name__:
+            continue
+        fn(rows)
     return rows
 
 
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", metavar="OUT", default=None,
-                    help="also write rows as a JSON artifact "
-                         "(e.g. BENCH_engine.json)")
+    ap.add_argument("--json", metavar="OUT", nargs="?", const=True,
+                    default=None,
+                    help="also write rows as a JSON artifact (path from "
+                         "--out, or given directly for compatibility)")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="JSON artifact path (implies --json; "
+                         "e.g. BENCH_fused_gemt.json)")
+    ap.add_argument("--filter", metavar="SUBSTR", default=None,
+                    help="only run bench functions whose name contains this")
     args = ap.parse_args(argv)
 
-    rows = collect_rows()
+    # Resolve the artifact path before the sweep runs — a bad flag combo
+    # must not waste minutes of benchmarking before erroring out.
+    path = None
+    if args.json or args.out:  # --out alone implies the JSON artifact
+        if isinstance(args.json, str) and args.out:
+            ap.error("give the artifact path via --json PATH or --out PATH, "
+                     "not both")
+        path = args.out or (args.json if isinstance(args.json, str) else None)
+        if path is None:
+            ap.error("--json without a path requires --out PATH")
+
+    rows = collect_rows(args.filter)
+    if args.filter and not rows:
+        ap.error(f"--filter {args.filter!r} matched no bench function "
+                 "(artifact would be empty)")
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
-    if args.json:
-        with open(args.json, "w") as f:
+    if path:
+        with open(path, "w") as f:
             json.dump([{"name": n, "us_per_call": round(us, 1), "derived": d}
                        for n, us, d in rows], f, indent=1)
-        print(f"# wrote {len(rows)} rows to {args.json}")
+        print(f"# wrote {len(rows)} rows to {path}")
 
 
 if __name__ == "__main__":

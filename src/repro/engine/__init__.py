@@ -6,18 +6,26 @@ problem's shapes and block sparsity, lowers each mode contraction to a 2D
 GEMM on the Pallas kernels, and tunes tile sizes against a persisted cache.
 See ``docs/engine.md``.
 """
-from .plan import (DEFAULT_ESOP_THRESHOLD, GemtPlan, StagePlan, build_plan,
-                   macs_for_order, order_costs, sparsity_signature)
-from .lower import lower_stage, mode_fold, mode_unfold
-from .autotune import AutotuneCache, autotune_gemm, default_cache_path, make_key
+from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FusedPairPlan,
+                   GemtPlan, StagePlan, build_plan, fused_tile_sizes,
+                   fused_vmem_bytes, macs_for_order, order_costs,
+                   plan_hbm_bytes, refresh_fused_pair, sparsity_signature,
+                   stage_hbm_bytes, staged_pair_hbm_bytes)
+from .lower import lower_fused_pair, lower_stage, mode_fold, mode_unfold
+from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
+                       default_cache_path, make_fused_key, make_key)
 from .executor import (clear_plan_cache, execute, execute_with_info,
                        gemt3_planned, plan_cache_info, plan_gemt3)
 
 __all__ = [
-    "DEFAULT_ESOP_THRESHOLD", "GemtPlan", "StagePlan", "build_plan",
-    "macs_for_order", "order_costs", "sparsity_signature",
-    "lower_stage", "mode_fold", "mode_unfold",
-    "AutotuneCache", "autotune_gemm", "default_cache_path", "make_key",
+    "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FusedPairPlan",
+    "GemtPlan", "StagePlan", "build_plan", "fused_tile_sizes",
+    "fused_vmem_bytes", "macs_for_order", "order_costs", "plan_hbm_bytes",
+    "refresh_fused_pair", "sparsity_signature", "stage_hbm_bytes",
+    "staged_pair_hbm_bytes",
+    "lower_fused_pair", "lower_stage", "mode_fold", "mode_unfold",
+    "AutotuneCache", "autotune_fused", "autotune_gemm", "default_cache_path",
+    "make_fused_key", "make_key",
     "clear_plan_cache", "execute", "execute_with_info", "gemt3_planned",
     "plan_cache_info", "plan_gemt3",
 ]

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from ..kernels import ops
 
-__all__ = ["AutotuneCache", "autotune_gemm", "default_cache_path", "make_key"]
+__all__ = ["AutotuneCache", "autotune_gemm", "autotune_fused",
+           "default_cache_path", "make_key", "make_fused_key"]
 
 _BOUNDS = (8, 512)  # power-of-two block-size lattice bounds
 _MIN_GAIN = 0.02  # relative speedup required to accept a move
@@ -40,6 +41,11 @@ def default_cache_path() -> str:
 
 def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "") -> str:
     return f"{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{sig}"
+
+
+def make_fused_key(u: int, na: int, ka: int, nb: int, kb: int,
+                   dtype, sig: str = "") -> str:
+    return f"fused:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}|{sig}"
 
 
 class AutotuneCache:
@@ -176,4 +182,99 @@ def autotune_gemm(
         cache.save()
     except OSError:
         pass  # read-only FS: tuning still applies in-process
+    return cur
+
+
+def autotune_fused(
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    *,
+    rows: int,
+    dtype,
+    start: tuple[int, int, int],
+    bna: int,
+    kbp: int,
+    sig: str = "",
+    cache: AutotuneCache | None = None,
+    max_steps: int = 4,
+    reps: int = 2,
+    use_pallas: bool | None = None,
+    vmem_budget: int | None = None,
+) -> tuple[int, int, int]:
+    """Hill-climb the fused kernel's ``(bu, bka, bnb)`` tile triple.
+
+    ``rows``/``dtype`` describe the u-major input ``(rows, Nb, Na)``; the
+    ones-probe is only materialized when a measurement actually runs, so a
+    warm cache costs no device allocation.  ``start`` is the planner's
+    (VMEM-feasible) choice; every candidate is re-checked against the
+    footprint model so tuning can never climb out of the budget.
+    ``bna``/``kbp`` stay pinned (Kb is not grid-blocked and the na tile
+    only trades partial-width for step count).
+    """
+    from .plan import DEFAULT_VMEM_BUDGET, fused_vmem_bytes
+
+    u = int(rows)
+    na, ka = ca.shape
+    nb, kb = cb.shape
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    cache = cache if cache is not None else AutotuneCache()
+    # bna/kbp/budget are part of the problem: a hit tuned under a roomier
+    # budget (or a different pinned na tile) must not leak oversized tiles
+    # into a stricter run.
+    key = (make_fused_key(u, na, ka, nb, kb, dtype, sig)
+           + f"|bna{bna}|kbp{kbp}|vb{budget}")
+    isz = jnp.dtype(dtype).itemsize
+    lo, _hi = _BOUNDS
+    caps = tuple(max(lo, _pow2_floor(d)) for d in (u, ka, nb))
+
+    def fits(cfg):
+        return fused_vmem_bytes(cfg[0], cfg[1], cfg[2], bna, kbp,
+                                isz) <= budget
+
+    knobs_live = use_pallas is True or ops.on_tpu()
+    hit = cache.get(key)
+    if hit is not None and (hit.get("tuned", True) or not knobs_live):
+        cfg = (int(hit["bu"]), int(hit["bka"]), int(hit["bnb"]))
+        if fits(cfg):  # belt-and-braces: never trust a cache into VMEM OOM
+            return cfg
+
+    cur = tuple(start)
+    if not knobs_live:
+        cache.put(key, {"bu": cur[0], "bka": cur[1], "bnb": cur[2],
+                        "us": 0.0, "kind": "fused", "tuned": False})
+        try:
+            cache.save()
+        except OSError:
+            pass
+        return cur
+
+    x3 = jnp.ones((u, nb, na), dtype=dtype)  # probe: measured path only
+
+    def measure(cfg):
+        bu, bka, bnb = cfg
+
+        def call():
+            y, _ = ops.fused_gemt(x3, ca, cb, bu=bu, bka=bka, bnb=bnb,
+                                  bna=bna, use_pallas=use_pallas)
+            return y
+
+        return _time_us(call, reps=reps)
+
+    cur_us = measure(cur)
+    for _ in range(max_steps):
+        moved = False
+        for cand in _neighbors(cur, caps):
+            if not fits(cand):
+                continue
+            us = measure(cand)
+            if us < cur_us * (1.0 - _MIN_GAIN):
+                cur, cur_us, moved = cand, us, True
+        if not moved:
+            break
+    cache.put(key, {"bu": cur[0], "bka": cur[1], "bnb": cur[2],
+                    "us": round(cur_us, 2), "kind": "fused", "tuned": True})
+    try:
+        cache.save()
+    except OSError:
+        pass
     return cur

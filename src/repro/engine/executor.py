@@ -17,9 +17,11 @@ import numpy as np
 
 from ..kernels import ops
 from ..memo import ArrayMemo
-from .autotune import AutotuneCache, autotune_gemm, make_key
-from .lower import lower_stage
-from .plan import DEFAULT_ESOP_THRESHOLD, GemtPlan, build_plan
+from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
+                       make_key)
+from .lower import lower_fused_pair, lower_stage
+from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, GemtPlan,
+                   build_plan, plan_hbm_bytes, refresh_fused_pair)
 
 __all__ = [
     "plan_gemt3",
@@ -31,6 +33,7 @@ __all__ = [
 ]
 
 _PLAN_CACHE: dict[tuple, GemtPlan] = {}
+_TUNED_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # post-autotune variants
 _FP_MEMO = ArrayMemo()  # per-array-identity digests: plan-cache hits stay cheap
 
 
@@ -51,10 +54,11 @@ def _fingerprint(c: jnp.ndarray) -> str:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _TUNED_PLAN_CACHE.clear()
 
 
 def plan_cache_info() -> dict:
-    return {"entries": len(_PLAN_CACHE)}
+    return {"entries": len(_PLAN_CACHE), "tuned": len(_TUNED_PLAN_CACHE)}
 
 
 def plan_gemt3(
@@ -67,19 +71,22 @@ def plan_gemt3(
     order: tuple[int, int, int] | None = None,
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
+    fuse: bool | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
 ) -> GemtPlan:
     """Build (or fetch) the plan for this problem; memoized in-process."""
     key = (
         tuple(x_shape), jnp.dtype(x_dtype).name,
         tuple(order) if order is not None else None,
-        esop_threshold, block_sizes,
+        esop_threshold, block_sizes, fuse, vmem_budget,
         _fingerprint(c1), _fingerprint(c2), _fingerprint(c3),
     )
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
                           esop_threshold=esop_threshold,
-                          block_sizes=block_sizes)
+                          block_sizes=block_sizes, fuse=fuse,
+                          vmem_budget=vmem_budget)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -90,11 +97,16 @@ def _autotuned_plan(
     batch: int,
     cache: AutotuneCache,
     use_pallas: bool | None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    x_dtype=jnp.float32,
 ) -> GemtPlan:
-    """Replace each kernel stage's block sizes with tuned ones."""
+    """Replace each kernel stage's (and the fused pair's) tiles with tuned ones."""
+    fused_idx = (set() if plan.fused is None
+                 else {plan.fused.first, plan.fused.first + 1})
     stages = []
-    for st in plan.stages:
-        if st.backend == "einsum":
+    for i, st in enumerate(plan.stages):
+        if st.backend == "einsum" or i in fused_idx:
+            # fused stages never run their staged tiles — don't probe them
             stages.append(st)
             continue
         rows = st.rows * max(batch, 1)
@@ -112,7 +124,30 @@ def _autotuned_plan(
             bm, bn, bk = autotune_gemm(probe, c, st.backend, sig=sig,
                                        cache=cache, use_pallas=use_pallas)
         stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
-    return dataclasses.replace(plan, stages=tuple(stages))
+
+    fused = plan.fused
+    isz = jnp.dtype(x_dtype).itemsize
+    if fused is not None:
+        ca, cb = cs[fused.mode_a], cs[fused.mode_b]
+        bu, bka, bnb = autotune_fused(
+            ca, cb, rows=fused.rows * max(batch, 1), dtype=x_dtype,
+            start=(fused.bu, fused.bka, fused.bnb),
+            bna=fused.bna, kbp=fused.kbp,
+            sig=f"{_fingerprint(ca)}:{_fingerprint(cb)}", cache=cache,
+            use_pallas=use_pallas, vmem_budget=vmem_budget)
+        if (bu, bka, bnb) != (fused.bu, fused.bka, fused.bnb):
+            fused = refresh_fused_pair(
+                dataclasses.replace(fused, bu=bu, bka=bka, bnb=bnb),
+                ca, cb, batch, isz)
+    # Tuning moved tiles, so the byte model must be re-evaluated on what
+    # will actually run — stale numbers describe a configuration that never
+    # executes (the revisit factors depend on bm/bn and the fused tiles).
+    # x's itemsize keeps the units identical to build_plan's model.
+    stages_t = tuple(stages)
+    return dataclasses.replace(
+        plan, stages=stages_t, fused=fused,
+        hbm_bytes_staged=plan_hbm_bytes(stages_t, None, batch, isz),
+        hbm_bytes_moved=plan_hbm_bytes(stages_t, fused, batch, isz))
 
 
 def execute_with_info(
@@ -125,24 +160,56 @@ def execute_with_info(
     *,
     use_pallas: bool | None = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Run a plan; returns ``(y, info)`` with per-stage dispatch accounting."""
+    """Run a plan; returns ``(y, info)`` with per-stage dispatch accounting.
+
+    When the plan carries a fused pair, those two stages run as one fused
+    kernel launch (``info["fused"]`` reports its modes, VMEM footprint and
+    the modeled pair-traffic saving); the surrounding stages run staged.
+    ``info["hbm_bytes_moved"]`` / ``"hbm_bytes_staged"`` expose the modeled
+    traffic of the executed vs. the all-staged schedule.
+    """
     cs = {1: c1, 2: c2, 3: c3}
     y = x
     stage_infos = []
-    for st in plan.stages:
-        y, info = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
-        stage_infos.append(info)
+    fused_info = None
+    i = 0
+    while i < len(plan.stages):
+        if plan.fused is not None and i == plan.fused.first:
+            fp = plan.fused
+            y, finfo = lower_fused_pair(y, cs[fp.mode_a], cs[fp.mode_b], fp,
+                                        use_pallas=use_pallas)
+            stage_infos.append(finfo)
+            fused_info = finfo
+            i += 2
+            continue
+        st = plan.stages[i]
+        y, sinfo = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
+        stage_infos.append(sinfo)
+        i += 1
     if out is not None:
         y = out + y
-    dense = sum(i.get("blocks_dense", 0) for i in stage_infos)
-    live = sum(i.get("blocks_live", 0) for i in stage_infos)
+    # Aggregate fetch savings over *staged* stages only: the fused pair's
+    # counts live in a product space (C_a blocks × C_b slabs) whose units
+    # don't sum with per-stage grids — its own savings are under
+    # info["fused"]["fetch_savings"].
+    staged_infos = [i for i in stage_infos if i.get("backend") != "fused"]
+    dense = sum(i.get("blocks_dense", 0) for i in staged_infos)
+    live = sum(i.get("blocks_live", 0) for i in staged_infos)
     info = {
         "order": plan.order,
-        "backends": plan.backends,
+        "backends": plan.backends,  # the per-stage (staged-fallback) plan
+        # what actually ran: the fused pair collapses to one entry
+        "backends_executed": tuple(
+            ("fused" + str(i["modes"]) if i.get("backend") == "fused"
+             else i["backend"]) for i in stage_infos),
         "macs": plan.macs,
         "macs_effective": plan.macs_effective,
         "stages": stage_infos,
-        "fetch_savings": (1.0 - live / dense) if dense else 0.0,
+        "fused": fused_info,
+        "hbm_bytes_staged": plan.hbm_bytes_staged,
+        "hbm_bytes_moved": plan.hbm_bytes_moved,
+        "fetch_savings": ((1.0 - live / dense) if dense
+                          else (fused_info or {}).get("fetch_savings", 0.0)),
     }
     return y, info
 
@@ -163,6 +230,8 @@ def gemt3_planned(
     order: tuple[int, int, int] | None = None,  # is `order`, not `out`
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
+    fuse: bool | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
     autotune: bool = False,
     autotune_cache: AutotuneCache | str | None = None,
     use_pallas: bool | None = None,
@@ -172,17 +241,32 @@ def gemt3_planned(
 
     Numerically equivalent to :func:`repro.core.gemt.gemt3` (any order gives
     the same result up to float rounding) but the stage order, per-stage
-    dense/block-sparse backend and kernel tile sizes are chosen by the cost
-    model instead of hard-coded.  ``x`` may carry a leading batch axis.
+    dense/block-sparse backend, stage fusion (``fuse=None`` auto-fuses the
+    pair with the largest modeled HBM saving whose tiles fit
+    ``vmem_budget``) and kernel tile sizes are chosen by the cost model
+    instead of hard-coded.  ``x`` may carry a leading batch axis.
     """
     plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
-                      esop_threshold=esop_threshold, block_sizes=block_sizes)
+                      esop_threshold=esop_threshold, block_sizes=block_sizes,
+                      fuse=fuse, vmem_budget=vmem_budget)
     if autotune:
         cache = (autotune_cache if isinstance(autotune_cache, AutotuneCache)
                  else AutotuneCache(autotune_cache))
         batch = int(x.shape[0]) if x.ndim == 4 else 1
-        plan = _autotuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch, cache,
-                               use_pallas)
+        # Memoize the tuned variant: a warm hot loop must not pay the
+        # cache probes + fused-mask refresh (a device pad + host sync)
+        # per call.  plan.key only digests the zero *structure*, so the
+        # content fingerprints are added — different coefficient matrices
+        # of identical sparsity must still tune under their own sigs.
+        tkey = (plan.key, cache.path, batch, use_pallas,
+                _fingerprint(c1), _fingerprint(c2), _fingerprint(c3))
+        tuned = _TUNED_PLAN_CACHE.get(tkey)
+        if tuned is None:
+            tuned = _autotuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch,
+                                    cache, use_pallas,
+                                    vmem_budget=vmem_budget, x_dtype=x.dtype)
+            _TUNED_PLAN_CACHE[tkey] = tuned
+        plan = tuned
     y, info = execute_with_info(plan, x, c1, c2, c3, out,
                                 use_pallas=use_pallas)
     return (y, info) if with_info else y

@@ -13,9 +13,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..kernels import ops
-from .plan import StagePlan
+from .plan import FusedPairPlan, StagePlan
 
-__all__ = ["mode_unfold", "mode_fold", "lower_stage"]
+__all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair"]
 
 
 def mode_unfold(x: jnp.ndarray, mode: int) -> tuple[jnp.ndarray, tuple[int, ...]]:
@@ -68,3 +68,39 @@ def lower_stage(
     else:
         raise ValueError(f"unknown backend {stage.backend!r}")
     return mode_fold(y2d, lead, stage.mode), info
+
+
+def lower_fused_pair(
+    x: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    fp: FusedPairPlan,
+    *,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Execute a fused consecutive stage pair.  Returns ``(y, info)``.
+
+    Unfolds ``x`` into the u-major ``(U, Nb, Na)`` layout the fused kernel
+    streams (batch and the untouched mode fold into U), runs both
+    contractions in one launch — the stage-a partial never leaves VMEM, so
+    there is no intermediate fold/unfold transpose between them — and
+    folds ``(U, Ka, Kb)`` back into tensor modes.
+    """
+    if x.ndim not in (3, 4):
+        raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
+    axa = x.ndim - 3 + (fp.mode_a - 1)
+    axb = x.ndim - 3 + (fp.mode_b - 1)
+    xm = jnp.moveaxis(x, (axb, axa), (-2, -1))
+    lead = xm.shape[:-2]
+    x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
+    y3, kinfo = ops.fused_gemt(x3, ca, cb, bu=fp.bu, bka=fp.bka, bnb=fp.bnb,
+                               bna=fp.bna, use_pallas=use_pallas)
+    y = jnp.moveaxis(y3.reshape(*lead, fp.ka, fp.kb), (-2, -1), (axa, axb))
+    info: dict = {"modes": (fp.mode_a, fp.mode_b), "backend": "fused",
+                  "rows": int(x3.shape[0]), "macs": fp.macs,
+                  "vmem_bytes": fp.vmem_bytes,
+                  "hbm_bytes_staged": fp.hbm_bytes_staged,
+                  "hbm_bytes_fused": fp.hbm_bytes_fused,
+                  "hbm_savings": fp.hbm_savings}
+    info.update(kinfo)
+    return y, info

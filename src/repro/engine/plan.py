@@ -35,20 +35,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.esop import block_nonzero_mask
+from ..kernels.fused_gemt import kb_padded
 
 __all__ = [
     "StagePlan",
+    "FusedPairPlan",
     "GemtPlan",
     "build_plan",
     "order_costs",
     "macs_for_order",
     "sparsity_signature",
+    "fused_tile_sizes",
+    "fused_vmem_bytes",
+    "refresh_fused_pair",
+    "stage_hbm_bytes",
+    "staged_pair_hbm_bytes",
+    "plan_hbm_bytes",
     "DEFAULT_ESOP_THRESHOLD",
+    "DEFAULT_VMEM_BUDGET",
     "MIN_KERNEL_DIM",
 ]
 
 DEFAULT_ESOP_THRESHOLD = 0.3  # zero-block fraction at which block-ESOP wins
 MIN_KERNEL_DIM = 8  # below this, padding overhead beats the kernels
+# VMEM the fused kernel may claim for its tiles + scratch: roughly half a
+# TPU core's ~16 MB, leaving headroom for Pallas pipelining internals.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def _pow2_clamp(d: int, lo: int = 8, hi: int = 128) -> int:
@@ -56,6 +68,18 @@ def _pow2_clamp(d: int, lo: int = 8, hi: int = 128) -> int:
     if d <= lo:
         return lo
     return min(hi, 1 << (int(d).bit_length() - 1))
+
+
+def _pow2_ceil_clamp(d: int, lo: int = 8, hi: int = 128) -> int:
+    """Smallest power of two >= d, clamped to [lo, hi].
+
+    Tile choices that set the padding granularity round *up*: a 48-extent
+    tiled at 64 is one padded block, while flooring to 32 pads to the same
+    64 but fetches it in two visits (and the revisit factors multiply).
+    """
+    if d <= lo:
+        return lo
+    return min(hi, 1 << (int(d) - 1).bit_length())
 
 
 def _pad_up(d: int, b: int) -> int:
@@ -80,6 +104,41 @@ class StagePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedPairPlan:
+    """Two consecutive stages fused into one kernel: ``(X ×_a C_a) ×_b C_b``.
+
+    ``first`` indexes the pair's first stage within ``GemtPlan.order`` /
+    ``.stages``; the two ``StagePlan`` entries it covers stay in the plan
+    untouched — they are the documented (and runtime) staged fallback.
+    """
+
+    first: int  # index of the pair's first stage in the order (0 or 1)
+    mode_a: int  # contracted first (innermost stream)
+    mode_b: int  # contracted second (slab stream)
+    rows: int  # untouched u-major GEMM rows U (excl. batch)
+    na: int
+    ka: int
+    nb: int
+    kb: int
+    bu: int  # fused tile sizes (the autotunable triple is bu/bka/bnb)
+    bka: int
+    bnb: int
+    bna: int
+    kbp: int  # padded full-width Kb slab resident in VMEM
+    vmem_bytes: int  # modeled on-chip footprint at these tiles
+    hbm_bytes_staged: int  # modeled pair traffic if executed staged
+    hbm_bytes_fused: int  # modeled pair traffic fused
+    macs: int  # dense MACs of the two covered stages
+    zero_block_frac_a: float
+    zero_block_frac_b: float
+
+    @property
+    def hbm_savings(self) -> float:
+        """Staged-over-fused modeled HBM traffic ratio (>1 means fusing wins)."""
+        return self.hbm_bytes_staged / max(self.hbm_bytes_fused, 1)
+
+
+@dataclasses.dataclass(frozen=True)
 class GemtPlan:
     """A fully scheduled 3-stage GEMT: order + per-stage lowering choices."""
 
@@ -91,6 +150,9 @@ class GemtPlan:
     macs_effective: int  # with block-sparsity scaling
     peak_intermediate_bytes: int
     key: str  # cache key this plan was built under
+    fused: FusedPairPlan | None = None  # stage pair run as one kernel
+    hbm_bytes_staged: int = 0  # modeled traffic of the all-staged schedule
+    hbm_bytes_moved: int = 0  # modeled traffic of the planned schedule
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -251,6 +313,252 @@ def order_costs(
     return out
 
 
+def fused_vmem_bytes(bu: int, bka: int, bnb: int, bna: int, kbp: int,
+                     itemsize: int) -> int:
+    """Modeled VMEM footprint of the fused kernel at these tile sizes.
+
+    Streamed operands are double-buffered by the Pallas pipeline (×2); the
+    stage-a partial and the output accumulator are fp32 scratch.
+    """
+    return (2 * bu * bnb * bna * itemsize   # streamed X slab
+            + 2 * bna * bka * itemsize      # streamed C_a block
+            + 2 * bnb * kbp * itemsize      # resident C_b slab
+            + 4 * bu * bnb * bka            # stage-a partial (f32)
+            + 4 * bu * bka * kbp            # output accumulator (f32)
+            + 2 * bu * bka * kbp * itemsize)  # output tile
+
+
+def fused_tile_sizes(
+    rows_total: int, na: int, ka: int, nb: int, kb: int,
+    itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    start: tuple[int, int, int] | None = None,
+) -> tuple[int, int, int, int, int] | None:
+    """Pick ``(bu, bka, bnb, bna, kbp)`` fitting the VMEM budget, or None.
+
+    ``start`` optionally seeds ``(bka, bna, bnb)`` (the planner aligns them
+    with the staged stages' ESOP block grids so sparse skipping composes).
+    Kb is not blocked (the accumulator holds the full padded slab width so
+    stage b never revisits a partial), which is what bounds fusability:
+    when no power-of-two shrink of the other tiles fits, the pair must run
+    staged.
+    """
+    kbp = kb_padded(kb)
+    bka0, bna0, bnb0 = start if start is not None else (None, None, None)
+    tiles = {
+        "bu": _pow2_clamp(rows_total),
+        "bka": min(bka0 or 128, _pow2_ceil_clamp(ka)),
+        # bnb only sizes the on-chip partial (total traffic is bnb-
+        # independent), so it starts small
+        "bnb": min(bnb0 or 32, _pow2_ceil_clamp(nb, hi=32)),
+        "bna": min(bna0 or 128, _pow2_ceil_clamp(na)),
+    }
+
+    def footprint():
+        return fused_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
+                                tiles["bna"], kbp, itemsize)
+
+    while footprint() > vmem_budget:
+        shrinkable = [k for k in ("bu", "bka", "bnb", "bna") if tiles[k] > 8]
+        if not shrinkable:
+            return None
+        k = max(shrinkable, key=lambda k: tiles[k])
+        # snap to the next power of two below (ESOP-aligned seeds may be
+        # non-pow2, e.g. 48 -> 32, never 24): keeps the autotune lattice
+        # and the TPU sublane/lane multiples intact, floor 8
+        tiles[k] = 1 << ((tiles[k] - 1).bit_length() - 1)
+    return tiles["bu"], tiles["bka"], tiles["bnb"], tiles["bna"], kbp
+
+
+def stage_hbm_bytes(stage: StagePlan, batch: int, itemsize: int) -> int:
+    """Modeled HBM traffic of one staged contraction.
+
+    Kernel stages refetch X once per output column-block and C once per
+    output row-block (the BlockSpec revisit factors); only ESOP stages
+    skip zero C blocks — SR-GEMM streams every block regardless of the
+    zero fraction.  The einsum fallback is modeled as a fully fused single
+    pass.  ``itemsize`` is the raw element size (batch is folded into the
+    rows here, unlike the planner's peak-bytes accounting).
+    """
+    rows = stage.rows * max(batch, 1)
+    n, k = stage.n, stage.k
+    if stage.backend == "einsum":
+        return (rows * n + n * k + rows * k) * itemsize
+    live = 1.0 - stage.zero_block_frac if stage.backend == "esop" else 1.0
+    # ESOP skips the X fetch on dead steps too (the dead-step index repeats
+    # the last live block, so the revisit is elided), hence both scale.
+    x_bytes = int(rows * n * _ceil_div(k, stage.bn) * live)
+    c_bytes = int(n * k * live) * _ceil_div(rows, stage.bm)
+    return (x_bytes + c_bytes + rows * k) * itemsize
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def staged_pair_hbm_bytes(stage_a: StagePlan, stage_b: StagePlan,
+                          batch: int, itemsize: int) -> int:
+    """Modeled HBM traffic of running a consecutive pair staged.
+
+    The inter-stage boundary costs a full read+write of the intermediate:
+    the fold of one unfolding into the next is a ``moveaxis``+``reshape``
+    transpose copy materialized between the two kernel launches.
+    """
+    t_elems = stage_a.rows * max(batch, 1) * stage_a.k
+    return (stage_hbm_bytes(stage_a, batch, itemsize)
+            + 2 * t_elems * itemsize
+            + stage_hbm_bytes(stage_b, batch, itemsize))
+
+
+def _fused_hbm_bytes(rows_total: int, ka: int,
+                     tiles: tuple[int, int, int, int, int],
+                     live_a: int, live_b: int, itemsize: int) -> int:
+    """Modeled HBM traffic of the fused kernel (dense grid × live blocks).
+
+    X and C_a are fetched once per live ``(j, t_b, t_a)`` step and u-block;
+    C_b once per live slab and (i, j); the intermediate moves zero bytes.
+    """
+    bu, bka, bnb, bna, kbp = tiles
+    u_p = _pad_up(rows_total, bu)
+    ka_p = _pad_up(ka, bka)
+    t_b = max(live_b, 1)
+    x_bytes = u_p * bnb * bna * live_a * t_b
+    ca_bytes = (u_p // bu) * t_b * live_a * bna * bka
+    cb_bytes = (u_p // bu) * (ka_p // bka) * t_b * bnb * kbp
+    y_bytes = u_p * ka_p * kbp
+    return (x_bytes + ca_bytes + cb_bytes + y_bytes) * itemsize
+
+
+def plan_hbm_bytes(stages: tuple[StagePlan, ...],
+                   fused: FusedPairPlan | None,
+                   batch: int, itemsize: int) -> int:
+    """Modeled HBM bytes of executing the schedule (with optional fusion).
+
+    Every boundary between executed steps adds the intermediate's transpose
+    copy; the fused pair replaces its two stages *and* their internal
+    boundary with the fused kernel's traffic.
+    """
+    b = max(batch, 1)
+    total = 0
+    i = 0
+    while i < len(stages):
+        if fused is not None and i == fused.first:
+            total += fused.hbm_bytes_fused
+            nxt = i + 2
+        else:
+            total += stage_hbm_bytes(stages[i], batch, itemsize)
+            nxt = i + 1
+        if nxt < len(stages):
+            total += 2 * stages[nxt - 1].rows * b * stages[nxt - 1].k * itemsize
+        i = nxt
+    return total
+
+
+def refresh_fused_pair(fp: FusedPairPlan, ca: jnp.ndarray, cb: jnp.ndarray,
+                       batch: int, itemsize: int) -> FusedPairPlan:
+    """Recompute a FusedPairPlan's modeled accounting for its current tiles.
+
+    The autotuner replaces (bu, bka, bnb) after planning; the VMEM
+    footprint, fused HBM bytes and block masks must follow, or the
+    reported numbers describe a configuration that never ran.
+    """
+    rows_total = fp.rows * max(batch, 1)
+    mask_a = np.asarray(_padded_block_mask(ca, fp.bna, fp.bka))
+    mask_b = np.asarray(_padded_block_mask(cb, fp.bnb, fp.kbp))
+    live_a, dense_a = int(mask_a.sum()), max(mask_a.size, 1)
+    live_b, dense_b = int(mask_b.sum()), max(mask_b.size, 1)
+    tiles = (fp.bu, fp.bka, fp.bnb, fp.bna, fp.kbp)
+    return dataclasses.replace(
+        fp,
+        vmem_bytes=fused_vmem_bytes(*tiles, itemsize),
+        hbm_bytes_fused=_fused_hbm_bytes(rows_total, fp.ka, tiles, live_a,
+                                         live_b, itemsize),
+        zero_block_frac_a=1.0 - live_a / dense_a,
+        zero_block_frac_b=1.0 - live_b / dense_b,
+    )
+
+
+def _plan_fusion(
+    first: int,
+    order: tuple[int, int, int],
+    stages: tuple[StagePlan, ...],
+    dims: tuple[int, int, int],
+    cs: dict[int, jnp.ndarray],
+    *,
+    batch: int,
+    itemsize: int,
+    vmem_budget: int,
+    force: bool,
+) -> FusedPairPlan | None:
+    """Evaluate fusing the consecutive pair starting at stage ``first``.
+
+    The kernel is algebraically symmetric in which mode streams as C_a
+    (2D-blocked, full ESOP skipping) vs C_b (slab-resident, slab-level
+    skipping only), so both assignments are scored and the one moving
+    fewer modeled bytes wins — a block-sparse coefficient matrix lands on
+    the a-stream where its zero blocks are never fetched.  Returns the
+    candidate when it is kernel-capable, fits the VMEM budget and (unless
+    ``force``) moves strictly fewer modeled HBM bytes than the staged
+    pair; None declines.
+    """
+    pair = (order[first], order[first + 1])
+    if any(jnp.iscomplexobj(cs[m]) for m in pair):
+        return None  # DFT stages stay on einsum — the kernel is real-valued
+    d = list(dims)
+    for m in order[:first]:
+        d[m - 1] = cs[m].shape[1]
+    rows = math.prod(d) // (d[pair[0] - 1] * d[pair[1] - 1])
+    rows_total = rows * max(batch, 1)
+    stage_of = {stages[first].mode: stages[first],
+                stages[first + 1].mode: stages[first + 1]}
+    staged = staged_pair_hbm_bytes(stages[first], stages[first + 1], batch,
+                                   itemsize)
+
+    best = None
+    for mode_a, mode_b in (pair, pair[::-1]):
+        ca, cb = cs[mode_a], cs[mode_b]
+        na, ka = ca.shape
+        nb, kb = cb.shape
+        if min(rows_total, na, ka, nb, kb) < MIN_KERNEL_DIM:
+            continue  # padding overhead beats the kernel, as for single stages
+        # For *sparse* coefficients, seed the streamed-side grid from the
+        # staged stage's ESOP blocks so the fused mask sees the same zero
+        # structure the planner scored; dense stages take the pow2-ceil
+        # defaults (one padded block per visit, no extra revisit factor).
+        st_a, st_b = stage_of[mode_a], stage_of[mode_b]
+        sparse_a = st_a.zero_block_frac > 0
+        tiles = fused_tile_sizes(
+            rows_total, na, ka, nb, kb, itemsize, vmem_budget,
+            start=(st_a.bn if sparse_a else None,
+                   st_a.bk if sparse_a else None,
+                   st_b.bk if st_b.zero_block_frac > 0 else None))
+        if tiles is None:
+            continue  # no tiling keeps the resident slab on-chip
+        bu, bka, bnb, bna, kbp = tiles
+        mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
+        mask_b = np.asarray(_padded_block_mask(cb, bnb, kbp))
+        live_a, dense_a = int(mask_a.sum()), max(mask_a.size, 1)
+        live_b, dense_b = int(mask_b.sum()), max(mask_b.size, 1)
+        fused = _fused_hbm_bytes(rows_total, ka, tiles, live_a, live_b,
+                                 itemsize)
+        cand = FusedPairPlan(
+            first=first, mode_a=mode_a, mode_b=mode_b, rows=rows,
+            na=na, ka=ka, nb=nb, kb=kb,
+            bu=bu, bka=bka, bnb=bnb, bna=bna, kbp=kbp,
+            vmem_bytes=fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize),
+            hbm_bytes_staged=staged, hbm_bytes_fused=fused,
+            macs=rows * (nb * na * ka + nb * ka * kb),
+            zero_block_frac_a=1.0 - live_a / dense_a,
+            zero_block_frac_b=1.0 - live_b / dense_b,
+        )
+        if best is None or cand.hbm_bytes_fused < best.hbm_bytes_fused:
+            best = cand
+    if best is None:
+        return None
+    if not force and best.hbm_bytes_fused >= staged:
+        return None
+    return best
+
+
 def build_plan(
     x_shape: tuple[int, ...],
     x_dtype,
@@ -261,12 +569,20 @@ def build_plan(
     order: tuple[int, int, int] | None = None,
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
+    fuse: bool | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
 ) -> GemtPlan:
     """Plan a 3-stage GEMT for a tensor of ``x_shape`` (3D, or 4D batched).
 
     ``order=None`` searches all six parenthesizations and keeps the one with
     minimal (effective MACs, peak intermediate bytes); passing an explicit
     order pins it (the paper's reference chain is ``(3, 1, 2)``).
+
+    ``fuse`` controls stage fusion: ``None`` (default) fuses the consecutive
+    pair whose modeled HBM-byte saving is largest, provided its tiles fit
+    ``vmem_budget``; ``True`` forces fusion whenever feasible; ``False``
+    never fuses.  The per-stage plans are kept either way — they are the
+    staged fallback the executor uses outside the fused pair.
     """
     dims = tuple(int(d) for d in x_shape[-3:])
     if len(x_shape) not in (3, 4):
@@ -296,13 +612,32 @@ def build_plan(
             best = (score, cand, stages, macs, eff, peak)
     _, chosen, stages, macs, eff, peak = best
 
+    isz_raw = jnp.dtype(x_dtype).itemsize
+    fused = None
+    if fuse is not False:
+        cands = []
+        for first in (0, 1):
+            fp = _plan_fusion(first, chosen, stages, dims, cs, batch=batch,
+                              itemsize=isz_raw, vmem_budget=vmem_budget,
+                              force=(fuse is True))
+            if fp is not None:
+                cands.append(fp)
+        if cands:  # fuse the pair that saves the most modeled bytes
+            fused = max(cands,
+                        key=lambda f: f.hbm_bytes_staged - f.hbm_bytes_fused)
+
     out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
     blocks = {s.mode: (s.bk, s.bn) for s in stages}
     key = "|".join([
         f"x={tuple(x_shape)}", f"dt={jnp.dtype(x_dtype).name}",
         f"o={chosen}", f"th={esop_threshold}",
-        f"bs={block_sizes}", f"sig={sparsity_signature(cs, blocks)}",
+        f"bs={block_sizes}", f"fu={fuse}", f"vb={vmem_budget}",
+        f"sig={sparsity_signature(cs, blocks)}",
     ])
     return GemtPlan(order=chosen, stages=stages, in_shape=dims,
                     out_shape=out_shape, macs=macs, macs_effective=eff,
-                    peak_intermediate_bytes=peak, key=key)
+                    peak_intermediate_bytes=peak, key=key, fused=fused,
+                    hbm_bytes_staged=plan_hbm_bytes(stages, None, batch,
+                                                    isz_raw),
+                    hbm_bytes_moved=plan_hbm_bytes(stages, fused, batch,
+                                                   isz_raw))

@@ -1,2 +1,3 @@
 """Pallas TPU kernels for the perf-critical hot spots (+ ops wrappers, refs)."""
-from .ops import esop_gemm, flash_attention, on_tpu, sr_gemm
+from .ops import (esop_gemm, esop_plan_cached, flash_attention, fused_gemt,
+                  on_tpu, sr_gemm)

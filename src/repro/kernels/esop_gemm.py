@@ -36,26 +36,39 @@ def esop_plan(c: jnp.ndarray, bk: int, bn: int) -> tuple[np.ndarray, np.ndarray,
     """Host-side ESOP schedule: per column-block compacted nonzero k-blocks.
 
     Returns (counts[j], idx[j, t], t_steps) with t_steps = max(counts) (>=1).
+    One device sync (the block mask); the compaction itself is vectorized —
+    a stable argsort that floats each column's nonzero k-blocks to the
+    front in ascending order.
     """
     mask = np.asarray(block_nonzero_mask(c, (bk, bn)))  # (K/bk, N/bn)
-    kb, nb = mask.shape
     counts = mask.sum(axis=0).astype(np.int32)  # (N/bn,)
     t_steps = max(int(counts.max(initial=0)), 1)
-    idx = np.zeros((nb, t_steps), dtype=np.int32)
-    for j in range(nb):
-        nz = np.nonzero(mask[:, j])[0]
-        idx[j, : len(nz)] = nz
+    # Stable sort on ~mask: per column, nonzero rows first, index order kept.
+    order = np.argsort(~mask, axis=0, kind="stable")[:t_steps].T  # (nb, t)
+    # Dead steps repeat the column's last live index (not 0): the kernel
+    # guards their MACs, and a repeated BlockSpec index lets Pallas elide
+    # the refetch — a dead step then moves zero HBM bytes, as modeled.
+    last_live = order[np.arange(order.shape[0]),
+                      np.maximum(counts - 1, 0)]
+    live = np.arange(t_steps, dtype=np.int32)[None, :] < counts[:, None]
+    idx = np.where(live, order, last_live[:, None]).astype(np.int32)
     return counts, idx, t_steps
 
 
-def _esop_kernel(counts_ref, idx_ref, o_init_ref, x_ref, c_ref, o_ref, acc_ref,
-                 *, t_steps: int):
+def _esop_kernel(*refs, t_steps: int, affine: bool):
+    if affine:
+        counts_ref, idx_ref, o_init_ref, x_ref, c_ref, o_ref, acc_ref = refs
+    else:
+        counts_ref, idx_ref, x_ref, c_ref, o_ref, acc_ref = refs
     j = pl.program_id(1)
     t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
-        acc_ref[...] = o_init_ref[...].astype(acc_ref.dtype)
+        # Affine += (Eq. 1) seeds from the aliased output; otherwise the
+        # accumulator starts at zero in-kernel — no HBM seed buffer.
+        acc_ref[...] = (o_init_ref[...].astype(acc_ref.dtype) if affine
+                        else jnp.zeros(acc_ref.shape, acc_ref.dtype))
 
     # Live step: this (j, t) names a nonzero streamed block — do the rank-bk
     # update.  Dead steps (t >= counts[j]) leave every cell waiting (§6).
@@ -75,6 +88,7 @@ def _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret):
     m, kdim = x.shape
     n = c.shape[1]
     grid = (m // bm, n // bn, t_steps)
+    affine = out is not None
 
     def x_map(i, j, t, counts_ref, idx_ref):
         return (i, idx_ref[j, t])
@@ -85,48 +99,66 @@ def _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret):
     def o_map(i, j, t, counts_ref, idx_ref):
         return (i, j)
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), x_map),  # resident X (sparse-indexed)
+        pl.BlockSpec((bk, bn), c_map),  # streamed C (only live blocks)
+    ]
+    operands = [x, c]
+    if affine:
+        in_specs.insert(0, pl.BlockSpec((bm, bn), o_map))  # o_init (aliased)
+        operands.insert(0, out)
+
     return pl.pallas_call(
-        functools.partial(_esop_kernel, t_steps=t_steps),
+        functools.partial(_esop_kernel, t_steps=t_steps, affine=affine),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # counts, idx drive the dataflow
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bn), o_map),  # o_init (aliased)
-                pl.BlockSpec((bm, bk), x_map),  # resident X (sparse-indexed)
-                pl.BlockSpec((bk, bn), c_map),  # streamed C (only live blocks)
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), o_map),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype),
-        input_output_aliases={2: 0},  # (after the 2 scalar-prefetch operands)
+        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype if affine else x.dtype),
+        # (after the 2 scalar-prefetch operands) — affine path only
+        input_output_aliases={2: 0} if affine else {},
         interpret=interpret,
-    )(counts, idx, out, x, c)
+    )(counts, idx, *operands)
 
 
 def esop_gemm_pallas(
     x: jnp.ndarray,
     c: jnp.ndarray,
-    out: jnp.ndarray,
+    out: jnp.ndarray | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    plan: tuple | None = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Y = out + X @ C, skipping zero blocks of C.  Returns (y, esop_info).
+    """Y = (out +) X @ C, skipping zero blocks of C.  Returns (y, esop_info).
 
-    ``esop_info`` reports streamed-block savings (the paper's energy proxy):
-    blocks_dense, blocks_live, fetch_savings.
+    ``plan`` optionally carries a precomputed ``(counts, idx, t_steps)``
+    schedule (``ops.esop_gemm`` memoizes it per C identity so neither the
+    host-side compaction nor the counts device→host sync reruns every
+    call).  With a supplied plan the caller already owns the accounting and
+    ``esop_info`` is None — the memoized stats are the single source of
+    truth; standalone calls get the streamed-block savings computed here
+    (blocks_dense, blocks_live, fetch_savings — the paper's energy proxy).
     """
     m, kdim = x.shape
     k2, n = c.shape
-    assert kdim == k2 and out.shape == (m, n)
+    assert kdim == k2 and (out is None or out.shape == (m, n))
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
-    counts, idx, t_steps = esop_plan(c, bk, bn)
-    y = _esop_call(x, c, out, jnp.asarray(counts), jnp.asarray(idx),
-                   bm, bn, bk, t_steps, interpret)
+    if plan is None:
+        counts, idx, t_steps = esop_plan(c, bk, bn)
+        live_blocks = int(counts.sum())  # host-side: counts is still np
+        counts, idx = jnp.asarray(counts), jnp.asarray(idx)
+    else:
+        counts, idx, t_steps = plan
+        live_blocks = None
+    y = _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret)
+    if live_blocks is None:
+        return y, None
     dense_blocks = (kdim // bk) * (n // bn)
-    live_blocks = int(counts.sum())
     info = {
         "blocks_dense": dense_blocks,
         "blocks_live": live_blocks,

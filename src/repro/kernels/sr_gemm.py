@@ -28,14 +28,21 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["sr_gemm_kernel", "sr_gemm_pallas"]
 
 
-def sr_gemm_kernel(o_init_ref, x_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+def sr_gemm_kernel(*refs, k_steps: int, affine: bool):
     """One (i, j) output tile; grid dim 2 streams C's contraction blocks."""
+    if affine:
+        o_init_ref, x_ref, c_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, c_ref, o_ref, acc_ref = refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        # Affine += (Eq. 1): the accumulator starts from the prior output.
-        acc_ref[...] = o_init_ref[...].astype(acc_ref.dtype)
+        # Affine += (Eq. 1) seeds the accumulator from the prior (aliased)
+        # output; the plain product starts at zero in-kernel — no HBM seed
+        # buffer is ever allocated or fetched.
+        acc_ref[...] = (o_init_ref[...].astype(acc_ref.dtype) if affine
+                        else jnp.zeros(acc_ref.shape, acc_ref.dtype))
 
     # Rank-bk update: the streamed coefficient block crosses the resident
     # data block exactly like the paper's (column-vector ∘ row-vector) step.
@@ -54,35 +61,42 @@ def sr_gemm_kernel(o_init_ref, x_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
 def sr_gemm_pallas(
     x: jnp.ndarray,
     c: jnp.ndarray,
-    out: jnp.ndarray,
+    out: jnp.ndarray | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Y = out + X @ C with X: (M, K), C: (K, N), out: (M, N).
+    """Y = (out +) X @ C with X: (M, K), C: (K, N), out: (M, N) or None.
 
     Shapes must be multiples of the block shape (``ops.sr_gemm`` pads).
+    ``out=None`` initializes the accumulator to zero in-kernel; an affine
+    seed is only streamed (and aliased) when actually provided.
     """
     m, kdim = x.shape
     k2, n = c.shape
     assert kdim == k2, (x.shape, c.shape)
-    assert out.shape == (m, n)
+    assert out is None or out.shape == (m, n)
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (x.shape, c.shape, (bm, bn, bk))
     k_steps = kdim // bk
+    affine = out is not None
 
     grid = (m // bm, n // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # resident X
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # streamed C
+    ]
+    operands = [x, c]
+    if affine:
+        in_specs.insert(0, pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        operands.insert(0, out)  # o_init (aliased)
     return pl.pallas_call(
-        functools.partial(sr_gemm_kernel, k_steps=k_steps),
+        functools.partial(sr_gemm_kernel, k_steps=k_steps, affine=affine),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # o_init (aliased)
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # resident X
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # streamed C
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype if affine else x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],  # stationary tile
-        input_output_aliases={0: 0},
+        input_output_aliases={0: 0} if affine else {},
         interpret=interpret,
-    )(out, x, c)
+    )(*operands)

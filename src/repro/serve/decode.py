@@ -80,10 +80,16 @@ class DxtServeSession:
     autotune: bool = False
     autotune_cache: Any = None  # AutotuneCache | path | None
     use_pallas: bool | None = None
+    # appended (not inserted) so existing positional constructions keep
+    # their meaning; None = auto stage fusion via the engine cost model
+    fuse: bool | None = None
 
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
         self.requests_served = 0
+        self.fused_served = 0  # requests that ran the fused stage pair
+        self.hbm_bytes_moved = 0  # modeled traffic of everything served
+        self.hbm_bytes_staged = 0  # what the all-staged schedule would move
         self.last_info: dict | None = None
 
     def _coeffs_for(self, dims: tuple[int, int, int]) -> tuple:
@@ -111,10 +117,15 @@ class DxtServeSession:
         # Plans and tunings are memoized inside the engine (keyed on shape,
         # dtype, and the coefficient matrices' identity/zero structure —
         # the session's _coeffs dict keeps those identities stable).
-        y, info = gemt3_planned(x, c1, c2, c3, autotune=self.autotune,
+        y, info = gemt3_planned(x, c1, c2, c3, fuse=self.fuse,
+                                autotune=self.autotune,
                                 autotune_cache=self.autotune_cache,
                                 use_pallas=self.use_pallas, with_info=True)
         self.requests_served += int(x.shape[0])
+        if info.get("fused"):
+            self.fused_served += int(x.shape[0])
+        self.hbm_bytes_moved += int(info.get("hbm_bytes_moved", 0))
+        self.hbm_bytes_staged += int(info.get("hbm_bytes_staged", 0))
         self.last_info = info
         return y
 
