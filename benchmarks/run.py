@@ -28,6 +28,7 @@ def _benches():
         bench_kernels.bench_xla_gemm_baseline,
         bench_distributed.bench_strong_scaling_model,
         bench_distributed.bench_shardmap_vs_auto,
+        bench_distributed.bench_distributed_engine,
         bench_roofline.bench_roofline_summary,
         bench_engine.bench_planner_order,
         bench_engine.bench_esop_dispatch,

@@ -1,2 +1,6 @@
-"""repro — TriADA (trilinear matrix-by-tensor multiply-add) JAX framework."""
+"""repro — TriADA (trilinear matrix-by-tensor multiply-add) JAX framework.
+
+Paper-section→module map: ``docs/architecture.md``.  Engine internals:
+``docs/engine.md``; distributed schedule: ``docs/distributed.md``.
+"""
 __version__ = "0.1.0"

@@ -1,1 +1,7 @@
+"""Checkpointing substrate (save/restore/latest_step) for the train loop.
+
+Not a paper subsystem — production scaffolding for the north-star training
+path; re-meshed restores are exercised by the elastic runtime.  See
+``docs/architecture.md`` ("Production substrate").
+"""
 from .checkpoint import latest_step, restore, save

@@ -1,3 +1,6 @@
-"""Assigned architecture configs (+ the paper's own DXT workload)."""
+"""Assigned architecture configs (+ the paper's own DXT workload).
+
+See ``docs/architecture.md`` ("Production substrate").
+"""
 from .base import (ARCH_IDS, LONG_CONTEXT_OK, SHAPES, BlockCfg, ModelConfig,
                    ShapeCfg, all_configs, input_specs, load_config)

@@ -19,10 +19,18 @@ processing space.  On a TPU mesh this becomes:
 
 Two implementations:
 
-  * ``gemt3_shardmap`` — explicit shard_map + psum_scatter (the TriADA
-    schedule, collectives hand-placed),
+  * ``gemt3_shardmap`` — the TriADA schedule (shard_map + psum_scatter,
+    collectives hand-placed).  Since PR 3 it **delegates to the execution
+    engine** (``repro.engine.gemt3_planned(mesh=...)``): the local stages
+    run the planned Pallas kernel dispatch (sr_gemm / block-ESOP / fused
+    VMEM pairs where shard-local) instead of raw einsum, and the planner's
+    sharded cost model owns the stage ordering.  ``engine=False`` keeps
+    the original pure-einsum schedule as a measurable baseline,
   * ``gemt3_auto``     — jit + sharding constraints (XLA GSPMD chooses the
     collectives) — the baseline the roofline compares against.
+
+Mesh recipes and the per-stage data-movement walkthrough live in
+``docs/distributed.md``; the paper↔module map in ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -83,13 +91,40 @@ def _local_stage(y_local: jnp.ndarray, coeff: jnp.ndarray, mode: int,
 def gemt3_shardmap(
     mesh: Mesh,
     axes: Sequence[AxisName] = ("data", "model", None),
-    order: Sequence[int] = (3, 1, 2),
+    order: Sequence[int] | None = (3, 1, 2),
+    *,
+    engine: bool = True,
+    **engine_kwargs,
 ):
     """Build the TriADA-scheduled distributed GEMT: f(x, c1, c2, c3) -> y.
 
     ``axes[s-1]`` is the mesh axis sharding mode s of the stationary tensor
-    (None = unsharded).  Every mode extent must divide its axis size.
+    (None = unsharded).  Every mode extent (and, for sharded modes, the
+    coefficient output extent K_s) must divide its axis size.
+
+    ``engine=True`` (default) delegates to the topology-aware execution
+    engine: the identical collective schedule, with the local stages
+    lowered through the planned Pallas kernel dispatch and ``order=None``
+    unlocking the sharded cost-model order search.  ``engine_kwargs``
+    (``use_pallas``, ``fuse``, ``autotune``, ``batch_axis``, …) pass
+    through to :func:`repro.engine.gemt3_planned`.  ``engine=False`` is
+    the original einsum-only schedule (benchmark baseline).
     """
+    if engine:
+        from ..engine import gemt3_planned as _planned
+
+        axes_t = tuple(tuple(a) if isinstance(a, list) else a for a in axes)
+        order_t = tuple(order) if order is not None else None
+
+        def f(x, c1, c2, c3):
+            return _planned(x, c1, c2, c3, mesh=mesh, axes=axes_t,
+                            order=order_t, **engine_kwargs)
+
+        return f
+
+    if engine_kwargs:
+        raise TypeError(f"engine=False takes no engine kwargs, "
+                        f"got {sorted(engine_kwargs)}")
     spec = tensor_spec(axes)
 
     def f(x, c1, c2, c3):

@@ -1,1 +1,7 @@
+"""Synthetic token pipeline feeding the train/serve loops.
+
+Not a paper subsystem — production scaffolding (``docs/architecture.md``,
+"Production substrate"); ``shard_batch`` places global batches onto the
+mesh's data axis.
+"""
 from .pipeline import TokenSource, make_source, shard_batch

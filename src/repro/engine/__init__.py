@@ -4,28 +4,38 @@ The bridge between the algorithm layer (``core.gemt``) and the kernel layer
 (``kernels.ops``): plans the stage order and per-stage backend from the
 problem's shapes and block sparsity, lowers each mode contraction to a 2D
 GEMM on the Pallas kernels, and tunes tile sizes against a persisted cache.
-See ``docs/engine.md``.
+Topology-aware since PR 3: given a ``Mesh`` + per-mode axes, the planner
+scores collective bytes and the executor runs the per-shard schedule inside
+``shard_map`` (paper §3–§5).  See ``docs/engine.md`` and
+``docs/distributed.md``; the paper-section→module map is in
+``docs/architecture.md``.
 """
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FusedPairPlan,
                    GemtPlan, StagePlan, build_plan, fused_tile_sizes,
-                   fused_vmem_bytes, macs_for_order, order_costs,
-                   plan_hbm_bytes, refresh_fused_pair, sparsity_signature,
-                   stage_hbm_bytes, staged_pair_hbm_bytes)
-from .lower import lower_fused_pair, lower_stage, mode_fold, mode_unfold
+                   fused_vmem_bytes, macs_for_order, mesh_axis_size,
+                   normalize_axes, order_costs, plan_hbm_bytes,
+                   refresh_fused_pair, sparsity_signature, stage_hbm_bytes,
+                   staged_pair_hbm_bytes)
+from .lower import (lower_fused_pair, lower_sharded_stage, lower_stage,
+                    mode_fold, mode_unfold)
 from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
                        default_cache_path, make_fused_key, make_key)
-from .executor import (clear_plan_cache, execute, execute_with_info,
+from .executor import (clear_plan_cache, default_mode_axes, execute,
+                       execute_sharded_with_info, execute_with_info,
                        gemt3_planned, plan_cache_info, plan_gemt3)
 
 __all__ = [
     "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FusedPairPlan",
     "GemtPlan", "StagePlan", "build_plan", "fused_tile_sizes",
-    "fused_vmem_bytes", "macs_for_order", "order_costs", "plan_hbm_bytes",
+    "fused_vmem_bytes", "macs_for_order", "mesh_axis_size", "normalize_axes",
+    "order_costs", "plan_hbm_bytes",
     "refresh_fused_pair", "sparsity_signature", "stage_hbm_bytes",
     "staged_pair_hbm_bytes",
-    "lower_fused_pair", "lower_stage", "mode_fold", "mode_unfold",
+    "lower_fused_pair", "lower_sharded_stage", "lower_stage", "mode_fold",
+    "mode_unfold",
     "AutotuneCache", "autotune_fused", "autotune_gemm", "default_cache_path",
     "make_fused_key", "make_key",
-    "clear_plan_cache", "execute", "execute_with_info", "gemt3_planned",
+    "clear_plan_cache", "default_mode_axes", "execute",
+    "execute_sharded_with_info", "execute_with_info", "gemt3_planned",
     "plan_cache_info", "plan_gemt3",
 ]

@@ -12,6 +12,10 @@ stale ESOP tuning.
 The cache is a plain JSON file (default ``~/.cache/repro/autotune.json``,
 overridable via ``REPRO_AUTOTUNE_CACHE`` or the ``path`` argument), tolerant
 of missing/corrupt files so a cold or broken cache never fails a run.
+
+Paper anchor: §5.1 (the P³-cell tiling the tiles discretize).  See
+``docs/engine.md`` ("Autotune"); under a mesh the tuned shapes are the
+*per-shard* GEMMs (``docs/distributed.md``).
 """
 from __future__ import annotations
 

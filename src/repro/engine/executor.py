@@ -6,27 +6,39 @@
 sizes against the persisted JSON cache, and executes the three lowered
 stages through the Pallas kernel dispatch.  Batched inputs (a leading batch
 axis) run each stage as a single fused GEMM.
+
+With ``mesh=``/``axes=`` the same entry point runs the TriADA distributed
+schedule (paper §4–§5): the planned per-shard stages execute inside a
+``shard_map`` body — Pallas/interpret kernels on the local shards, one
+``psum_scatter`` per sharded-mode stage — and ``info`` splits the byte
+accounting into per-shard local HBM traffic and modeled collective ICI
+bytes.  See ``docs/distributed.md``.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels import ops
 from ..memo import ArrayMemo
 from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
                        make_key)
-from .lower import lower_fused_pair, lower_stage
+from .lower import lower_fused_pair, lower_sharded_stage, lower_stage
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, GemtPlan,
-                   build_plan, plan_hbm_bytes, refresh_fused_pair)
+                   _is_traced, build_plan, normalize_axes, plan_hbm_bytes,
+                   refresh_fused_pair)
 
 __all__ = [
     "plan_gemt3",
     "execute",
     "execute_with_info",
+    "execute_sharded_with_info",
     "gemt3_planned",
     "clear_plan_cache",
     "plan_cache_info",
@@ -34,6 +46,7 @@ __all__ = [
 
 _PLAN_CACHE: dict[tuple, GemtPlan] = {}
 _TUNED_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # post-autotune variants
+_SHARDED_FN_CACHE: dict[tuple, tuple] = {}  # plan+cs -> (jitted shard_map, infos)
 _FP_MEMO = ArrayMemo()  # per-array-identity digests: plan-cache hits stay cheap
 
 
@@ -41,8 +54,14 @@ def _fingerprint(c: jnp.ndarray) -> str:
     """Digest of a coefficient matrix's shape/dtype/zero structure.
 
     Memoized on array identity so a hot loop reusing the same coefficient
-    arrays doesn't pay a device sync + full-matrix hash per call.
+    arrays doesn't pay a device sync + full-matrix hash per call.  Tracers
+    (an outer jit is planning through us) digest to a shape/dtype tag —
+    consistent with the planner, whose traced plans are dense-only and
+    depend on nothing else.
     """
+    if isinstance(c, jax.core.Tracer):
+        return f"traced:{tuple(c.shape)}:{jnp.dtype(c.dtype).name}"
+
     def compute():
         cn = np.asarray(c)
         h = hashlib.sha1(f"{cn.shape}|{cn.dtype}".encode())
@@ -55,10 +74,25 @@ def _fingerprint(c: jnp.ndarray) -> str:
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _TUNED_PLAN_CACHE.clear()
+    _SHARDED_FN_CACHE.clear()
 
 
 def plan_cache_info() -> dict:
-    return {"entries": len(_PLAN_CACHE), "tuned": len(_TUNED_PLAN_CACHE)}
+    return {"entries": len(_PLAN_CACHE), "tuned": len(_TUNED_PLAN_CACHE),
+            "sharded_fns": len(_SHARDED_FN_CACHE)}
+
+
+def default_mode_axes(mesh, batch_axis=None) -> tuple:
+    """Default per-mode axis assignment: mesh axes in order, modes beyond
+    the mesh rank unsharded — e.g. a ``("data", "model")`` mesh shards
+    modes 1–2 and keeps mode 3 local (the paper's single-pod placement).
+    Axes claimed by ``batch_axis`` are excluded (an axis can shard only
+    one dim of the stationary tensor)."""
+    taken = (set() if batch_axis is None else
+             set(batch_axis if isinstance(batch_axis, tuple)
+                 else (batch_axis,)))
+    names = tuple(a for a in mesh.axis_names if a not in taken)
+    return (names + (None, None, None))[:3]
 
 
 def plan_gemt3(
@@ -73,20 +107,27 @@ def plan_gemt3(
     block_sizes: tuple[int, int, int] | None = None,
     fuse: bool | None = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    mesh=None,
+    axes=None,
+    batch_axis=None,
 ) -> GemtPlan:
     """Build (or fetch) the plan for this problem; memoized in-process."""
+    mesh_desc = (None if mesh is None else
+                 (tuple(mesh.shape.items()), normalize_axes(axes),
+                  batch_axis))
     key = (
         tuple(x_shape), jnp.dtype(x_dtype).name,
         tuple(order) if order is not None else None,
         esop_threshold, block_sizes, fuse, vmem_budget,
-        _fingerprint(c1), _fingerprint(c2), _fingerprint(c3),
+        _fingerprint(c1), _fingerprint(c2), _fingerprint(c3), mesh_desc,
     )
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
                           esop_threshold=esop_threshold,
                           block_sizes=block_sizes, fuse=fuse,
-                          vmem_budget=vmem_budget)
+                          vmem_budget=vmem_budget, mesh=mesh, axes=axes,
+                          batch_axis=batch_axis)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -121,7 +162,10 @@ def _autotuned_plan(
             bm, bn, bk = int(hit["bm"]), int(hit["bn"]), int(hit["bk"])
         else:
             probe = jnp.ones((rows, st.n), dtype=c.dtype)
-            bm, bn, bk = autotune_gemm(probe, c, st.backend, sig=sig,
+            # Sharded-mode stages contract an N_s/P row slice of C; probe
+            # with a representative slice so shapes match the local GEMM.
+            c_arg = c if int(c.shape[0]) == st.n else c[: st.n]
+            bm, bn, bk = autotune_gemm(probe, c_arg, st.backend, sig=sig,
                                        cache=cache, use_pallas=use_pallas)
         stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
 
@@ -171,7 +215,6 @@ def execute_with_info(
     cs = {1: c1, 2: c2, 3: c3}
     y = x
     stage_infos = []
-    fused_info = None
     i = 0
     while i < len(plan.stages):
         if plan.fused is not None and i == plan.fused.first:
@@ -179,7 +222,6 @@ def execute_with_info(
             y, finfo = lower_fused_pair(y, cs[fp.mode_a], cs[fp.mode_b], fp,
                                         use_pallas=use_pallas)
             stage_infos.append(finfo)
-            fused_info = finfo
             i += 2
             continue
         st = plan.stages[i]
@@ -188,6 +230,21 @@ def execute_with_info(
         i += 1
     if out is not None:
         y = out + y
+    return y, _assemble_info(plan, stage_infos)
+
+
+def _assemble_info(plan: GemtPlan, stage_infos: list[dict]) -> dict:
+    """Shared info-dict builder for the local and sharded executors.
+
+    Byte accounting is three-way: ``hbm_bytes_moved`` /
+    ``hbm_bytes_staged`` are the modeled (per-shard, under a mesh) HBM
+    traffic of the executed vs. all-staged schedule, ``hbm_bytes_local``
+    aliases the executed number explicitly, and ``collective_bytes`` is
+    the modeled per-device psum_scatter ICI traffic (0 on a single
+    device).
+    """
+    fused_info = next((i for i in stage_infos if i.get("backend") == "fused"),
+                      None)
     # Aggregate fetch savings over *staged* stages only: the fused pair's
     # counts live in a product space (C_a blocks × C_b slabs) whose units
     # don't sum with per-stage grids — its own savings are under
@@ -195,7 +252,7 @@ def execute_with_info(
     staged_infos = [i for i in stage_infos if i.get("backend") != "fused"]
     dense = sum(i.get("blocks_dense", 0) for i in staged_infos)
     live = sum(i.get("blocks_live", 0) for i in staged_infos)
-    info = {
+    return {
         "order": plan.order,
         "backends": plan.backends,  # the per-stage (staged-fallback) plan
         # what actually ran: the fused pair collapses to one entry
@@ -206,12 +263,117 @@ def execute_with_info(
         "macs_effective": plan.macs_effective,
         "stages": stage_infos,
         "fused": fused_info,
+        "axes": plan.axes,
+        "shards": plan.shards,
+        "batch_axis": plan.batch_axis,
         "hbm_bytes_staged": plan.hbm_bytes_staged,
         "hbm_bytes_moved": plan.hbm_bytes_moved,
+        "hbm_bytes_local": plan.hbm_bytes_moved,
+        "collective_bytes": plan.collective_bytes,
         "fetch_savings": ((1.0 - live / dense) if dense
                           else (fused_info or {}).get("fetch_savings", 0.0)),
     }
-    return y, info
+
+
+def _sharded_callable(plan: GemtPlan, mesh, use_pallas,
+                      cs: dict[int, jnp.ndarray], batched: bool):
+    """Build the jitted ``shard_map`` program executing ``plan`` on ``mesh``.
+
+    ESOP / fused-pair prefetch schedules are precomputed host-side from the
+    concrete coefficient matrices *before* entering the body — inside it
+    the replicated operands are tracers (traced plans carry no such stages,
+    so they precompute nothing).  Returns ``(fn, stage_infos)`` where
+    ``stage_infos`` is populated at trace time (all entries are static
+    host-side accounting, identical for every call of this program).
+    """
+    fp = plan.fused
+    fused_idx = set() if fp is None else {fp.first, fp.first + 1}
+    esop_plans = {}
+    for i, st in enumerate(plan.stages):
+        if st.backend == "esop" and i not in fused_idx:
+            esop_plans[st.mode] = ops.esop_plan_cached(cs[st.mode], st.bk,
+                                                       st.bn)
+    fused_plans = None
+    if fp is not None:
+        fused_plans = (ops.esop_plan_cached(cs[fp.mode_a], fp.bna, fp.bka),
+                       ops.esop_plan_cached(cs[fp.mode_b], fp.bnb, fp.kbp))
+
+    spec = (P(plan.batch_axis, *plan.axes) if batched else P(*plan.axes))
+    stage_infos: list[dict] = []
+
+    def body(x_l, c1_l, c2_l, c3_l):
+        del stage_infos[:]  # body re-traces refill, they never duplicate
+        cs_l = {1: c1_l, 2: c2_l, 3: c3_l}
+        y = x_l
+        i = 0
+        while i < len(plan.stages):
+            if fp is not None and i == fp.first:
+                y, finfo = lower_fused_pair(y, cs_l[fp.mode_a],
+                                            cs_l[fp.mode_b], fp,
+                                            use_pallas=use_pallas,
+                                            plans=fused_plans)
+                stage_infos.append(finfo)
+                i += 2
+                continue
+            st = plan.stages[i]
+            if st.axis is None:
+                y, sinfo = lower_stage(y, cs_l[st.mode], st,
+                                       use_pallas=use_pallas,
+                                       esop_plan=esop_plans.get(st.mode))
+            else:
+                y, sinfo = lower_sharded_stage(y, cs_l[st.mode], st, mesh,
+                                               use_pallas=use_pallas)
+            stage_infos.append(sinfo)
+            i += 1
+        return y
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, P(), P(), P()),
+                   out_specs=spec, check_vma=False)
+    return jax.jit(fn), stage_infos
+
+
+def execute_sharded_with_info(
+    plan: GemtPlan,
+    mesh,
+    x: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    out: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Run a mesh plan through the TriADA ``shard_map`` schedule.
+
+    The jitted program is cached per (plan, coefficient content,
+    ``use_pallas``), so serving hot loops pay neither the shard_map
+    retrace nor the ESOP schedule recompute.  ``info`` matches the
+    single-device executor's, with ``collective_bytes`` > 0 for sharded
+    stages and all HBM numbers per-shard.
+    """
+    if plan.axes == (None, None, None) and plan.batch_axis is None:
+        # Nothing is sharded: the shard_map program would just replicate
+        # the whole computation on every device — run the local executor.
+        return execute_with_info(plan, x, c1, c2, c3, out,
+                                 use_pallas=use_pallas)
+    # The autotuner replaces tiles without touching plan.key, so the tile
+    # state must be part of the program key — a tuned plan may not reuse
+    # the untuned plan's compiled stages (and vice versa).
+    tiles = tuple((s.bm, s.bn, s.bk) for s in plan.stages)
+    ftiles = (None if plan.fused is None else
+              (plan.fused.bu, plan.fused.bka, plan.fused.bnb))
+    key = (plan.key, tiles, ftiles, use_pallas, x.ndim, _fingerprint(c1),
+           _fingerprint(c2), _fingerprint(c3))
+    hit = _SHARDED_FN_CACHE.get(key)
+    if hit is None:
+        hit = _sharded_callable(plan, mesh, use_pallas,
+                                {1: c1, 2: c2, 3: c3}, batched=x.ndim == 4)
+        _SHARDED_FN_CACHE[key] = hit
+    fn, stage_infos = hit
+    y = fn(x, c1, c2, c3)
+    if out is not None:
+        y = out + y
+    return y, _assemble_info(plan, list(stage_infos))
 
 
 def execute(plan, x, c1, c2, c3, out=None, *, use_pallas=None):
@@ -236,6 +398,9 @@ def gemt3_planned(
     autotune_cache: AutotuneCache | str | None = None,
     use_pallas: bool | None = None,
     with_info: bool = False,
+    mesh=None,
+    axes=None,
+    batch_axis=None,
 ):
     """Planned three-mode GEMT ẍ = X ×₁C1 ×₂C2 ×₃C3 (+ out).
 
@@ -245,14 +410,31 @@ def gemt3_planned(
     pair with the largest modeled HBM saving whose tiles fit
     ``vmem_budget``) and kernel tile sizes are chosen by the cost model
     instead of hard-coded.  ``x`` may carry a leading batch axis.
+
+    ``mesh`` switches to the TriADA distributed schedule: ``x`` (global)
+    is sharded per ``axes`` (default: mesh axes in order, e.g.
+    ``("data", "model", None)`` on a 2-axis mesh; ``batch_axis``
+    optionally shards a leading batch dim), coefficients are replicated,
+    and the planned per-shard stages run inside one ``shard_map`` program
+    — shard-local stages on the Pallas kernel dispatch, sharded-mode
+    stages as local partial products combined by ``psum_scatter``.  The
+    result matches the single-device path up to float reduction order.
+    Traced coefficients (calling this under an outer ``jit``) degrade
+    planning to dense sr_gemm/einsum backends and skip autotuning — zero
+    structure is unreadable from a tracer.
     """
+    if mesh is not None and axes is None:
+        axes = default_mode_axes(mesh, batch_axis)
     plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
                       esop_threshold=esop_threshold, block_sizes=block_sizes,
-                      fuse=fuse, vmem_budget=vmem_budget)
-    if autotune:
+                      fuse=fuse, vmem_budget=vmem_budget, mesh=mesh,
+                      axes=axes, batch_axis=batch_axis)
+    if autotune and not _is_traced(c1, c2, c3):
         cache = (autotune_cache if isinstance(autotune_cache, AutotuneCache)
                  else AutotuneCache(autotune_cache))
-        batch = int(x.shape[0]) if x.ndim == 4 else 1
+        # Per-shard batch: the tuned tiles must see the local GEMM rows.
+        batch = ((int(x.shape[0]) if x.ndim == 4 else 1)
+                 // max(plan.batch_shards, 1))
         # Memoize the tuned variant: a warm hot loop must not pay the
         # cache probes + fused-mask refresh (a device pad + host sync)
         # per call.  plan.key only digests the zero *structure*, so the
@@ -267,6 +449,10 @@ def gemt3_planned(
                                     vmem_budget=vmem_budget, x_dtype=x.dtype)
             _TUNED_PLAN_CACHE[tkey] = tuned
         plan = tuned
-    y, info = execute_with_info(plan, x, c1, c2, c3, out,
-                                use_pallas=use_pallas)
+    if mesh is not None:
+        y, info = execute_sharded_with_info(plan, mesh, x, c1, c2, c3, out,
+                                            use_pallas=use_pallas)
+    else:
+        y, info = execute_with_info(plan, x, c1, c2, c3, out,
+                                    use_pallas=use_pallas)
     return (y, info) if with_info else y

@@ -7,15 +7,24 @@ stage: unfold → dispatch to ``kernels.ops.sr_gemm`` / ``esop_gemm`` / an
 einsum fallback → fold.  Batched execution folds the leading batch axis
 into the GEMM rows, so a whole service batch is one kernel launch per
 stage.
+
+``lower_sharded_stage`` is the distributed counterpart, meant to run
+*inside* a ``shard_map`` body (paper §4–§5, ``docs/distributed.md``): it
+slices this device's coefficient rows by mesh position, runs the same
+unfold→kernel→fold local GEMM as a partial rank-k update of the full
+output extent, and combines shards with one ``psum_scatter`` — the TriADA
+schedule with the planned Pallas kernels doing the local work.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
 from .plan import FusedPairPlan, StagePlan
 
-__all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair"]
+__all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair",
+           "lower_sharded_stage"]
 
 
 def mode_unfold(x: jnp.ndarray, mode: int) -> tuple[jnp.ndarray, tuple[int, ...]]:
@@ -46,12 +55,16 @@ def lower_stage(
     stage: StagePlan,
     *,
     use_pallas: bool | None = None,
+    esop_plan: tuple | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Execute one planned contraction stage.  Returns ``(y, info)``.
 
     ``info`` carries the backend actually used plus the block-ESOP fetch
     accounting when that path engages (backend-independent: the reference
-    path reports the same savings the TPU kernel realizes).
+    path reports the same savings the TPU kernel realizes).  ``esop_plan``
+    optionally supplies the precomputed ``esop_plan_cached`` tuple — the
+    distributed executor computes it host-side before entering the
+    ``shard_map`` body, where ``c`` is a tracer.
     """
     x2d, lead = mode_unfold(x, stage.mode)
     info: dict = {"mode": stage.mode, "backend": stage.backend,
@@ -60,7 +73,8 @@ def lower_stage(
         y2d = jnp.matmul(x2d, c)
     elif stage.backend == "esop":
         y2d, esop_info = ops.esop_gemm(x2d, c, bm=stage.bm, bn=stage.bn,
-                                       bk=stage.bk, use_pallas=use_pallas)
+                                       bk=stage.bk, use_pallas=use_pallas,
+                                       plan=esop_plan)
         info.update(esop_info)
     elif stage.backend == "sr_gemm":
         y2d = ops.sr_gemm(x2d, c, bm=stage.bm, bn=stage.bn, bk=stage.bk,
@@ -70,6 +84,55 @@ def lower_stage(
     return mode_fold(y2d, lead, stage.mode), info
 
 
+def lower_sharded_stage(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    stage: StagePlan,
+    mesh,
+    *,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """One sharded-mode stage inside a ``shard_map`` body: local partial
+    rank-k update + one ``psum_scatter`` over the stage's mesh axis.
+
+    ``x`` is the local shard; ``c`` the (replicated) full coefficient
+    matrix.  This device contracts its rows ``[idx·n, (idx+1)·n)`` of
+    ``c`` — the outer-product schedule restricted to the local coefficient
+    rows, producing the full ``K_s`` extent as a partial sum — then the
+    tiled ``psum_scatter`` reduces across the axis and lands each device's
+    ``K_s / shards`` chunk in place.  The tensor never moves; only partial
+    sums do (paper §5's stationary-tensor invariant).
+    """
+    names = stage.axis if isinstance(stage.axis, tuple) else (stage.axis,)
+    idx = jnp.zeros((), jnp.int32)
+    for name in names:  # row-major linear index over the (possibly tuple) axis
+        idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
+    c_rows = jax.lax.dynamic_slice_in_dim(c, idx * stage.n, stage.n, 0)
+
+    x2d, lead = mode_unfold(x, stage.mode)
+    info: dict = {"mode": stage.mode, "backend": stage.backend,
+                  "rows": int(x2d.shape[0]), "macs": stage.macs,
+                  "axis": stage.axis, "shards": stage.shards,
+                  "collective_bytes": stage.collective_bytes}
+    if stage.backend == "einsum":
+        y2d = jnp.matmul(x2d, c_rows)
+    elif stage.backend == "sr_gemm":
+        y2d = ops.sr_gemm(x2d, c_rows, bm=stage.bm, bn=stage.bn, bk=stage.bk,
+                          use_pallas=use_pallas)
+    else:
+        # The planner never assigns esop here: the row slice is selected by
+        # axis_index at run time, so its zero structure is device-dependent
+        # and the host-side block schedule cannot exist.
+        raise ValueError(
+            f"backend {stage.backend!r} cannot run a sharded-mode stage")
+    partial = mode_fold(y2d, lead, stage.mode)  # full K_s, partial sum
+    ax = partial.ndim - 3 + (stage.mode - 1)
+    moved = jnp.moveaxis(partial, ax, 0)
+    combined = jax.lax.psum_scatter(moved, names, scatter_dimension=0,
+                                    tiled=True)
+    return jnp.moveaxis(combined, 0, ax), info
+
+
 def lower_fused_pair(
     x: jnp.ndarray,
     ca: jnp.ndarray,
@@ -77,6 +140,7 @@ def lower_fused_pair(
     fp: FusedPairPlan,
     *,
     use_pallas: bool | None = None,
+    plans: tuple | None = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Execute a fused consecutive stage pair.  Returns ``(y, info)``.
 
@@ -84,7 +148,9 @@ def lower_fused_pair(
     streams (batch and the untouched mode fold into U), runs both
     contractions in one launch — the stage-a partial never leaves VMEM, so
     there is no intermediate fold/unfold transpose between them — and
-    folds ``(U, Ka, Kb)`` back into tensor modes.
+    folds ``(U, Ka, Kb)`` back into tensor modes.  ``plans`` optionally
+    carries the two precomputed ``esop_plan_cached`` tuples (a/b), for
+    callers whose ``ca``/``cb`` are tracers inside a ``shard_map`` body.
     """
     if x.ndim not in (3, 4):
         raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
@@ -94,7 +160,8 @@ def lower_fused_pair(
     lead = xm.shape[:-2]
     x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
     y3, kinfo = ops.fused_gemt(x3, ca, cb, bu=fp.bu, bka=fp.bka, bnb=fp.bnb,
-                               bna=fp.bna, use_pallas=use_pallas)
+                               bna=fp.bna, use_pallas=use_pallas,
+                               plans=plans)
     y = jnp.moveaxis(y3.reshape(*lead, fp.ka, fp.kb), (-2, -1), (axa, axb))
     info: dict = {"modes": (fp.mode_a, fp.mode_b), "backend": "fused",
                   "rows": int(x3.shape[0]), "macs": fp.macs,

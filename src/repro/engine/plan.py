@@ -23,6 +23,21 @@ chooses a per-stage backend from the coefficient matrix's *block* sparsity
 
 ``build_plan`` is pure and host-side: it never touches device values beyond
 reading the coefficient matrices' zero structure.
+
+**Topology-aware planning** (``mesh=``/``axes=``): when a
+:class:`jax.sharding.Mesh` and a per-mode axis assignment are given, the
+plan describes the *per-shard* schedule of the TriADA distribution
+(``core/distributed.py``, paper §4–§5 / Eq. 7): the tensor is stationary
+with mode ``s`` sharded over ``axes[s-1]``; a stage contracting an
+unsharded mode is fully local; a stage contracting a sharded mode runs a
+local partial rank-k update against this device's coefficient rows and
+combines with one ``psum_scatter`` over that axis.  The cost model then
+scores orders by ``(effective per-shard MACs, collective bytes, peak local
+bytes)`` — contracting compressive *unsharded* modes first shrinks the
+partial that the sharded stage must scatter, so the planner prefers
+shard-local stages early.  Fusion is offered only when both modes of the
+pair are shard-local (the fused kernel has no collective between its two
+contractions).  See ``docs/distributed.md``.
 """
 from __future__ import annotations
 
@@ -31,11 +46,14 @@ import hashlib
 import itertools
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.esop import block_nonzero_mask
 from ..kernels.fused_gemt import kb_padded
+
+AxisName = str | tuple[str, ...] | None
 
 __all__ = [
     "StagePlan",
@@ -51,6 +69,8 @@ __all__ = [
     "stage_hbm_bytes",
     "staged_pair_hbm_bytes",
     "plan_hbm_bytes",
+    "mesh_axis_size",
+    "normalize_axes",
     "DEFAULT_ESOP_THRESHOLD",
     "DEFAULT_VMEM_BUDGET",
     "MIN_KERNEL_DIM",
@@ -88,11 +108,19 @@ def _pad_up(d: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class StagePlan:
-    """One lowered mode-s contraction: ``(rows, N_s) @ (N_s, K_s)``."""
+    """One lowered mode-s contraction: ``(rows, N_s) @ (N_s, K_s)``.
+
+    Under a mesh (``axis`` not None) the fields describe the *per-shard*
+    GEMM: ``n`` is this device's slice of the contracted extent
+    (``N_s / shards``), ``k`` stays the **full** output extent — the stage
+    produces a partial sum that one ``psum_scatter`` over ``axis`` reduces
+    and re-shards to ``k / shards`` local.  ``collective_bytes`` models
+    that scatter's per-device ICI traffic.
+    """
 
     mode: int  # which tensor mode (1, 2, 3) this stage contracts
-    n: int  # contraction extent N_s
-    k: int  # output extent K_s
+    n: int  # contraction extent N_s (per-shard slice when sharded)
+    k: int  # output extent K_s (always the full extent)
     rows: int  # unfolded GEMM rows (prod of untouched dims, excl. batch)
     backend: str  # "sr_gemm" | "esop" | "einsum"
     macs: int  # dense MACs = rows * n * k
@@ -101,6 +129,14 @@ class StagePlan:
     bm: int
     bn: int
     bk: int
+    axis: AxisName = None  # mesh axis sharding this mode (None = local stage)
+    shards: int = 1  # size of that axis (1 = unsharded)
+    collective_bytes: int = 0  # modeled per-device psum_scatter ICI bytes
+
+    @property
+    def k_local(self) -> int:
+        """Per-shard output extent after the stage's psum_scatter."""
+        return self.k // self.shards
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +189,13 @@ class GemtPlan:
     fused: FusedPairPlan | None = None  # stage pair run as one kernel
     hbm_bytes_staged: int = 0  # modeled traffic of the all-staged schedule
     hbm_bytes_moved: int = 0  # modeled traffic of the planned schedule
+    # --- topology (all defaults = single-device; byte fields above are
+    # *per-shard* when a mesh is planned) ---
+    axes: tuple[AxisName, AxisName, AxisName] = (None, None, None)
+    shards: tuple[int, int, int] = (1, 1, 1)  # axis sizes per mode
+    batch_axis: AxisName = None  # mesh axis sharding the leading batch dim
+    batch_shards: int = 1
+    collective_bytes: int = 0  # modeled per-device ICI bytes (psum_scatters)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -162,6 +205,34 @@ class GemtPlan:
     @property
     def backends(self) -> tuple[str, ...]:
         return tuple(s.backend for s in self.stages)
+
+
+def mesh_axis_size(mesh, axis: AxisName) -> int:
+    """Total device count of a (possibly tuple) mesh axis; 1 for None."""
+    if mesh is None or axis is None:
+        return 1
+    names = axis if isinstance(axis, tuple) else (axis,)
+    return math.prod(int(mesh.shape[a]) for a in names)
+
+
+def normalize_axes(axes) -> tuple[AxisName, AxisName, AxisName]:
+    """Canonicalize a 3-entry per-mode axis assignment (lists → tuples)."""
+    if axes is None:
+        return (None, None, None)
+    axes = tuple(tuple(a) if isinstance(a, list) else a for a in axes)
+    if len(axes) != 3:
+        raise ValueError(f"axes must name one mesh axis per mode, got {axes}")
+    return axes
+
+
+def _is_traced(*arrays) -> bool:
+    """True when any coefficient is an abstract tracer (planning under jit).
+
+    Traced coefficients have shape/dtype but no host-readable values, so
+    every zero-structure decision (ESOP backends, fusion masks, sparsity
+    signatures) degrades to the dense assumption.
+    """
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
 
 
 def macs_for_order(
@@ -185,7 +256,12 @@ def sparsity_signature(cs: dict[int, jnp.ndarray],
 
     Two problems with the same shapes but different zero patterns must not
     share an autotune/plan cache entry — the ESOP schedule differs.
+    Traced coefficients (planning under an outer jit) digest to a shared
+    ``"traced"`` tag — correct because traced plans are dense-only, so they
+    depend on nothing beyond shapes and dtype.
     """
+    if _is_traced(*cs.values()):
+        return "traced"
     h = hashlib.sha1()
     for mode in (1, 2, 3):
         c = cs[mode]
@@ -221,8 +297,20 @@ def _plan_stage(
     esop_threshold: float,
     block_sizes: tuple[int, int, int] | None,
     mask_cache: dict[int, np.ndarray] | None = None,
+    axis: AxisName = None,
+    shards: int = 1,
+    itemsize_total: int = 4,
 ) -> StagePlan:
     n, k = c.shape
+    if shards > 1:
+        # Sharded contraction mode: the local GEMM contracts this device's
+        # N_s/P slice of the coefficient rows into the FULL K_s extent (a
+        # partial sum); one psum_scatter over `axis` then reduces and
+        # re-shards it.  The slice is selected by axis_index at run time,
+        # so its zero structure is device-dependent — block-ESOP (whose
+        # schedule is host-side per-matrix) is off the table; the stage
+        # runs sr_gemm or einsum.
+        n = n // shards
     # The lowering folds any batch axis into the GEMM rows, so backend and
     # tile choices must see the batched row count (a large batch of skinny
     # tensors is still a big GEMM).  MAC fields stay per-sample: the batch
@@ -230,11 +318,20 @@ def _plan_stage(
     rows_total = rows * max(batch, 1)
     bm, bn, bk = _stage_blocks(rows_total, n, k, block_sizes)
     dense_macs = rows * n * k
+    # psum_scatter per-device ICI bytes: each device sends (P-1)/P of its
+    # (rows, K_s) partial (itemsize_total folds the batch factor in).
+    coll = (rows * k * itemsize_total * (shards - 1)) // shards
 
     if jnp.iscomplexobj(c):
         # The Pallas kernels are real-valued; DFT stages stay on einsum.
         return StagePlan(mode, n, k, rows, "einsum", dense_macs, dense_macs,
-                         0.0, bm, bn, bk)
+                         0.0, bm, bn, bk, axis, shards, coll)
+
+    if shards > 1 or _is_traced(c):
+        backend = ("einsum" if min(rows_total, n, k) < MIN_KERNEL_DIM
+                   else "sr_gemm")
+        return StagePlan(mode, n, k, rows, backend, dense_macs, dense_macs,
+                         0.0, bm, bn, bk, axis, shards, coll)
 
     # (bk, bn) depend only on C's shape, never on the stage order, so the
     # mask (a device pad + host sync) is shared across all six candidates.
@@ -274,21 +371,33 @@ def _plan_for_order(
     esop_threshold: float,
     block_sizes: tuple[int, int, int] | None,
     mask_cache: dict[int, np.ndarray] | None = None,
-) -> tuple[tuple[StagePlan, ...], int, int, int]:
+    axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
+    shards: tuple[int, int, int] = (1, 1, 1),
+) -> tuple[tuple[StagePlan, ...], int, int, int, int]:
+    """Plan one order over the (per-shard) ``dims``; returns
+    ``(stages, macs, macs_effective, peak_bytes, collective_bytes)``."""
     d = list(dims)
     stages = []
     peak_bytes = 0
+    coll_bytes = 0
     for mode in order:
         rows = math.prod(d) // d[mode - 1]
-        stages.append(_plan_stage(mode, rows, cs[mode], batch=batch,
-                                  esop_threshold=esop_threshold,
-                                  block_sizes=block_sizes,
-                                  mask_cache=mask_cache))
-        d[mode - 1] = cs[mode].shape[1]
+        st = _plan_stage(mode, rows, cs[mode], batch=batch,
+                         esop_threshold=esop_threshold,
+                         block_sizes=block_sizes, mask_cache=mask_cache,
+                         axis=axes[mode - 1], shards=shards[mode - 1],
+                         itemsize_total=itemsize)
+        stages.append(st)
+        # A sharded stage materializes the full-K_s partial before the
+        # scatter shrinks it to K_s/P local — that partial is the stage's
+        # peak, not the post-scatter tensor.
+        peak_bytes = max(peak_bytes, rows * st.k * itemsize)
+        coll_bytes += st.collective_bytes
+        d[mode - 1] = st.k_local
         peak_bytes = max(peak_bytes, math.prod(d) * itemsize)
     macs = sum(s.macs for s in stages)
     eff = sum(s.macs_effective for s in stages)
-    return tuple(stages), macs, eff, peak_bytes
+    return tuple(stages), macs, eff, peak_bytes, coll_bytes
 
 
 def order_costs(
@@ -299,17 +408,33 @@ def order_costs(
     itemsize: int = 4,
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
+    mesh=None,
+    axes=None,
 ) -> dict[tuple[int, int, int], dict]:
-    """Cost-model summary for all six orders (introspection/benchmarks)."""
+    """Cost-model summary for all six orders (introspection/benchmarks).
+
+    With ``mesh``/``axes``, ``dims`` are the **global** extents; the
+    summary reports per-shard MACs/bytes plus the modeled psum_scatter
+    ``collective_bytes`` of each order.
+    """
     out = {}
+    axes = normalize_axes(axes)
+    shards = tuple(mesh_axis_size(mesh, a) for a in axes)
+    for mode in (1, 2, 3):
+        if dims[mode - 1] % shards[mode - 1]:
+            raise ValueError(
+                f"mode-{mode} extent {dims[mode - 1]} not divisible by "
+                f"axis {axes[mode - 1]!r} (size {shards[mode - 1]})")
+    local = tuple(d // p for d, p in zip(dims, shards))
     mask_cache: dict[int, np.ndarray] = {}
     for order in itertools.permutations((1, 2, 3)):
-        _, macs, eff, peak = _plan_for_order(
-            dims, cs, order, batch=batch, itemsize=itemsize,
+        _, macs, eff, peak, coll = _plan_for_order(
+            local, cs, order, batch=batch, itemsize=itemsize,
             esop_threshold=esop_threshold, block_sizes=block_sizes,
-            mask_cache=mask_cache)
+            mask_cache=mask_cache, axes=axes, shards=shards)
         out[order] = {"macs": macs, "macs_effective": eff,
-                      "peak_intermediate_bytes": peak}
+                      "peak_intermediate_bytes": peak,
+                      "collective_bytes": coll}
     return out
 
 
@@ -435,7 +560,11 @@ def plan_hbm_bytes(stages: tuple[StagePlan, ...],
 
     Every boundary between executed steps adds the intermediate's transpose
     copy; the fused pair replaces its two stages *and* their internal
-    boundary with the fused kernel's traffic.
+    boundary with the fused kernel's traffic.  Under a mesh the stage
+    fields are per-shard, so the total is the per-device local HBM traffic
+    (a sharded stage's boundary intermediate is its *post-scatter*
+    ``k_local`` extent; the scatter's ICI bytes live in
+    ``collective_bytes``, not here).
     """
     b = max(batch, 1)
     total = 0
@@ -448,7 +577,8 @@ def plan_hbm_bytes(stages: tuple[StagePlan, ...],
             total += stage_hbm_bytes(stages[i], batch, itemsize)
             nxt = i + 1
         if nxt < len(stages):
-            total += 2 * stages[nxt - 1].rows * b * stages[nxt - 1].k * itemsize
+            total += (2 * stages[nxt - 1].rows * b
+                      * stages[nxt - 1].k_local * itemsize)
         i = nxt
     return total
 
@@ -488,6 +618,8 @@ def _plan_fusion(
     itemsize: int,
     vmem_budget: int,
     force: bool,
+    axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
+    shards: tuple[int, int, int] = (1, 1, 1),
 ) -> FusedPairPlan | None:
     """Evaluate fusing the consecutive pair starting at stage ``first``.
 
@@ -499,13 +631,24 @@ def _plan_fusion(
     candidate when it is kernel-capable, fits the VMEM budget and (unless
     ``force``) moves strictly fewer modeled HBM bytes than the staged
     pair; None declines.
+
+    **Fusion-under-sharding rule**: both modes of the pair must be
+    shard-local (``axes[m-1] is None``).  A sharded mode's contraction
+    needs a psum_scatter between the two stages, and the fused kernel has
+    no collective inside — fusing across it would silently drop the
+    cross-device partial sums.  Traced coefficients also decline (the
+    fused kernel's ESOP prefetch schedules need host-readable values).
     """
     pair = (order[first], order[first + 1])
+    if any(axes[m - 1] is not None for m in pair):
+        return None  # sharded mode: a collective must run between stages
+    if _is_traced(*(cs[m] for m in pair)):
+        return None
     if any(jnp.iscomplexobj(cs[m]) for m in pair):
         return None  # DFT stages stay on einsum — the kernel is real-valued
     d = list(dims)
     for m in order[:first]:
-        d[m - 1] = cs[m].shape[1]
+        d[m - 1] = cs[m].shape[1] // shards[m - 1]
     rows = math.prod(d) // (d[pair[0] - 1] * d[pair[1] - 1])
     rows_total = rows * max(batch, 1)
     stage_of = {stages[first].mode: stages[first],
@@ -571,29 +714,74 @@ def build_plan(
     block_sizes: tuple[int, int, int] | None = None,
     fuse: bool | None = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    mesh=None,
+    axes=None,
+    batch_axis: AxisName = None,
 ) -> GemtPlan:
     """Plan a 3-stage GEMT for a tensor of ``x_shape`` (3D, or 4D batched).
 
     ``order=None`` searches all six parenthesizations and keeps the one with
-    minimal (effective MACs, peak intermediate bytes); passing an explicit
-    order pins it (the paper's reference chain is ``(3, 1, 2)``).
+    minimal (effective MACs, collective bytes, peak intermediate bytes);
+    passing an explicit order pins it (the paper's reference chain is
+    ``(3, 1, 2)``).
 
     ``fuse`` controls stage fusion: ``None`` (default) fuses the consecutive
     pair whose modeled HBM-byte saving is largest, provided its tiles fit
     ``vmem_budget``; ``True`` forces fusion whenever feasible; ``False``
     never fuses.  The per-stage plans are kept either way — they are the
     staged fallback the executor uses outside the fused pair.
+
+    ``mesh``/``axes`` make the plan topology-aware: ``axes[s-1]`` names the
+    mesh axis sharding mode ``s`` of the stationary tensor (None = local;
+    tuple = a folded multi-axis shard).  ``x_shape`` stays **global**; the
+    stages describe the per-shard schedule (see the module docstring) and
+    every mode extent — and the matching ``K_s``, for the psum_scatter —
+    must divide its axis size.  ``batch_axis`` optionally shards a leading
+    batch dim (data parallelism; no collective, the rows just split).
     """
     dims = tuple(int(d) for d in x_shape[-3:])
     if len(x_shape) not in (3, 4):
         raise ValueError(f"x must be 3D or 4D-batched, got shape {x_shape}")
-    batch = int(x_shape[0]) if len(x_shape) == 4 else 1
+    batch_global = int(x_shape[0]) if len(x_shape) == 4 else 1
     cs = {1: c1, 2: c2, 3: c3}
     for mode in (1, 2, 3):
         if cs[mode].ndim != 2 or cs[mode].shape[0] != dims[mode - 1]:
             raise ValueError(
                 f"C{mode} shape {cs[mode].shape} incompatible with mode "
                 f"extent {dims[mode - 1]}")
+
+    axes = normalize_axes(axes) if mesh is not None else (None, None, None)
+    shards = tuple(mesh_axis_size(mesh, a) for a in axes)
+    batch_shards = mesh_axis_size(mesh, batch_axis) if mesh is not None else 1
+    if mesh is None:
+        batch_axis = None
+    # A mesh axis can shard only one dim of the stationary tensor: a repeat
+    # across modes (or with batch_axis) would build a duplicate-entry
+    # PartitionSpec and fail far from the user's mistake.
+    named = [n for a in (*axes, batch_axis) if a is not None
+             for n in (a if isinstance(a, tuple) else (a,))]
+    dupes = sorted({n for n in named if named.count(n) > 1})
+    if dupes:
+        raise ValueError(
+            f"mesh axes {dupes} assigned to more than one of "
+            f"axes={axes} / batch_axis={batch_axis!r}")
+    for mode in (1, 2, 3):
+        p = shards[mode - 1]
+        if dims[mode - 1] % p:
+            raise ValueError(
+                f"mode-{mode} extent {dims[mode - 1]} not divisible by "
+                f"axis {axes[mode - 1]!r} (size {p})")
+        if int(cs[mode].shape[1]) % p:
+            raise ValueError(
+                f"C{mode} output extent {cs[mode].shape[1]} not divisible "
+                f"by axis {axes[mode - 1]!r} (size {p}) — the psum_scatter "
+                f"re-shards K{mode} over it")
+    if batch_global % max(batch_shards, 1):
+        raise ValueError(
+            f"batch {batch_global} not divisible by batch_axis "
+            f"{batch_axis!r} (size {batch_shards})")
+    batch = batch_global // max(batch_shards, 1)
+    local = tuple(d // p for d, p in zip(dims, shards))
     itemsize = jnp.dtype(x_dtype).itemsize * max(batch, 1)
 
     candidates = ([tuple(order)] if order is not None
@@ -603,23 +791,26 @@ def build_plan(
     for cand in candidates:
         if sorted(cand) != [1, 2, 3]:
             raise ValueError(f"order must be a permutation of (1,2,3), got {cand}")
-        stages, macs, eff, peak = _plan_for_order(
-            dims, cs, cand, batch=batch, itemsize=itemsize,
+        stages, macs, eff, peak, coll = _plan_for_order(
+            local, cs, cand, batch=batch, itemsize=itemsize,
             esop_threshold=esop_threshold, block_sizes=block_sizes,
-            mask_cache=mask_cache)
-        score = (eff, peak, cand)
+            mask_cache=mask_cache, axes=axes, shards=shards)
+        # Collective bytes rank above peak bytes: ICI is the scarcer
+        # resource, and the term is what pushes shard-local (especially
+        # compressive) stages ahead of the sharded-mode scatter.
+        score = (eff, coll, peak, cand)
         if best is None or score < best[0]:
-            best = (score, cand, stages, macs, eff, peak)
-    _, chosen, stages, macs, eff, peak = best
+            best = (score, cand, stages, macs, eff, peak, coll)
+    _, chosen, stages, macs, eff, peak, coll = best
 
     isz_raw = jnp.dtype(x_dtype).itemsize
     fused = None
     if fuse is not False:
         cands = []
         for first in (0, 1):
-            fp = _plan_fusion(first, chosen, stages, dims, cs, batch=batch,
+            fp = _plan_fusion(first, chosen, stages, local, cs, batch=batch,
                               itemsize=isz_raw, vmem_budget=vmem_budget,
-                              force=(fuse is True))
+                              force=(fuse is True), axes=axes, shards=shards)
             if fp is not None:
                 cands.append(fp)
         if cands:  # fuse the pair that saves the most modeled bytes
@@ -628,16 +819,22 @@ def build_plan(
 
     out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
     blocks = {s.mode: (s.bk, s.bn) for s in stages}
-    key = "|".join([
+    key_parts = [
         f"x={tuple(x_shape)}", f"dt={jnp.dtype(x_dtype).name}",
         f"o={chosen}", f"th={esop_threshold}",
         f"bs={block_sizes}", f"fu={fuse}", f"vb={vmem_budget}",
         f"sig={sparsity_signature(cs, blocks)}",
-    ])
+    ]
+    if mesh is not None:  # single-device keys stay byte-identical to PR 1–2
+        key_parts.append(
+            f"mesh={tuple(mesh.shape.items())};ax={axes};ba={batch_axis}")
     return GemtPlan(order=chosen, stages=stages, in_shape=dims,
                     out_shape=out_shape, macs=macs, macs_effective=eff,
-                    peak_intermediate_bytes=peak, key=key, fused=fused,
+                    peak_intermediate_bytes=peak, key="|".join(key_parts),
+                    fused=fused,
                     hbm_bytes_staged=plan_hbm_bytes(stages, None, batch,
                                                     isz_raw),
                     hbm_bytes_moved=plan_hbm_bytes(stages, fused, batch,
-                                                   isz_raw))
+                                                   isz_raw),
+                    axes=axes, shards=shards, batch_axis=batch_axis,
+                    batch_shards=batch_shards, collective_bytes=coll)

@@ -1,3 +1,9 @@
-"""Pallas TPU kernels for the perf-critical hot spots (+ ops wrappers, refs)."""
+"""Pallas TPU kernels for the perf-critical hot spots (+ ops wrappers, refs).
+
+Paper anchor: §5 (SR-GEMM, the streaming outer-product cell array), §6
+(block-ESOP skipping), and the fused two-stage GEMT (VMEM-resident
+intermediate — ``docs/engine.md`` "Stage fusion").  ``ref.py`` holds the
+jnp oracles; dispatch and padding live in ``ops.py``.
+"""
 from .ops import (esop_gemm, esop_plan_cached, flash_attention, fused_gemt,
                   on_tpu, sr_gemm)

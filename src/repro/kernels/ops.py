@@ -4,7 +4,9 @@ Handle padding to block multiples, dtype policy, and the CPU/TPU dispatch:
 on a TPU backend the kernels run compiled; elsewhere they run in
 ``interpret=True`` mode (bit-faithful emulation) unless ``use_pallas=False``
 routes to the jnp reference (the default inside the big-model dry-run, where
-interpret-mode loops would bloat compile times — see DESIGN.md §6).
+interpret-mode loops would bloat compile times).  Paper anchor: §5–§6
+(streaming outer-product cell array + ESOP skipping); the engine-facing
+contract is documented in ``docs/engine.md`` ("Lowering").
 """
 from __future__ import annotations
 
@@ -81,16 +83,20 @@ def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
 
 def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
               bm: int = 128, bn: int = 128, bk: int = 128,
-              use_pallas: bool | None = None):
+              use_pallas: bool | None = None, plan: tuple | None = None):
     """Block-ESOP Y = (out +) X @ C skipping zero C blocks. Returns (y, info).
 
     The block schedule and its accounting are memoized on C's identity
     (``esop_plan_cached``); the reference path reports the same
-    streamed-block savings the Pallas kernel realizes.
+    streamed-block savings the Pallas kernel realizes.  ``plan`` optionally
+    supplies that ``(counts, idx, t_steps, stats)`` tuple precomputed from
+    the concrete matrix — required when ``c`` here is a tracer (e.g. a
+    replicated operand inside a ``shard_map`` body).
     """
     if use_pallas is None:
         use_pallas = on_tpu()
-    counts, idx, t_steps, stats = esop_plan_cached(c, bk, bn)
+    counts, idx, t_steps, stats = (plan if plan is not None
+                                   else esop_plan_cached(c, bk, bn))
     # dict(stats): the memoized entry is shared across calls — handing the
     # caller the cached object would let an info-dict mutation poison it
     if not use_pallas:
@@ -107,14 +113,16 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
 
 def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                bu: int = 128, bka: int = 128, bnb: int = 32, bna: int = 128,
-               use_pallas: bool | None = None):
+               use_pallas: bool | None = None, plans: tuple | None = None):
     """Fused two-stage GEMT ``Y = (X3 ×_a C_a) ×_b C_b``. Returns (y, info).
 
     ``x3`` is the u-major unfolding ``(U, Nb, Na)`` (``engine.lower``
     produces it); the result is ``(U, Ka, Kb)``.  The stage-a partial
     product never touches HBM — see ``kernels/fused_gemt.py``.  Complex
     coefficients (DFT) route to the einsum reference (the kernel is
-    real-valued), with identical accounting.
+    real-valued), with identical accounting.  ``plans`` optionally supplies
+    the two precomputed ``esop_plan_cached`` tuples ``(plan_a, plan_b)``
+    for tracer ``ca``/``cb`` (inside a ``shard_map`` body).
     """
     if use_pallas is None:
         use_pallas = on_tpu()
@@ -131,10 +139,12 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     kbp = kb_padded(kb)
     # Both schedules memoized on the coefficient identities: C_a's 2D block
     # compaction and C_b's nb-slab compaction (one "column" of width kbp).
-    counts_a, idx_a, t_a, stats_a = esop_plan_cached(ca, bna, bka)
+    counts_a, idx_a, t_a, stats_a = (plans[0] if plans is not None
+                                     else esop_plan_cached(ca, bna, bka))
     # counts_b is unused: the slab stream is a single block column, so every
     # t_b step is live by construction — the kernel needs no b-side guard.
-    _counts_b, idx_b, t_b, stats_b = esop_plan_cached(cb, bnb, kbp)
+    _counts_b, idx_b, t_b, stats_b = (plans[1] if plans is not None
+                                      else esop_plan_cached(cb, bnb, kbp))
     info = {
         "blocks_dense_a": stats_a["blocks_dense"],
         "blocks_live_a": stats_a["blocks_live"],

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle is the bit-level specification its kernel is tested against
+(paper §5–§6 algorithms in plain jnp); off-TPU ``use_pallas=False``
+dispatch in ``ops.py`` runs these in production too.  See
+``docs/engine.md`` ("Lowering").
+"""
 from __future__ import annotations
 
 import jax

@@ -1,1 +1,7 @@
-"""Launch layer: production mesh, dry-run, roofline, train/serve drivers."""
+"""Launch layer: production mesh, dry-run, roofline, train/serve drivers.
+
+The roofline parser is the ground truth for the distributed schedule's
+collective bytes (``docs/distributed.md``, "Verifying the schedule");
+the mesh builders encode the paper's Eq. 7 processing-space shapes.  See
+``docs/architecture.md``.
+"""

@@ -1,4 +1,8 @@
-"""LM model substrate for the assigned architectures."""
+"""LM model substrate for the assigned architectures.
+
+Not a paper subsystem — the workload layer exercising the kernels at
+production scale (``docs/architecture.md``, "Production substrate").
+"""
 from .common import ShardCtx
 from .transformer import (apply_decode, apply_prefill, apply_train,
                           cache_axes_tree, init_cache, init_model, model_axes)

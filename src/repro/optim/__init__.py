@@ -1,1 +1,6 @@
+"""AdamW + schedule for the training substrate.
+
+Not a paper subsystem — production scaffolding for the north-star training
+path (``docs/architecture.md``, "Production substrate").
+"""
 from .adamw import OptConfig, adamw_update, global_norm, init_opt_state, schedule

@@ -1,3 +1,10 @@
+"""Production runtime: fault tolerance, elastic re-meshing, compressed
+collectives.
+
+Scales the TriADA schedule to unreliable fleets — ``compressed_psum`` is
+the lossy analogue of the paper's operand-bus multicast for gradient
+combines.  See ``docs/architecture.md`` ("Production substrate").
+"""
 from .fault_tolerance import (InjectedFailure, ResilienceConfig, RunReport,
                               run_resilient)
 from .compression import (compressed_psum, compressed_psum_tree,

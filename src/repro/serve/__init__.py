@@ -1,2 +1,8 @@
+"""Serving layer: LM decode sessions + batched 3D-transform serving.
+
+``DxtServeSession`` fronts the planned GEMT engine (paper §3 order search
++ §6 ESOP + stage fusion; ``docs/engine.md``) and, with ``mesh=``, the
+distributed TriADA schedule (§4–§5; ``docs/distributed.md``).
+"""
 from .decode import (DxtServeSession, ServeSession, SlotManager,
                      build_decode_step, build_prefill_step)

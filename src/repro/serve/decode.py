@@ -73,6 +73,13 @@ class DxtServeSession:
     order, backend, tile sizes) is built once per distinct (shape, kind,
     direction) and reused — the batch axis is folded into the lowered GEMM
     rows so each stage is a single kernel launch for the whole batch.
+
+    ``mesh`` (+ ``axes``/``batch_axis``) serves through the TriADA
+    distributed schedule instead: the same engine plan runs per-shard
+    inside ``shard_map`` (``docs/distributed.md``), and the session's
+    byte counters gain the collective split (``collective_bytes`` is the
+    modeled per-device psum_scatter ICI traffic; the HBM counters are
+    per-shard when a mesh is set).
     """
 
     kind: str = "dct"
@@ -83,6 +90,9 @@ class DxtServeSession:
     # appended (not inserted) so existing positional constructions keep
     # their meaning; None = auto stage fusion via the engine cost model
     fuse: bool | None = None
+    mesh: Any = None  # jax.sharding.Mesh | None
+    axes: Any = None  # per-mode mesh axes (None = engine default for mesh)
+    batch_axis: Any = None  # mesh axis sharding the request batch dim
 
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
@@ -90,6 +100,7 @@ class DxtServeSession:
         self.fused_served = 0  # requests that ran the fused stage pair
         self.hbm_bytes_moved = 0  # modeled traffic of everything served
         self.hbm_bytes_staged = 0  # what the all-staged schedule would move
+        self.collective_bytes = 0  # modeled ICI traffic (0 without a mesh)
         self.last_info: dict | None = None
 
     def _coeffs_for(self, dims: tuple[int, int, int]) -> tuple:
@@ -120,12 +131,15 @@ class DxtServeSession:
         y, info = gemt3_planned(x, c1, c2, c3, fuse=self.fuse,
                                 autotune=self.autotune,
                                 autotune_cache=self.autotune_cache,
-                                use_pallas=self.use_pallas, with_info=True)
+                                use_pallas=self.use_pallas, with_info=True,
+                                mesh=self.mesh, axes=self.axes,
+                                batch_axis=self.batch_axis)
         self.requests_served += int(x.shape[0])
         if info.get("fused"):
             self.fused_served += int(x.shape[0])
         self.hbm_bytes_moved += int(info.get("hbm_bytes_moved", 0))
         self.hbm_bytes_staged += int(info.get("hbm_bytes_staged", 0))
+        self.collective_bytes += int(info.get("collective_bytes", 0))
         self.last_info = info
         return y
 

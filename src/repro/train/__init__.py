@@ -1,2 +1,7 @@
+"""Training-step substrate (loss, state init, sharded train step).
+
+Not a paper subsystem — production scaffolding for the north-star training
+path (``docs/architecture.md``, "Production substrate").
+"""
 from .step import (build_train_step, cross_entropy, init_train_state,
                    loss_fn, train_state_axes)

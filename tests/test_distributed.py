@@ -1,29 +1,14 @@
 """Multi-device tests (distributed GEMT, sharded train step, roofline parser,
-compressed psum).  These need >1 device, so each runs in a subprocess with
-XLA_FLAGS set before jax initializes."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, timeout=600)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+compressed psum).  These need >1 device, so each runs through the
+``virtual_devices`` conftest fixture — a subprocess with XLA_FLAGS set
+before jax initializes.  The distributed *engine* path (planned Pallas
+kernels inside the shard_map schedule) is covered by
+``test_distributed_engine.py``."""
 
 
 class TestDistributedGemt:
-    def test_shardmap_stationary_tensor_all_axes(self):
-        _run("""
+    def test_shardmap_stationary_tensor_all_axes(self, virtual_devices):
+        virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import gemt3, gemt3_shardmap, gemt3_auto
         from repro.core.transforms import coefficient_matrix
@@ -43,10 +28,10 @@ class TestDistributedGemt:
         print("OK")
         """)
 
-    def test_shardmap_collective_schedule_is_minimal(self):
+    def test_shardmap_collective_schedule_is_minimal(self, virtual_devices):
         """TriADA schedule: only psum_scatter collectives, no all-gathers of
         the tensor (stationarity), coefficients replicated."""
-        out = _run("""
+        out = virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import gemt3_shardmap
         mesh = jax.make_mesh((2, 2), ("data", "model"))
@@ -65,9 +50,9 @@ class TestDistributedGemt:
         """)
         assert "AG 0" in out
 
-    def test_sharded_train_step_runs(self):
+    def test_sharded_train_step_runs(self, virtual_devices):
         """Real sharded execution of one train step (smoke config, 8 devs)."""
-        _run("""
+        virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.configs import load_config
         from repro.data import TokenSource
@@ -102,9 +87,9 @@ class TestDistributedGemt:
         print("loss", l0, "->", float(m["loss"]))
         """)
 
-    def test_moe_shardmap_matches_local(self):
+    def test_moe_shardmap_matches_local(self, virtual_devices):
         """Expert-parallel shard_map MoE == single-device local MoE."""
-        _run("""
+        virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp, dataclasses
         from repro.configs import load_config
         from repro.models.ffn import apply_moe, init_moe
@@ -128,8 +113,8 @@ class TestDistributedGemt:
         print("OK")
         """)
 
-    def test_compressed_psum_multi_device(self):
-        _run("""
+    def test_compressed_psum_multi_device(self, virtual_devices):
+        virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
@@ -146,9 +131,9 @@ class TestDistributedGemt:
         print("OK")
         """, devices=4)
 
-    def test_elastic_restore_smaller_mesh(self):
+    def test_elastic_restore_smaller_mesh(self, virtual_devices):
         """Checkpoint on 8 devices, restore + run on 4 (elastic re-mesh)."""
-        _run("""
+        virtual_devices("""
         import numpy as np, jax, jax.numpy as jnp, tempfile, dataclasses
         from repro.configs import load_config
         from repro.launch.mesh import act_rules, param_rules, shardings_from_axes
@@ -182,8 +167,8 @@ class TestDistributedGemt:
 
 
 class TestRooflineParser:
-    def test_scan_collective_ground_truth(self):
-        out = _run("""
+    def test_scan_collective_ground_truth(self, virtual_devices):
+        out = virtual_devices("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.roofline import analyze_hlo

@@ -1,0 +1,72 @@
+"""Tier-2 docs-health checks (marker: ``docs_health``).
+
+Two guards so the guides can't silently rot as the code grows:
+
+* any ``>>>`` doctest examples inside README/docs markdown must execute
+  (``--doctest-glob="*.md"`` over the pages in a subprocess — an exit
+  status of "no tests collected" is fine, a failing example is not);
+* every public symbol exported by ``repro.engine.__all__`` and
+  ``repro.core.__all__`` must be mentioned in at least one docs page
+  (README, ``docs/architecture.md``, ``docs/engine.md``,
+  ``docs/distributed.md``) — new API without documentation fails here.
+"""
+import glob
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _doc_pages() -> list[str]:
+    return [os.path.join(_ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(_ROOT, "docs", "*.md")))
+
+
+@pytest.mark.docs_health
+def test_markdown_doctests_execute():
+    """pytest --doctest-glob over README + docs/ runs clean (rc 0 or 5)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "--doctest-glob=*.md",
+         "-p", "no:cacheprovider", "--override-ini=addopts=",
+         *_doc_pages()],
+        capture_output=True, text=True, cwd=_ROOT, timeout=300)
+    # 5 == "no tests collected": pages without >>> examples are healthy.
+    assert r.returncode in (0, 5), (
+        f"markdown doctests failed (rc={r.returncode}):\n"
+        f"{r.stdout}\n{r.stderr}")
+
+
+@pytest.mark.docs_health
+def test_public_api_is_documented():
+    """Every repro.engine / repro.core __all__ symbol appears in the docs."""
+    import repro.core
+    import repro.engine
+
+    corpus = "\n".join(open(p, encoding="utf-8").read()
+                       for p in _doc_pages())
+    missing = [
+        f"{mod.__name__}.{sym}"
+        for mod in (repro.engine, repro.core)
+        for sym in mod.__all__
+        if sym not in corpus
+    ]
+    assert not missing, (
+        "public symbols absent from README/docs pages (document them in "
+        f"docs/architecture.md or the subsystem page): {missing}")
+
+
+@pytest.mark.docs_health
+def test_doc_pages_exist_and_cover_subpackages():
+    """architecture.md exists and names every src/repro subpackage."""
+    arch = os.path.join(_ROOT, "docs", "architecture.md")
+    assert os.path.exists(arch), "docs/architecture.md is missing"
+    text = open(arch, encoding="utf-8").read()
+    pkgs = sorted(
+        d for d in os.listdir(os.path.join(_ROOT, "src", "repro"))
+        if os.path.isdir(os.path.join(_ROOT, "src", "repro", d))
+        and not d.startswith("__"))
+    missing = [p for p in pkgs if f"{p}/" not in text]
+    assert not missing, f"subpackages absent from architecture.md: {missing}"
