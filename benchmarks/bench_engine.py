@@ -11,6 +11,11 @@
                         default DCT serving shapes: wall-clock both ways and
                         the analytic HBM-bytes-moved model (the intermediate
                         round-trip + transpose the fusion deletes)
+  F2 fused3 GEMT        whole-transform megakernel (all three contractions,
+                        both intermediates VMEM-resident) vs the fused pair
+                        vs staged: wall-clock three ways + the HBM model;
+                        shapes where the triple declines document the
+                        triple -> pair graceful degradation
 """
 from __future__ import annotations
 
@@ -134,11 +139,14 @@ def bench_autotune_cache(rows):
 
 
 def bench_fused_gemt(rows):
-    """F1: fused vs staged on the default DCT serving shapes.
+    """F1: fused *pair* vs staged on the default DCT serving shapes.
 
     The fused kernel must be numerically equivalent, move >= 1.5x fewer
     modeled HBM bytes (the intermediate's write/read + transpose copy it
     deletes) and be no slower in wall-clock on every benched shape.
+    ``fuse="pair"`` pins the depth — since the whole-transform megakernel
+    landed, auto mode prefers the triple on these shapes (that sweep is
+    F2 below).
     """
     from repro.core.transforms import coefficient_matrix
 
@@ -150,8 +158,8 @@ def bench_fused_gemt(rows):
         c = coefficient_matrix("dct", n)
         staged_us, fused_us = _tmin_interleaved(
             [lambda: gemt3_planned(x, c, c, c, fuse=False),
-             lambda: gemt3_planned(x, c, c, c)])
-        y, info = gemt3_planned(x, c, c, c, with_info=True)
+             lambda: gemt3_planned(x, c, c, c, fuse="pair")])
+        y, info = gemt3_planned(x, c, c, c, fuse="pair", with_info=True)
         y0 = gemt3_planned(x, c, c, c, fuse=False)
         err = float(jnp.max(jnp.abs(y - y0)))
         fp = info["fused"]
@@ -168,5 +176,53 @@ def bench_fused_gemt(rows):
             f"hbm_reduction={hbm_reduction:.2f}x;"
             f"hbm_reduction_ge_1.5={hbm_reduction >= 1.5};"
             f"pair_savings={fp['hbm_savings'] if fp else 0:.2f}x;"
+            f"vmem_bytes={fp['vmem_bytes'] if fp else 0};"
+            f"max_abs_err={err:.1e}"))
+
+
+def bench_fused3_gemt(rows):
+    """F2: whole-transform triple vs fused pair vs staged (DCT serving).
+
+    The megakernel must be numerically equivalent, move >= 2.5x fewer
+    modeled HBM bytes than staged and >= 1.3x fewer than the fused pair on
+    the shapes where it engages, and be faster than the pair in wall-clock.
+    On shapes whose accumulator no longer fits the VMEM budget at a useful
+    ka tile (N=64 here), auto mode degrades to the pair — the row records
+    that boundary rather than hiding it.
+    """
+    from repro.core.transforms import coefficient_matrix
+
+    rng = np.random.default_rng(11)
+    for batch, n in [(8, 32), (16, 48), (4, 64)]:
+        x = jnp.asarray(rng.normal(size=(batch, n, n, n)).astype(np.float32))
+        c = coefficient_matrix("dct", n)
+        staged_us, pair_us, auto_us = _tmin_interleaved(
+            [lambda: gemt3_planned(x, c, c, c, fuse=False),
+             lambda: gemt3_planned(x, c, c, c, fuse="pair"),
+             lambda: gemt3_planned(x, c, c, c)])
+        y, info = gemt3_planned(x, c, c, c, with_info=True)
+        _, i_staged = gemt3_planned(x, c, c, c, fuse=False, with_info=True)
+        _, i_pair = gemt3_planned(x, c, c, c, fuse="pair", with_info=True)
+        y0 = gemt3_planned(x, c, c, c, fuse=False)
+        err = float(jnp.max(jnp.abs(y - y0)))
+        fp = info["fused"]
+        triple = fp is not None and len(fp["modes"]) == 3
+        hbm_vs_staged = (i_staged["hbm_bytes_moved"]
+                         / max(info["hbm_bytes_moved"], 1))
+        hbm_vs_pair = (i_pair["hbm_bytes_moved"]
+                       / max(info["hbm_bytes_moved"], 1))
+        rows.append((
+            f"F2_fused3_gemt_B{batch}_N{n}", auto_us,
+            f"staged_us={staged_us:.1f};pair_us={pair_us:.1f};"
+            f"speedup_vs_staged={staged_us / max(auto_us, 1e-9):.2f}x;"
+            f"speedup_vs_pair={pair_us / max(auto_us, 1e-9):.2f}x;"
+            f"triple={triple};"
+            f"modes={fp['modes'] if fp else None};"
+            f"hbm_bytes_staged={i_staged['hbm_bytes_moved']};"
+            f"hbm_bytes_pair={i_pair['hbm_bytes_moved']};"
+            f"hbm_bytes_moved={info['hbm_bytes_moved']};"
+            f"hbm_vs_staged={hbm_vs_staged:.2f}x;"
+            f"hbm_vs_pair={hbm_vs_pair:.2f}x;"
+            f"hbm_vs_staged_ge_2.5={hbm_vs_staged >= 2.5};"
             f"vmem_bytes={fp['vmem_bytes'] if fp else 0};"
             f"max_abs_err={err:.1e}"))

@@ -3,14 +3,24 @@
 # from ``--out PATH`` (or ``--json PATH`` for backward compatibility), e.g.
 #
 #   python -m benchmarks.run --json BENCH_engine.json
-#   python -m benchmarks.run --filter fused --json --out BENCH_fused_gemt.json
+#   python -m benchmarks.run --filter fused_gemt --json --out BENCH_fused_gemt.json
+#   python -m benchmarks.run --filter fused3 --json --out BENCH_fused3_gemt.json
 #
 # ``--filter SUBSTR`` runs only the bench functions whose name contains the
 # substring (cheap CI artifacts without paying for the whole sweep).
+#
+# ``--check-regression ARTIFACT.json`` re-runs exactly the bench functions
+# that produced the artifact's rows and compares fresh results against the
+# committed numbers: deterministic model metrics (byte counts, ratios,
+# backends, error bounds) must reproduce, wall-clock numbers get a
+# ``--tol-time`` tolerance band.  Exit code 1 on any regression, so CI fails
+# loudly; the tier-2 ``bench_smoke`` pytest wires this against the committed
+# artifacts.
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 
 def _benches():
@@ -35,7 +45,135 @@ def _benches():
         bench_engine.bench_planned_vs_einsum,
         bench_engine.bench_autotune_cache,
         bench_engine.bench_fused_gemt,
+        bench_engine.bench_fused3_gemt,
     ]
+
+
+# Row-name prefix (up to the first "_") -> bench function name.  Artifacts
+# only record row names, so --check-regression uses this to re-run just the
+# functions that produced them.
+_ROW_PREFIXES = {
+    "B1": "bench_linear_timesteps", "B3": "bench_esop_savings",
+    "B4": "bench_esop_accuracy", "B5": "bench_staged_vs_elementwise",
+    "B6": "bench_generality",
+    "K1": "bench_sr_gemm_structure", "K2": "bench_esop_plan",
+    "K3": "bench_xla_gemm_baseline",
+    "D1": "bench_strong_scaling_model", "D2": "bench_shardmap_vs_auto",
+    "D3": "bench_distributed_engine",
+    "R1": "bench_roofline_summary",
+    "E1": "bench_planner_order", "E2": "bench_esop_dispatch",
+    "E3": "bench_planned_vs_einsum", "E4": "bench_autotune_cache",
+    "F1": "bench_fused_gemt", "F2": "bench_fused3_gemt",
+}
+
+# Derived keys whose values are wall-clock measurements (or booleans derived
+# from them): compared under the --tol-time band, never exactly.
+_NOISY_MARKERS = ("_us", "us_", "speedup", "wallclock", "no_worse", "warm")
+
+
+def _parse_derived(derived: str) -> dict[str, str]:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _as_float(v: str) -> float | None:
+    try:
+        return float(v[:-1] if v.endswith("x") else v)
+    except ValueError:
+        return None
+
+
+def _is_noisy(key: str) -> bool:
+    return any(m in key for m in _NOISY_MARKERS)
+
+
+def check_regression(path: str, tol_time: float | None = 1.0,
+                     rows: list[tuple[str, float, str]] | None = None,
+                     ) -> list[str]:
+    """Compare a committed BENCH artifact against a fresh run.
+
+    Returns a list of human-readable failure strings (empty = no
+    regression).  ``tol_time`` is the relative band on wall-clock numbers
+    (1.0 = fresh may be up to 2x the recorded value; speedups may shrink
+    to recorded/(1+tol)); ``None`` skips wall-clock comparison entirely
+    (deterministic model metrics only — useful where the committed
+    artifact was recorded on different hardware).  ``rows`` injects
+    pre-collected fresh rows (tests reuse one sweep for several checks).
+    """
+    try:
+        with open(path) as f:
+            recorded = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: cannot read artifact ({e})"]
+    if not isinstance(recorded, list) or not recorded:
+        return [f"{path}: not a BENCH artifact (expected a non-empty list)"]
+
+    if rows is None:
+        prefixes = {r["name"].split("_", 1)[0] for r in recorded}
+        unknown = sorted(p for p in prefixes if p not in _ROW_PREFIXES)
+        if unknown:
+            return [f"{path}: unknown row prefixes {unknown} — update "
+                    "_ROW_PREFIXES in benchmarks/run.py"]
+        wanted = {_ROW_PREFIXES[p] for p in prefixes}
+        rows = []
+        for fn in _benches():
+            if fn.__name__ in wanted:
+                fn(rows)
+    fresh = {name: (us, _parse_derived(derived)) for name, us, derived in rows}
+
+    failures = []
+    for rec in recorded:
+        name = rec["name"]
+        if name not in fresh:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        fresh_us, fresh_kv = fresh[name]
+        rec_us = float(rec.get("us_per_call", 0.0))
+        if (tol_time is not None and rec_us > 0
+                and fresh_us > rec_us * (1.0 + tol_time)):
+            failures.append(
+                f"{name}: us_per_call {fresh_us:.1f} exceeds recorded "
+                f"{rec_us:.1f} by more than {tol_time:.0%}")
+        for key, rec_v in _parse_derived(rec.get("derived", "")).items():
+            if key not in fresh_kv:
+                failures.append(f"{name}: derived key {key!r} disappeared")
+                continue
+            new_v = fresh_kv[key]
+            rec_f, new_f = _as_float(rec_v), _as_float(new_v)
+            if _is_noisy(key):
+                if tol_time is None or rec_f is None or new_f is None:
+                    continue  # timing-derived booleans flap with the host
+                # direction: "us" keys = lower is better, speedup ratios =
+                # higher is better; both get the same relative band
+                if key.endswith("us") or key.endswith("_us"):
+                    bad = rec_f > 0 and new_f > rec_f * (1.0 + tol_time)
+                else:
+                    bad = new_f < rec_f / (1.0 + tol_time)
+                if bad:
+                    failures.append(
+                        f"{name}: {key} regressed {rec_v} -> {new_v} "
+                        f"(band {tol_time:.0%})")
+            elif key == "max_abs_err":
+                if (rec_f is not None and new_f is not None
+                        and new_f > max(rec_f * 4, 1e-5)):
+                    failures.append(
+                        f"{name}: max_abs_err grew {rec_v} -> {new_v}")
+            elif rec_f is not None and new_f is not None:
+                # deterministic model metric: must reproduce (tiny float
+                # formatting slack only)
+                if abs(new_f - rec_f) > max(1e-6, 1e-6 * abs(rec_f)):
+                    failures.append(
+                        f"{name}: model metric {key} changed "
+                        f"{rec_v} -> {new_v} (re-record the artifact if "
+                        "the model legitimately moved)")
+            elif rec_v != new_v:
+                failures.append(
+                    f"{name}: {key} changed {rec_v!r} -> {new_v!r}")
+    return failures
 
 
 def collect_rows(name_filter: str | None = None) -> list[tuple[str, float, str]]:
@@ -58,7 +196,24 @@ def main(argv: list[str] | None = None) -> None:
                          "e.g. BENCH_fused_gemt.json)")
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="only run bench functions whose name contains this")
+    ap.add_argument("--check-regression", metavar="ARTIFACT", default=None,
+                    help="re-run the benches behind a committed BENCH "
+                         "artifact and fail (exit 1) on regressions")
+    ap.add_argument("--tol-time", type=float, default=1.0,
+                    help="relative tolerance band on wall-clock numbers for "
+                         "--check-regression (default 1.0 = 2x); negative "
+                         "disables wall-clock comparison")
     args = ap.parse_args(argv)
+
+    if args.check_regression:
+        tol = None if args.tol_time < 0 else args.tol_time
+        failures = check_regression(args.check_regression, tol_time=tol)
+        if failures:
+            for f in failures:
+                print(f"REGRESSION {f}")
+            sys.exit(1)
+        print(f"# {args.check_regression}: no regressions")
+        return
 
     # Resolve the artifact path before the sweep runs — a bad flag combo
     # must not waste minutes of benchmarking before erroring out.

@@ -10,31 +10,37 @@ scores collective bytes and the executor runs the per-shard schedule inside
 ``docs/distributed.md``; the paper-section→module map is in
 ``docs/architecture.md``.
 """
-from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FusedPairPlan,
-                   GemtPlan, StagePlan, build_plan, fused_tile_sizes,
+from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FUSE_MODES,
+                   FusedPairPlan, FusedTriplePlan, GemtPlan,
+                   SHARDED_EINSUM_BREAKEVEN_MACS, StagePlan, build_plan,
+                   fused3_tile_sizes, fused3_vmem_bytes, fused_tile_sizes,
                    fused_vmem_bytes, macs_for_order, mesh_axis_size,
                    normalize_axes, order_costs, plan_hbm_bytes,
-                   refresh_fused_pair, sparsity_signature, stage_hbm_bytes,
+                   refresh_fused_pair, refresh_fused_triple,
+                   sparsity_signature, stage_hbm_bytes,
                    staged_pair_hbm_bytes)
-from .lower import (lower_fused_pair, lower_sharded_stage, lower_stage,
-                    mode_fold, mode_unfold)
-from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
-                       default_cache_path, make_fused_key, make_key)
+from .lower import (lower_fused_pair, lower_fused_triple,
+                    lower_sharded_stage, lower_stage, mode_fold, mode_unfold)
+from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
+                       autotune_gemm, default_cache_path, make_fused3_key,
+                       make_fused_key, make_key)
 from .executor import (clear_plan_cache, default_mode_axes, execute,
                        execute_sharded_with_info, execute_with_info,
                        gemt3_planned, plan_cache_info, plan_gemt3)
 
 __all__ = [
-    "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FusedPairPlan",
-    "GemtPlan", "StagePlan", "build_plan", "fused_tile_sizes",
+    "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FUSE_MODES",
+    "FusedPairPlan", "FusedTriplePlan", "GemtPlan",
+    "SHARDED_EINSUM_BREAKEVEN_MACS", "StagePlan", "build_plan",
+    "fused3_tile_sizes", "fused3_vmem_bytes", "fused_tile_sizes",
     "fused_vmem_bytes", "macs_for_order", "mesh_axis_size", "normalize_axes",
     "order_costs", "plan_hbm_bytes",
-    "refresh_fused_pair", "sparsity_signature", "stage_hbm_bytes",
-    "staged_pair_hbm_bytes",
-    "lower_fused_pair", "lower_sharded_stage", "lower_stage", "mode_fold",
-    "mode_unfold",
-    "AutotuneCache", "autotune_fused", "autotune_gemm", "default_cache_path",
-    "make_fused_key", "make_key",
+    "refresh_fused_pair", "refresh_fused_triple", "sparsity_signature",
+    "stage_hbm_bytes", "staged_pair_hbm_bytes",
+    "lower_fused_pair", "lower_fused_triple", "lower_sharded_stage",
+    "lower_stage", "mode_fold", "mode_unfold",
+    "AutotuneCache", "autotune_fused", "autotune_fused3", "autotune_gemm",
+    "default_cache_path", "make_fused3_key", "make_fused_key", "make_key",
     "clear_plan_cache", "default_mode_axes", "execute",
     "execute_sharded_with_info", "execute_with_info", "gemt3_planned",
     "plan_cache_info", "plan_gemt3",

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from ..kernels import ops
 
 __all__ = ["AutotuneCache", "autotune_gemm", "autotune_fused",
-           "default_cache_path", "make_key", "make_fused_key"]
+           "autotune_fused3", "default_cache_path", "make_key",
+           "make_fused_key", "make_fused3_key"]
 
 _BOUNDS = (8, 512)  # power-of-two block-size lattice bounds
 _MIN_GAIN = 0.02  # relative speedup required to accept a move
@@ -48,8 +49,26 @@ def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "") -> str:
 
 
 def make_fused_key(u: int, na: int, ka: int, nb: int, kb: int,
-                   dtype, sig: str = "") -> str:
-    return f"fused:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}|{sig}"
+                   dtype, sig: str = "",
+                   vmem_budget: int | None = None) -> str:
+    """Autotune-cache key for the fused pair kernel (cache version v2).
+
+    The VMEM budget is part of the problem, exactly as in the plan cache's
+    ``vb=`` component: tiles tuned under a roomy budget must never replay
+    under a stricter one (the budget filter would not re-run on a cache
+    hit).  v1 keys lacked the budget, so the version bump orphans them.
+    """
+    return (f"fused:v2:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
+            f"|{sig}|vb{vmem_budget}")
+
+
+def make_fused3_key(u: int, na: int, ka: int, nb: int, kb: int,
+                    nc: int, kc: int, dtype, sig: str = "",
+                    vmem_budget: int | None = None) -> str:
+    """Autotune-cache key for the whole-transform megakernel (budget-keyed
+    from day one — see :func:`make_fused_key`)."""
+    return (f"fused3:v1:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
+            f"|{jnp.dtype(dtype).name}|{sig}|vb{vmem_budget}")
 
 
 class AutotuneCache:
@@ -100,11 +119,11 @@ def _pow2_floor(d: int) -> int:
     return 1 << (max(int(d), 1).bit_length() - 1)
 
 
-def _neighbors(cfg: tuple[int, int, int],
-               caps: tuple[int, int, int]) -> list[tuple[int, int, int]]:
+def _neighbors(cfg: tuple[int, ...],
+               caps: tuple[int, ...]) -> list[tuple[int, ...]]:
     lo, hi = _BOUNDS
     out = []
-    for i in range(3):
+    for i in range(len(cfg)):
         for factor in (2, 0.5):
             v = int(cfg[i] * factor)
             if lo <= v <= min(hi, caps[i]):
@@ -222,11 +241,11 @@ def autotune_fused(
     nb, kb = cb.shape
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
     cache = cache if cache is not None else AutotuneCache()
-    # bna/kbp/budget are part of the problem: a hit tuned under a roomier
-    # budget (or a different pinned na tile) must not leak oversized tiles
-    # into a stricter run.
-    key = (make_fused_key(u, na, ka, nb, kb, dtype, sig)
-           + f"|bna{bna}|kbp{kbp}|vb{budget}")
+    # bna/kbp are part of the problem too: a hit tuned with a different
+    # pinned na tile must not leak mismatched tiles (the budget itself is
+    # keyed inside make_fused_key since the v2 bump).
+    key = (make_fused_key(u, na, ka, nb, kb, dtype, sig, vmem_budget=budget)
+           + f"|bna{bna}|kbp{kbp}")
     isz = jnp.dtype(dtype).itemsize
     lo, _hi = _BOUNDS
     caps = tuple(max(lo, _pow2_floor(d)) for d in (u, ka, nb))
@@ -277,6 +296,105 @@ def autotune_fused(
             break
     cache.put(key, {"bu": cur[0], "bka": cur[1], "bnb": cur[2],
                     "us": round(cur_us, 2), "kind": "fused", "tuned": True})
+    try:
+        cache.save()
+    except OSError:
+        pass
+    return cur
+
+
+def autotune_fused3(
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    cc: jnp.ndarray,
+    *,
+    rows: int,
+    dtype,
+    start: tuple[int, int, int, int],
+    bna: int,
+    kbp: int,
+    kcp: int,
+    sig: str = "",
+    cache: AutotuneCache | None = None,
+    max_steps: int = 4,
+    reps: int = 2,
+    use_pallas: bool | None = None,
+    vmem_budget: int | None = None,
+) -> tuple[int, int, int, int]:
+    """Hill-climb the megakernel's ``(bu, bka, bnb, bnc)`` tile quadruple.
+
+    ``rows``/``dtype`` describe the u-major input ``(rows, Nc, Nb, Na)``;
+    the ones-probe is only materialized when a measurement actually runs.
+    ``start`` is the planner's (VMEM-feasible) choice; every candidate is
+    re-checked against the footprint model so tuning can never climb out
+    of the budget.  ``bna``/``kbp``/``kcp`` stay pinned (Kb/Kc are not
+    grid-blocked and the na tile only trades partial-width for step
+    count).
+    """
+    from .plan import DEFAULT_VMEM_BUDGET, fused3_vmem_bytes
+
+    u = int(rows)
+    na, ka = ca.shape
+    nb, kb = cb.shape
+    nc, kc = cc.shape
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    cache = cache if cache is not None else AutotuneCache()
+    key = (make_fused3_key(u, na, ka, nb, kb, nc, kc, dtype, sig,
+                           vmem_budget=budget)
+           + f"|bna{bna}|kbp{kbp}|kcp{kcp}")
+    isz = jnp.dtype(dtype).itemsize
+    lo, _hi = _BOUNDS
+    caps = tuple(max(lo, _pow2_floor(d)) for d in (u, ka, nb, nc))
+
+    def fits(cfg):
+        return fused3_vmem_bytes(cfg[0], cfg[1], cfg[2], cfg[3], bna, kbp,
+                                 kcp, isz) <= budget
+
+    knobs_live = use_pallas is True or ops.on_tpu()
+    hit = cache.get(key)
+    if hit is not None and (hit.get("tuned", True) or not knobs_live):
+        cfg = (int(hit["bu"]), int(hit["bka"]), int(hit["bnb"]),
+               int(hit["bnc"]))
+        if fits(cfg):  # belt-and-braces: never trust a cache into VMEM OOM
+            return cfg
+
+    cur = tuple(start)
+    if not knobs_live:
+        cache.put(key, {"bu": cur[0], "bka": cur[1], "bnb": cur[2],
+                        "bnc": cur[3], "us": 0.0, "kind": "fused3",
+                        "tuned": False})
+        try:
+            cache.save()
+        except OSError:
+            pass
+        return cur
+
+    x4 = jnp.ones((u, nc, nb, na), dtype=dtype)  # probe: measured path only
+
+    def measure(cfg):
+        bu, bka, bnb, bnc_ = cfg
+
+        def call():
+            y, _ = ops.fused3_gemt(x4, ca, cb, cc, bu=bu, bka=bka, bnb=bnb,
+                                   bnc=bnc_, bna=bna, use_pallas=use_pallas)
+            return y
+
+        return _time_us(call, reps=reps)
+
+    cur_us = measure(cur)
+    for _ in range(max_steps):
+        moved = False
+        for cand in _neighbors(cur, caps):
+            if not fits(cand):
+                continue
+            us = measure(cand)
+            if us < cur_us * (1.0 - _MIN_GAIN):
+                cur, cur_us, moved = cand, us, True
+        if not moved:
+            break
+    cache.put(key, {"bu": cur[0], "bka": cur[1], "bnb": cur[2],
+                    "bnc": cur[3], "us": round(cur_us, 2), "kind": "fused3",
+                    "tuned": True})
     try:
         cache.save()
     except OSError:

@@ -27,12 +27,13 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..kernels import ops
 from ..memo import ArrayMemo
-from .autotune import (AutotuneCache, autotune_fused, autotune_gemm,
-                       make_key)
-from .lower import lower_fused_pair, lower_sharded_stage, lower_stage
+from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
+                       autotune_gemm, make_key)
+from .lower import (lower_fused_pair, lower_fused_triple,
+                    lower_sharded_stage, lower_stage)
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, GemtPlan,
                    _is_traced, build_plan, normalize_axes, plan_hbm_bytes,
-                   refresh_fused_pair)
+                   refresh_fused_pair, refresh_fused_triple)
 
 __all__ = [
     "plan_gemt3",
@@ -105,7 +106,7 @@ def plan_gemt3(
     order: tuple[int, int, int] | None = None,
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
-    fuse: bool | None = None,
+    fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     mesh=None,
     axes=None,
@@ -141,9 +142,12 @@ def _autotuned_plan(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     x_dtype=jnp.float32,
 ) -> GemtPlan:
-    """Replace each kernel stage's (and the fused pair's) tiles with tuned ones."""
+    """Replace each kernel stage's (and the fused pair's/triple's) tiles
+    with tuned ones."""
     fused_idx = (set() if plan.fused is None
                  else {plan.fused.first, plan.fused.first + 1})
+    if plan.fused3 is not None:
+        fused_idx = {0, 1, 2}  # the megakernel covers the whole schedule
     stages = []
     for i, st in enumerate(plan.stages):
         if st.backend == "einsum" or i in fused_idx:
@@ -170,7 +174,22 @@ def _autotuned_plan(
         stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
 
     fused = plan.fused
+    fused3 = plan.fused3
     isz = jnp.dtype(x_dtype).itemsize
+    if fused3 is not None:
+        ca, cb, cc = cs[fused3.mode_a], cs[fused3.mode_b], cs[fused3.mode_c]
+        bu, bka, bnb, bnc = autotune_fused3(
+            ca, cb, cc, rows=fused3.rows * max(batch, 1), dtype=x_dtype,
+            start=(fused3.bu, fused3.bka, fused3.bnb, fused3.bnc),
+            bna=fused3.bna, kbp=fused3.kbp, kcp=fused3.kcp,
+            sig=":".join(_fingerprint(c) for c in (ca, cb, cc)), cache=cache,
+            use_pallas=use_pallas, vmem_budget=vmem_budget)
+        if (bu, bka, bnb, bnc) != (fused3.bu, fused3.bka, fused3.bnb,
+                                   fused3.bnc):
+            fused3 = refresh_fused_triple(
+                dataclasses.replace(fused3, bu=bu, bka=bka, bnb=bnb,
+                                    bnc=bnc),
+                ca, cb, cc, batch, isz)
     if fused is not None:
         ca, cb = cs[fused.mode_a], cs[fused.mode_b]
         bu, bka, bnb = autotune_fused(
@@ -189,9 +208,10 @@ def _autotuned_plan(
     # x's itemsize keeps the units identical to build_plan's model.
     stages_t = tuple(stages)
     return dataclasses.replace(
-        plan, stages=stages_t, fused=fused,
+        plan, stages=stages_t, fused=fused, fused3=fused3,
         hbm_bytes_staged=plan_hbm_bytes(stages_t, None, batch, isz),
-        hbm_bytes_moved=plan_hbm_bytes(stages_t, fused, batch, isz))
+        hbm_bytes_moved=plan_hbm_bytes(stages_t, fused, batch, isz,
+                                       fused3=fused3))
 
 
 def execute_with_info(
@@ -217,6 +237,14 @@ def execute_with_info(
     stage_infos = []
     i = 0
     while i < len(plan.stages):
+        if plan.fused3 is not None and i == 0:
+            ft = plan.fused3
+            y, finfo = lower_fused_triple(y, cs[ft.mode_a], cs[ft.mode_b],
+                                          cs[ft.mode_c], ft,
+                                          use_pallas=use_pallas)
+            stage_infos.append(finfo)
+            i += 3
+            continue
         if plan.fused is not None and i == plan.fused.first:
             fp = plan.fused
             y, finfo = lower_fused_pair(y, cs[fp.mode_a], cs[fp.mode_b], fp,
@@ -287,7 +315,10 @@ def _sharded_callable(plan: GemtPlan, mesh, use_pallas,
     host-side accounting, identical for every call of this program).
     """
     fp = plan.fused
+    ft = plan.fused3
     fused_idx = set() if fp is None else {fp.first, fp.first + 1}
+    if ft is not None:
+        fused_idx = {0, 1, 2}
     esop_plans = {}
     for i, st in enumerate(plan.stages):
         if st.backend == "esop" and i not in fused_idx:
@@ -297,6 +328,11 @@ def _sharded_callable(plan: GemtPlan, mesh, use_pallas,
     if fp is not None:
         fused_plans = (ops.esop_plan_cached(cs[fp.mode_a], fp.bna, fp.bka),
                        ops.esop_plan_cached(cs[fp.mode_b], fp.bnb, fp.kbp))
+    fused3_plans = None
+    if ft is not None:
+        fused3_plans = (ops.esop_plan_cached(cs[ft.mode_a], ft.bna, ft.bka),
+                        ops.esop_plan_cached(cs[ft.mode_b], ft.bnb, ft.kbp),
+                        ops.esop_plan_cached(cs[ft.mode_c], ft.bnc, ft.kcp))
 
     spec = (P(plan.batch_axis, *plan.axes) if batched else P(*plan.axes))
     stage_infos: list[dict] = []
@@ -307,6 +343,15 @@ def _sharded_callable(plan: GemtPlan, mesh, use_pallas,
         y = x_l
         i = 0
         while i < len(plan.stages):
+            if ft is not None and i == 0:
+                y, finfo = lower_fused_triple(y, cs_l[ft.mode_a],
+                                              cs_l[ft.mode_b],
+                                              cs_l[ft.mode_c], ft,
+                                              use_pallas=use_pallas,
+                                              plans=fused3_plans)
+                stage_infos.append(finfo)
+                i += 3
+                continue
             if fp is not None and i == fp.first:
                 y, finfo = lower_fused_pair(y, cs_l[fp.mode_a],
                                             cs_l[fp.mode_b], fp,
@@ -362,18 +407,29 @@ def execute_sharded_with_info(
     tiles = tuple((s.bm, s.bn, s.bk) for s in plan.stages)
     ftiles = (None if plan.fused is None else
               (plan.fused.bu, plan.fused.bka, plan.fused.bnb))
-    key = (plan.key, tiles, ftiles, use_pallas, x.ndim, _fingerprint(c1),
-           _fingerprint(c2), _fingerprint(c3))
+    f3tiles = (None if plan.fused3 is None else
+               (plan.fused3.bu, plan.fused3.bka, plan.fused3.bnb,
+                plan.fused3.bnc))
+    key = (plan.key, tiles, ftiles, f3tiles, use_pallas, x.ndim,
+           _fingerprint(c1), _fingerprint(c2), _fingerprint(c3))
     hit = _SHARDED_FN_CACHE.get(key)
     if hit is None:
-        hit = _sharded_callable(plan, mesh, use_pallas,
-                                {1: c1, 2: c2, 3: c3}, batched=x.ndim == 4)
+        fn, stage_infos = _sharded_callable(
+            plan, mesh, use_pallas, {1: c1, 2: c2, 3: c3},
+            batched=x.ndim == 4)
+        hit = [fn, stage_infos, None]  # assembled info filled post-trace
         _SHARDED_FN_CACHE[key] = hit
-    fn, stage_infos = hit
+    fn, stage_infos, info = hit
     y = fn(x, c1, c2, c3)
     if out is not None:
         y = out + y
-    return y, _assemble_info(plan, list(stage_infos))
+    if info is None:
+        # stage_infos is static trace-time accounting, identical for every
+        # call of this program — assemble once, not per request (the
+        # serving hot loop measured the per-call dict building).
+        info = _assemble_info(plan, list(stage_infos))
+        hit[2] = info
+    return y, dict(info)
 
 
 def execute(plan, x, c1, c2, c3, out=None, *, use_pallas=None):
@@ -392,7 +448,7 @@ def gemt3_planned(
     order: tuple[int, int, int] | None = None,  # is `order`, not `out`
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
-    fuse: bool | None = None,
+    fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     autotune: bool = False,
     autotune_cache: AutotuneCache | str | None = None,
@@ -406,10 +462,15 @@ def gemt3_planned(
 
     Numerically equivalent to :func:`repro.core.gemt.gemt3` (any order gives
     the same result up to float rounding) but the stage order, per-stage
-    dense/block-sparse backend, stage fusion (``fuse=None`` auto-fuses the
-    pair with the largest modeled HBM saving whose tiles fit
-    ``vmem_budget``) and kernel tile sizes are chosen by the cost model
-    instead of hard-coded.  ``x`` may carry a leading batch axis.
+    dense/block-sparse backend, stage fusion and kernel tile sizes are
+    chosen by the cost model instead of hard-coded.  ``fuse=None``
+    auto-selects the deepest fusion that models the fewest HBM bytes —
+    the whole-transform megakernel (all three contractions in one launch,
+    both intermediates resident in VMEM) when its tiles fit
+    ``vmem_budget``, degrading to the fused pair and then to staged;
+    ``"pair"``/``"triple"`` pin the depth, ``True`` forces the deepest
+    feasible, ``False`` stages everything.  ``x`` may carry a leading
+    batch axis.
 
     ``mesh`` switches to the TriADA distributed schedule: ``x`` (global)
     is sharded per ``axes`` (default: mesh axes in order, e.g.

@@ -20,11 +20,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core import gemt as _gemt
 from ..kernels import ops
-from .plan import FusedPairPlan, StagePlan
+from .plan import FusedPairPlan, FusedTriplePlan, StagePlan
 
 __all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair",
-           "lower_sharded_stage"]
+           "lower_fused_triple", "lower_sharded_stage"]
+
+# The einsum backend contracts in place (XLA folds the relayout into one
+# dot_general) instead of the unfold→matmul→fold chain, whose
+# reshape-of-transpose materializes two copies — measurably slower exactly
+# where the planner picks einsum, i.e. stages too small to amortize a
+# kernel launch.  Specs are mode_product's table plus a leading batch axis.
+_EINSUM3 = _gemt._EINSUM
+
+
+def _batched_spec(spec: str) -> str:
+    lhs, rest = spec.split(",")
+    c, out = rest.split("->")
+    return f"z{lhs},{c}->z{out}"
+
+
+_EINSUM4 = {m: _batched_spec(s) for m, s in _EINSUM3.items()}
+
+
+def _einsum_stage(x: jnp.ndarray, c: jnp.ndarray, mode: int) -> jnp.ndarray:
+    spec = (_EINSUM4 if x.ndim == 4 else _EINSUM3)[mode]
+    return jnp.einsum(spec, x, c)
 
 
 def mode_unfold(x: jnp.ndarray, mode: int) -> tuple[jnp.ndarray, tuple[int, ...]]:
@@ -66,12 +88,15 @@ def lower_stage(
     distributed executor computes it host-side before entering the
     ``shard_map`` body, where ``c`` is a tracer.
     """
+    if stage.backend == "einsum":
+        rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
+        info = {"mode": stage.mode, "backend": "einsum", "rows": int(rows),
+                "macs": stage.macs}
+        return _einsum_stage(x, c, stage.mode), info
     x2d, lead = mode_unfold(x, stage.mode)
     info: dict = {"mode": stage.mode, "backend": stage.backend,
                   "rows": int(x2d.shape[0]), "macs": stage.macs}
-    if stage.backend == "einsum":
-        y2d = jnp.matmul(x2d, c)
-    elif stage.backend == "esop":
+    if stage.backend == "esop":
         y2d, esop_info = ops.esop_gemm(x2d, c, bm=stage.bm, bn=stage.bn,
                                        bk=stage.bk, use_pallas=use_pallas,
                                        plan=esop_plan)
@@ -109,23 +134,25 @@ def lower_sharded_stage(
         idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
     c_rows = jax.lax.dynamic_slice_in_dim(c, idx * stage.n, stage.n, 0)
 
-    x2d, lead = mode_unfold(x, stage.mode)
+    rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
     info: dict = {"mode": stage.mode, "backend": stage.backend,
-                  "rows": int(x2d.shape[0]), "macs": stage.macs,
+                  "rows": int(rows), "macs": stage.macs,
                   "axis": stage.axis, "shards": stage.shards,
                   "collective_bytes": stage.collective_bytes}
     if stage.backend == "einsum":
-        y2d = jnp.matmul(x2d, c_rows)
+        partial = _einsum_stage(x, c_rows, stage.mode)
     elif stage.backend == "sr_gemm":
+        x2d, lead = mode_unfold(x, stage.mode)
         y2d = ops.sr_gemm(x2d, c_rows, bm=stage.bm, bn=stage.bn, bk=stage.bk,
                           use_pallas=use_pallas)
+        partial = mode_fold(y2d, lead, stage.mode)
     else:
         # The planner never assigns esop here: the row slice is selected by
         # axis_index at run time, so its zero structure is device-dependent
         # and the host-side block schedule cannot exist.
         raise ValueError(
             f"backend {stage.backend!r} cannot run a sharded-mode stage")
-    partial = mode_fold(y2d, lead, stage.mode)  # full K_s, partial sum
+    # partial holds the full K_s extent as a partial sum
     ax = partial.ndim - 3 + (stage.mode - 1)
     moved = jnp.moveaxis(partial, ax, 0)
     combined = jax.lax.psum_scatter(moved, names, scatter_dimension=0,
@@ -169,5 +196,50 @@ def lower_fused_pair(
                   "hbm_bytes_staged": fp.hbm_bytes_staged,
                   "hbm_bytes_fused": fp.hbm_bytes_fused,
                   "hbm_savings": fp.hbm_savings}
+    info.update(kinfo)
+    return y, info
+
+
+def lower_fused_triple(
+    x: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    cc: jnp.ndarray,
+    ft: FusedTriplePlan,
+    *,
+    use_pallas: bool | None = None,
+    plans: tuple | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Execute the whole transform as one fused launch.  Returns ``(y, info)``.
+
+    Unfolds ``x`` into the u-major ``(U, Nc, Nb, Na)`` layout the
+    megakernel streams (only the batch folds into U — every tensor mode is
+    contracted), runs all three contractions in one launch — neither
+    inter-stage intermediate ever exists in HBM, so both fold/unfold
+    transposes dissolve into the kernel's BlockSpec index maps — and folds
+    ``(U, Ka, Kb, Kc)`` back into tensor modes.  ``plans`` optionally
+    carries the three precomputed ``esop_plan_cached`` tuples (a/b/c), for
+    callers whose coefficients are tracers inside a ``shard_map`` body.
+    """
+    if x.ndim not in (3, 4):
+        raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
+    off = x.ndim - 3
+    axa = off + ft.mode_a - 1
+    axb = off + ft.mode_b - 1
+    axc = off + ft.mode_c - 1
+    xm = jnp.moveaxis(x, (axc, axb, axa), (-3, -2, -1))
+    lead = xm.shape[:-3]
+    x4 = xm.reshape(-1, *xm.shape[-3:])
+    y4, kinfo = ops.fused3_gemt(x4, ca, cb, cc, bu=ft.bu, bka=ft.bka,
+                                bnb=ft.bnb, bnc=ft.bnc, bna=ft.bna,
+                                use_pallas=use_pallas, plans=plans)
+    y = jnp.moveaxis(y4.reshape(*lead, ft.ka, ft.kb, ft.kc),
+                     (-3, -2, -1), (axa, axb, axc))
+    info: dict = {"modes": (ft.mode_a, ft.mode_b, ft.mode_c),
+                  "backend": "fused", "rows": int(x4.shape[0]),
+                  "macs": ft.macs, "vmem_bytes": ft.vmem_bytes,
+                  "hbm_bytes_staged": ft.hbm_bytes_staged,
+                  "hbm_bytes_fused": ft.hbm_bytes_fused,
+                  "hbm_savings": ft.hbm_savings}
     info.update(kinfo)
     return y, info

@@ -58,6 +58,7 @@ AxisName = str | tuple[str, ...] | None
 __all__ = [
     "StagePlan",
     "FusedPairPlan",
+    "FusedTriplePlan",
     "GemtPlan",
     "build_plan",
     "order_costs",
@@ -65,7 +66,10 @@ __all__ = [
     "sparsity_signature",
     "fused_tile_sizes",
     "fused_vmem_bytes",
+    "fused3_tile_sizes",
+    "fused3_vmem_bytes",
     "refresh_fused_pair",
+    "refresh_fused_triple",
     "stage_hbm_bytes",
     "staged_pair_hbm_bytes",
     "plan_hbm_bytes",
@@ -74,6 +78,8 @@ __all__ = [
     "DEFAULT_ESOP_THRESHOLD",
     "DEFAULT_VMEM_BUDGET",
     "MIN_KERNEL_DIM",
+    "SHARDED_EINSUM_BREAKEVEN_MACS",
+    "FUSE_MODES",
 ]
 
 DEFAULT_ESOP_THRESHOLD = 0.3  # zero-block fraction at which block-ESOP wins
@@ -81,6 +87,18 @@ MIN_KERNEL_DIM = 8  # below this, padding overhead beats the kernels
 # VMEM the fused kernel may claim for its tiles + scratch: roughly half a
 # TPU core's ~16 MB, leaving headroom for Pallas pipelining internals.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+# Per-shard stages below this many (batched) MACs run the einsum fallback:
+# at these sizes the kernel launch + unfold padding overhead beats any
+# streaming win (BENCH_distributed_engine D3_dense_32 measured the kernel
+# path at 0.82x vs einsum before this break-even existed).
+SHARDED_EINSUM_BREAKEVEN_MACS = 1 << 20
+# Valid values of the ``fuse`` knob (build_plan / gemt3_planned):
+#   None     auto — deepest fusion that models the fewest HBM bytes
+#   True     force the deepest feasible fusion (triple, else pair)
+#   False    never fuse (all-staged schedule)
+#   "pair"   pair fusion only (never the whole-transform megakernel)
+#   "triple" whole-transform fusion or nothing (no pair fallback)
+FUSE_MODES = (None, True, False, "pair", "triple")
 
 
 def _pow2_clamp(d: int, lo: int = 8, hi: int = 128) -> int:
@@ -175,6 +193,51 @@ class FusedPairPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedTriplePlan:
+    """All three stages fused into one whole-transform megakernel:
+    ``Y = ((X ×_a C_a) ×_b C_b) ×_c C_c`` with both intermediates resident
+    in VMEM (``kernels/fused3_gemt.py``).
+
+    Covers the entire ``GemtPlan.order`` (there is no "first" index — the
+    triple always starts at stage 0 and ends the schedule); the three
+    ``StagePlan`` entries stay in the plan untouched as the staged
+    fallback.  ``mode_a`` is contracted first (innermost stream, full 2D
+    ESOP skipping), ``mode_b`` second and ``mode_c`` third (slab-resident,
+    slab-level skipping).
+    """
+
+    mode_a: int
+    mode_b: int
+    mode_c: int
+    rows: int  # untouched GEMM rows excl. batch — always 1 (all modes fuse)
+    na: int
+    ka: int
+    nb: int
+    kb: int
+    nc: int
+    kc: int
+    bu: int  # fused tiles (the autotunable quadruple is bu/bka/bnb/bnc)
+    bka: int
+    bnb: int
+    bnc: int
+    bna: int
+    kbp: int  # padded full-width Kb slab resident in VMEM
+    kcp: int  # padded full-width Kc slab resident in VMEM
+    vmem_bytes: int  # modeled on-chip footprint at these tiles
+    hbm_bytes_staged: int  # modeled whole-schedule traffic executed staged
+    hbm_bytes_fused: int  # modeled whole-schedule traffic fused
+    macs: int  # dense MACs of the three covered stages (per sample)
+    zero_block_frac_a: float
+    zero_block_frac_b: float
+    zero_block_frac_c: float
+
+    @property
+    def hbm_savings(self) -> float:
+        """Staged-over-fused modeled HBM traffic ratio (>1 means fusing wins)."""
+        return self.hbm_bytes_staged / max(self.hbm_bytes_fused, 1)
+
+
+@dataclasses.dataclass(frozen=True)
 class GemtPlan:
     """A fully scheduled 3-stage GEMT: order + per-stage lowering choices."""
 
@@ -187,6 +250,7 @@ class GemtPlan:
     peak_intermediate_bytes: int
     key: str  # cache key this plan was built under
     fused: FusedPairPlan | None = None  # stage pair run as one kernel
+    fused3: FusedTriplePlan | None = None  # all 3 stages as one megakernel
     hbm_bytes_staged: int = 0  # modeled traffic of the all-staged schedule
     hbm_bytes_moved: int = 0  # modeled traffic of the planned schedule
     # --- topology (all defaults = single-device; byte fields above are
@@ -328,7 +392,21 @@ def _plan_stage(
                          0.0, bm, bn, bk, axis, shards, coll)
 
     if shards > 1 or _is_traced(c):
-        backend = ("einsum" if min(rows_total, n, k) < MIN_KERNEL_DIM
+        # Break-even fallback (sharded modes only): the per-shard GEMM of a
+        # small serving tensor is too little work to amortize the kernel
+        # dispatch + unfold padding, and the row slice rules out ESOP
+        # anyway — the modeled size decides, not a hard-coded backend.
+        # Off-TPU every sharded kernel stage is below break-even by
+        # construction: the reference dispatch is the same matmul plus the
+        # unfold's transpose copies, so einsum strictly dominates
+        # (BENCH_distributed_engine D3 measured 0.82x before this existed).
+        from ..kernels import ops
+        below_breakeven = (shards > 1 and
+                           (not ops.on_tpu()
+                            or rows_total * n * k
+                            < SHARDED_EINSUM_BREAKEVEN_MACS))
+        backend = ("einsum" if below_breakeven
+                   or min(rows_total, n, k) < MIN_KERNEL_DIM
                    else "sr_gemm")
         return StagePlan(mode, n, k, rows, backend, dense_macs, dense_macs,
                          0.0, bm, bn, bk, axis, shards, coll)
@@ -494,6 +572,94 @@ def fused_tile_sizes(
     return tiles["bu"], tiles["bka"], tiles["bnb"], tiles["bna"], kbp
 
 
+def fused3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
+                      kbp: int, kcp: int, itemsize: int) -> int:
+    """Modeled VMEM footprint of the whole-transform megakernel.
+
+    Streamed operands are double-buffered by the Pallas pipeline (×2); the
+    two inter-stage partials and the output accumulator are fp32 scratch.
+    The ``bu·bka·Kbp·Kcp`` accumulator term dominates and is what bounds
+    triple fusability as the transform extents grow.
+    """
+    return (2 * bu * bnc * bnb * bna * itemsize  # streamed X slab
+            + 2 * bna * bka * itemsize           # streamed C_a block
+            + 2 * bnb * kbp * itemsize           # resident C_b slab
+            + 2 * bnc * kcp * itemsize           # resident C_c slab
+            + 4 * bu * bnc * bnb * bka           # stage-1 partial (f32)
+            + 4 * bu * bnc * bka * kbp           # stage-2 partial (f32)
+            + 4 * bu * bka * kbp * kcp           # output accumulator (f32)
+            + 2 * bu * bka * kbp * kcp * itemsize)  # output tile
+
+
+def fused3_tile_sizes(
+    rows_total: int, na: int, ka: int, nb: int, kb: int, nc: int, kc: int,
+    itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    start: tuple[int, int, int, int] | None = None,
+) -> tuple[int, int, int, int, int, int, int] | None:
+    """Pick ``(bu, bka, bnb, bnc, bna, kbp, kcp)`` fitting the VMEM budget,
+    or None.
+
+    ``start`` optionally seeds ``(bka, bna, bnb, bnc)`` (the planner aligns
+    them with the staged stages' ESOP block grids so sparse skipping
+    composes).  Kb and Kc are not blocked (the partials/accumulator hold
+    the full padded slab widths so stages 2–3 never revisit a partial);
+    shrinking ``bka`` is the pressure valve, at the cost of one extra X
+    re-stream per ka-block — the HBM model, not this function, judges
+    whether that trade still beats the pair kernel.
+    """
+    kbp, kcp = kb_padded(kb), kb_padded(kc)
+    bka0, bna0, bnb0, bnc0 = start if start is not None else (None,) * 4
+    tiles = {
+        "bu": _pow2_clamp(rows_total),
+        "bka": min(bka0 or 128, _pow2_ceil_clamp(ka)),
+        # bnb/bnc only size the on-chip partials (total traffic is
+        # independent of both), so they start small
+        "bnb": min(bnb0 or 16, _pow2_ceil_clamp(nb, hi=16)),
+        "bnc": min(bnc0 or 16, _pow2_ceil_clamp(nc, hi=16)),
+        "bna": min(bna0 or 128, _pow2_ceil_clamp(na)),
+    }
+
+    def footprint():
+        return fused3_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
+                                 tiles["bnc"], tiles["bna"], kbp, kcp,
+                                 itemsize)
+
+    while footprint() > vmem_budget:
+        shrinkable = [k for k in ("bu", "bka", "bnb", "bnc", "bna")
+                      if tiles[k] > 8]
+        if not shrinkable:
+            return None
+        k = max(shrinkable, key=lambda k: tiles[k])
+        tiles[k] = 1 << ((tiles[k] - 1).bit_length() - 1)
+    return (tiles["bu"], tiles["bka"], tiles["bnb"], tiles["bnc"],
+            tiles["bna"], kbp, kcp)
+
+
+def _fused3_hbm_bytes(rows_total: int, ka: int,
+                      tiles: tuple[int, int, int, int, int, int, int],
+                      live_a: int, live_b: int, live_c: int,
+                      itemsize: int) -> int:
+    """Modeled HBM traffic of the megakernel (dense grid × live blocks).
+
+    X and C_a are fetched once per live ``(j, t_c, t_b, t_a)`` step and
+    u-block; C_b once per live slab and (i, j, t_c); C_c once per live
+    slab and (i, j); both intermediates move zero bytes.  The only revisit
+    factor is ``Ka/bka`` on X — the price of blocking one output mode so
+    the accumulator fits VMEM.
+    """
+    bu, bka, bnb, bnc, bna, kbp, kcp = tiles
+    u_p = _pad_up(rows_total, bu)
+    ka_p = _pad_up(ka, bka)
+    t_b = max(live_b, 1)
+    t_c = max(live_c, 1)
+    x_bytes = u_p * bnc * bnb * bna * live_a * t_b * t_c
+    ca_bytes = (u_p // bu) * t_c * t_b * live_a * bna * bka
+    cb_bytes = (u_p // bu) * (ka_p // bka) * t_c * t_b * bnb * kbp
+    cc_bytes = (u_p // bu) * (ka_p // bka) * t_c * bnc * kcp
+    y_bytes = u_p * ka_p * kbp * kcp
+    return (x_bytes + ca_bytes + cb_bytes + cc_bytes + y_bytes) * itemsize
+
+
 def stage_hbm_bytes(stage: StagePlan, batch: int, itemsize: int) -> int:
     """Modeled HBM traffic of one staged contraction.
 
@@ -555,17 +721,21 @@ def _fused_hbm_bytes(rows_total: int, ka: int,
 
 def plan_hbm_bytes(stages: tuple[StagePlan, ...],
                    fused: FusedPairPlan | None,
-                   batch: int, itemsize: int) -> int:
+                   batch: int, itemsize: int,
+                   fused3: FusedTriplePlan | None = None) -> int:
     """Modeled HBM bytes of executing the schedule (with optional fusion).
 
     Every boundary between executed steps adds the intermediate's transpose
     copy; the fused pair replaces its two stages *and* their internal
-    boundary with the fused kernel's traffic.  Under a mesh the stage
-    fields are per-shard, so the total is the per-device local HBM traffic
-    (a sharded stage's boundary intermediate is its *post-scatter*
-    ``k_local`` extent; the scatter's ICI bytes live in
+    boundary with the fused kernel's traffic.  A ``fused3`` triple covers
+    the whole schedule — its modeled traffic *is* the plan's.  Under a
+    mesh the stage fields are per-shard, so the total is the per-device
+    local HBM traffic (a sharded stage's boundary intermediate is its
+    *post-scatter* ``k_local`` extent; the scatter's ICI bytes live in
     ``collective_bytes``, not here).
     """
+    if fused3 is not None:
+        return fused3.hbm_bytes_fused
     b = max(batch, 1)
     total = 0
     i = 0
@@ -605,6 +775,119 @@ def refresh_fused_pair(fp: FusedPairPlan, ca: jnp.ndarray, cb: jnp.ndarray,
         zero_block_frac_a=1.0 - live_a / dense_a,
         zero_block_frac_b=1.0 - live_b / dense_b,
     )
+
+
+def refresh_fused_triple(ft: FusedTriplePlan, ca: jnp.ndarray,
+                         cb: jnp.ndarray, cc: jnp.ndarray,
+                         batch: int, itemsize: int) -> FusedTriplePlan:
+    """Recompute a FusedTriplePlan's modeled accounting for its current tiles.
+
+    The autotuner replaces (bu, bka, bnb, bnc) after planning; the VMEM
+    footprint, fused HBM bytes and block masks must follow, or the
+    reported numbers describe a configuration that never ran.
+    """
+    rows_total = ft.rows * max(batch, 1)
+    mask_a = np.asarray(_padded_block_mask(ca, ft.bna, ft.bka))
+    mask_b = np.asarray(_padded_block_mask(cb, ft.bnb, ft.kbp))
+    mask_c = np.asarray(_padded_block_mask(cc, ft.bnc, ft.kcp))
+    live_a, dense_a = int(mask_a.sum()), max(mask_a.size, 1)
+    live_b, dense_b = int(mask_b.sum()), max(mask_b.size, 1)
+    live_c, dense_c = int(mask_c.sum()), max(mask_c.size, 1)
+    tiles = (ft.bu, ft.bka, ft.bnb, ft.bnc, ft.bna, ft.kbp, ft.kcp)
+    return dataclasses.replace(
+        ft,
+        vmem_bytes=fused3_vmem_bytes(*tiles, itemsize),
+        hbm_bytes_fused=_fused3_hbm_bytes(rows_total, ft.ka, tiles, live_a,
+                                          live_b, live_c, itemsize),
+        zero_block_frac_a=1.0 - live_a / dense_a,
+        zero_block_frac_b=1.0 - live_b / dense_b,
+        zero_block_frac_c=1.0 - live_c / dense_c,
+    )
+
+
+def _plan_fusion3(
+    order: tuple[int, int, int],
+    stages: tuple[StagePlan, ...],
+    cs: dict[int, jnp.ndarray],
+    *,
+    batch: int,
+    itemsize: int,
+    vmem_budget: int,
+    force: bool,
+    axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
+) -> FusedTriplePlan | None:
+    """Evaluate fusing the whole three-stage transform into the megakernel.
+
+    All six (a, b, c) mode assignments are scored — the a-stream carries
+    full 2D ESOP skipping while b/c get slab-level skipping only, so a
+    block-sparse coefficient matrix wants the a slot — and the one moving
+    the fewest modeled HBM bytes (MACs break ties) wins.  Returns the
+    candidate when it is kernel-capable, fits the VMEM budget and (unless
+    ``force``) moves strictly fewer modeled bytes than the all-staged
+    schedule; None declines and the planner degrades to pair fusion.
+
+    **Fusion-under-sharding rule**: every mode must be shard-local — the
+    megakernel has no collective anywhere inside, and a sharded mode's
+    contraction needs its psum_scatter between stages.  A sharded *batch*
+    axis is fine (the rows just split).  Traced coefficients and complex
+    dtypes decline as for the pair.  ``rows_total`` (= the local batch) is
+    exempt from the MIN_KERNEL_DIM floor: the u-padding cost is already in
+    the byte model, which decides honestly.
+    """
+    if any(a is not None for a in axes):
+        return None  # a sharded mode needs its collective between stages
+    if _is_traced(*cs.values()):
+        return None
+    if any(jnp.iscomplexobj(c) for c in cs.values()):
+        return None  # DFT stages stay on einsum — the kernel is real-valued
+    rows_total = max(batch, 1)
+    stage_of = {s.mode: s for s in stages}
+    staged = plan_hbm_bytes(stages, None, batch, itemsize)
+
+    best = None
+    for mode_a, mode_b, mode_c in itertools.permutations((1, 2, 3)):
+        ca, cb, cc = cs[mode_a], cs[mode_b], cs[mode_c]
+        na, ka = ca.shape
+        nb, kb = cb.shape
+        nc, kc = cc.shape
+        if min(na, ka, nb, kb, nc, kc) < MIN_KERNEL_DIM:
+            continue  # padding overhead beats the kernel
+        st_a = stage_of[mode_a]
+        tiles = fused3_tile_sizes(
+            rows_total, na, ka, nb, kb, nc, kc, itemsize, vmem_budget,
+            start=(st_a.bn if st_a.zero_block_frac > 0 else None,
+                   st_a.bk if st_a.zero_block_frac > 0 else None,
+                   None, None))
+        if tiles is None:
+            continue  # no tiling keeps both partials on-chip
+        bu, bka, bnb, bnc, bna, kbp, kcp = tiles
+        mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
+        mask_b = np.asarray(_padded_block_mask(cb, bnb, kbp))
+        mask_c = np.asarray(_padded_block_mask(cc, bnc, kcp))
+        live_a, dense_a = int(mask_a.sum()), max(mask_a.size, 1)
+        live_b, dense_b = int(mask_b.sum()), max(mask_b.size, 1)
+        live_c, dense_c = int(mask_c.sum()), max(mask_c.size, 1)
+        fused = _fused3_hbm_bytes(rows_total, ka, tiles, live_a, live_b,
+                                  live_c, itemsize)
+        macs = nc * nb * na * ka + nc * ka * nb * kb + ka * kb * nc * kc
+        cand = FusedTriplePlan(
+            mode_a=mode_a, mode_b=mode_b, mode_c=mode_c, rows=1,
+            na=na, ka=ka, nb=nb, kb=kb, nc=nc, kc=kc,
+            bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna, kbp=kbp, kcp=kcp,
+            vmem_bytes=fused3_vmem_bytes(*tiles, itemsize),
+            hbm_bytes_staged=staged, hbm_bytes_fused=fused, macs=macs,
+            zero_block_frac_a=1.0 - live_a / dense_a,
+            zero_block_frac_b=1.0 - live_b / dense_b,
+            zero_block_frac_c=1.0 - live_c / dense_c,
+        )
+        if best is None or ((cand.hbm_bytes_fused, cand.macs)
+                            < (best.hbm_bytes_fused, best.macs)):
+            best = cand
+    if best is None:
+        return None
+    if not force and best.hbm_bytes_fused >= staged:
+        return None
+    return best
 
 
 def _plan_fusion(
@@ -712,7 +995,7 @@ def build_plan(
     order: tuple[int, int, int] | None = None,
     esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
     block_sizes: tuple[int, int, int] | None = None,
-    fuse: bool | None = None,
+    fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     mesh=None,
     axes=None,
@@ -725,11 +1008,15 @@ def build_plan(
     passing an explicit order pins it (the paper's reference chain is
     ``(3, 1, 2)``).
 
-    ``fuse`` controls stage fusion: ``None`` (default) fuses the consecutive
-    pair whose modeled HBM-byte saving is largest, provided its tiles fit
-    ``vmem_budget``; ``True`` forces fusion whenever feasible; ``False``
-    never fuses.  The per-stage plans are kept either way — they are the
-    staged fallback the executor uses outside the fused pair.
+    ``fuse`` controls stage fusion (see ``FUSE_MODES``): ``None`` (default)
+    picks the deepest fusion that models the fewest HBM bytes — the
+    whole-transform triple megakernel when its tiles fit ``vmem_budget``
+    and it beats the best pair schedule, else the consecutive pair with
+    the largest modeled saving, else staged; ``True`` forces the deepest
+    feasible fusion; ``False`` never fuses; ``"pair"`` / ``"triple"``
+    restrict the search to that depth.  The per-stage plans are kept
+    either way — they are the staged fallback the executor uses outside
+    the fused stages.
 
     ``mesh``/``axes`` make the plan topology-aware: ``axes[s-1]`` names the
     mesh axis sharding mode ``s`` of the stationary tensor (None = local;
@@ -805,7 +1092,14 @@ def build_plan(
 
     isz_raw = jnp.dtype(x_dtype).itemsize
     fused = None
-    if fuse is not False:
+    fused3 = None
+    if fuse not in FUSE_MODES:
+        raise ValueError(f"fuse must be one of {FUSE_MODES}, got {fuse!r}")
+    if fuse in (None, True, "triple"):
+        fused3 = _plan_fusion3(chosen, stages, cs, batch=batch,
+                               itemsize=isz_raw, vmem_budget=vmem_budget,
+                               force=fuse in (True, "triple"), axes=axes)
+    if fuse in (None, True, "pair") and not (fused3 and fuse is True):
         cands = []
         for first in (0, 1):
             fp = _plan_fusion(first, chosen, stages, local, cs, batch=batch,
@@ -816,6 +1110,18 @@ def build_plan(
         if cands:  # fuse the pair that saves the most modeled bytes
             fused = max(cands,
                         key=lambda f: f.hbm_bytes_staged - f.hbm_bytes_fused)
+    # Graceful degradation triple → pair → staged: in auto mode (the only
+    # way both candidates exist — fuse=True skips the pair search when the
+    # triple is feasible) the deeper fusion must also *model* fewer bytes
+    # than the best pair schedule — a budget-starved triple whose shrunken
+    # bka re-streams X many times can lose to the pair kernel, and then
+    # the pair runs.
+    if fused3 is not None and fused is not None:
+        if (fused3.hbm_bytes_fused
+                <= plan_hbm_bytes(stages, fused, batch, isz_raw)):
+            fused = None
+        else:
+            fused3 = None
 
     out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
     blocks = {s.mode: (s.bk, s.bn) for s in stages}
@@ -831,10 +1137,10 @@ def build_plan(
     return GemtPlan(order=chosen, stages=stages, in_shape=dims,
                     out_shape=out_shape, macs=macs, macs_effective=eff,
                     peak_intermediate_bytes=peak, key="|".join(key_parts),
-                    fused=fused,
+                    fused=fused, fused3=fused3,
                     hbm_bytes_staged=plan_hbm_bytes(stages, None, batch,
                                                     isz_raw),
                     hbm_bytes_moved=plan_hbm_bytes(stages, fused, batch,
-                                                   isz_raw),
+                                                   isz_raw, fused3=fused3),
                     axes=axes, shards=shards, batch_axis=batch_axis,
                     batch_shards=batch_shards, collective_bytes=coll)

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the perf-critical hot spots (+ ops wrappers, refs).
 
 Paper anchor: §5 (SR-GEMM, the streaming outer-product cell array), §6
-(block-ESOP skipping), and the fused two-stage GEMT (VMEM-resident
-intermediate — ``docs/engine.md`` "Stage fusion").  ``ref.py`` holds the
-jnp oracles; dispatch and padding live in ``ops.py``.
+(block-ESOP skipping), the fused two-stage GEMT (VMEM-resident
+intermediate — ``docs/engine.md`` "Stage fusion") and the whole-transform
+megakernel (all three contractions in one launch, both intermediates
+on-chip — "Whole-transform fusion").  ``ref.py`` holds the jnp oracles;
+dispatch and padding live in ``ops.py``.
 """
-from .ops import (esop_gemm, esop_plan_cached, flash_attention, fused_gemt,
-                  on_tpu, sr_gemm)
+from .ops import (esop_gemm, esop_plan_cached, flash_attention, fused3_gemt,
+                  fused_gemt, on_tpu, sr_gemm)

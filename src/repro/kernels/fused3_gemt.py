@@ -1,0 +1,240 @@
+"""Whole-transform megakernel — all three mode contractions in one
+``pallas_call``, both intermediates resident in VMEM.
+
+The fused *pair* kernel (``fused_gemt.py``) already keeps the stage-a
+partial on-chip, but the third contraction of a 3D-DXT still round-trips
+the full ``(X ×_a C_a) ×_b C_b`` intermediate through HBM — plus the
+``moveaxis``+``reshape`` transpose into the last unfolding.  The paper's
+cell array holds the tensor resident across *all three* stages (§5: the
+resident tensor never leaves the cells); extending Deinsum's I/O-optimality
+argument one stage further, this kernel computes
+
+  ``Y = ((X ×_a C_a) ×_b C_b) ×_c C_c``
+
+with **zero** intermediate HBM bytes: the stage-1 partial and the stage-2
+partial both live in VMEM scratch, each consumed by the next contraction
+the moment its streaming sweep completes.
+
+Layout (u-major; U is the folded batch — all three tensor modes are
+contracted, so no mode is left untouched):
+
+  X4 (U, Nc, Nb, Na),  C_a (Na, Ka),  C_b (Nb, Kb),  C_c (Nc, Kc)
+  Y  (U, Ka, Kb, Kc)
+  Y[u,ka,kb,kc] = Σ_nc Σ_nb Σ_na X4[u,nc,nb,na]·C_a[na,ka]·C_b[nb,kb]·C_c[nc,kc]
+
+grid = (U/bu, Ka/bka, T_c, T_b, T_a), sequential on TPU with t_a innermost:
+
+  * t_a streams C_a's na-blocks: the stage-1 partial P1 (bu, bnc, bnb, bka)
+    accumulates rank-``bna`` updates in VMEM scratch;
+  * when the na sweep completes, P1 is contracted with the resident C_b
+    slab (bnb, Kb) into the stage-2 partial P2 (bu, bnc, bka, Kb) —
+    the first intermediate never exists in HBM;
+  * when the nb sweep completes, P2 is contracted with the resident C_c
+    slab (bnc, Kc) into the output accumulator (bu, bka, Kb, Kc) — nor
+    does the second;
+  * t_c streams the nc slabs; (i, j) tile the output on (U, Ka).
+
+ESOP block-skipping composes across all three streamed coefficient
+matrices through the same scalar-prefetch machinery as ``esop_gemm``:
+``idx_a[j, t]`` compacts C_a's nonzero (na, ka)-blocks per ka-column (dead
+steps are ``pl.when``-guarded and their X/C_a blocks never fetched),
+``idx_b[0, t]`` compacts C_b's nonzero nb-slabs and ``idx_c[0, t]`` C_c's
+nonzero nc-slabs — a zero slab of either skips the X fetches of its whole
+streaming plane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .fused_gemt import kb_padded
+
+__all__ = ["fused3_gemt_kernel", "fused3_gemt_pallas"]
+
+
+def fused3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
+                       x_ref, ca_ref, cb_ref, cc_ref, o_ref,
+                       p1_ref, p2_ref, acc_ref, *,
+                       t_a: int, t_b: int, t_c: int):
+    """One (i, j) output tile; dims 2/3/4 stream C_c/C_b slabs, C_a blocks."""
+    j = pl.program_id(1)
+    tc = pl.program_id(2)
+    tb = pl.program_id(3)
+    ta = pl.program_id(4)
+
+    @pl.when((tc == 0) & (tb == 0) & (ta == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    @pl.when((tb == 0) & (ta == 0))
+    def _init_p2():
+        p2_ref[...] = jnp.zeros(p2_ref.shape, p2_ref.dtype)
+
+    @pl.when(ta == 0)
+    def _init_p1():
+        p1_ref[...] = jnp.zeros(p1_ref.shape, p1_ref.dtype)
+
+    # Stage 1, live steps only: rank-bna update of the on-chip partial.
+    # Dead steps (ta >= counts_a[j]) fetch nothing and compute nothing.
+    @pl.when(ta < counts_a_ref[j])
+    def _stage_1():
+        x = x_ref[...]  # (bu, bnc, bnb, bna)
+        bu, bnc, bnb, bna = x.shape
+        p = jnp.dot(x.reshape(bu * bnc * bnb, bna), ca_ref[...],
+                    preferred_element_type=jnp.float32)
+        p1_ref[...] += p.reshape(bu, bnc, bnb, p.shape[-1])
+
+    # Stage 2: the completed stage-1 partial is contracted against the
+    # resident C_b slab without leaving VMEM.
+    @pl.when(ta == t_a - 1)
+    def _stage_2():
+        p2_ref[...] += jax.lax.dot_general(
+            p1_ref[...], cb_ref[...].astype(jnp.float32),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # Stage 3: the completed stage-2 partial is contracted against the
+    # resident C_c slab — the second intermediate never exists in HBM
+    # either, which is what this kernel exists for.
+    @pl.when((tb == t_b - 1) & (ta == t_a - 1))
+    def _stage_3():
+        acc_ref[...] += jax.lax.dot_general(
+            p2_ref[...], cc_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((tc == t_c - 1) & (tb == t_b - 1) & (ta == t_a - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bnc",
+                                             "bna", "t_a", "t_b", "t_c",
+                                             "interpret"))
+def _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
+                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret):
+    u, nc, nb, na = x4.shape
+    ka = ca.shape[1]
+    kb = cb.shape[1]
+    kc = cc.shape[1]
+    grid = (u // bu, ka // bka, t_c, t_b, t_a)
+
+    def x_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+              idx_c_ref):
+        return (i, idx_c_ref[0, tc], idx_b_ref[0, tb], idx_a_ref[j, ta])
+
+    def ca_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_a_ref[j, ta], j)
+
+    def cb_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_b_ref[0, tb], 0)
+
+    def cc_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_c_ref[0, tc], 0)
+
+    def o_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+              idx_c_ref):
+        return (i, j, 0, 0)
+
+    return pl.pallas_call(
+        functools.partial(fused3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,  # counts_a, idx_a/b/c drive the dataflow
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bu, bnc, bnb, bna), x_map),  # streamed X slab
+                pl.BlockSpec((bna, bka), ca_map),          # streamed C_a
+                pl.BlockSpec((bnb, kb), cb_map),           # resident C_b slab
+                pl.BlockSpec((bnc, kc), cc_map),           # resident C_c slab
+            ],
+            out_specs=pl.BlockSpec((bu, bka, kb, kc), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
+                pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
+                pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((u, ka, kb, kc), x4.dtype),
+        interpret=interpret,
+    )(counts_a, idx_a, idx_b, idx_c, x4, ca, cb, cc)
+
+
+def fused3_gemt_pallas(
+    x4: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    cc: jnp.ndarray,
+    bu: int = 8,
+    bka: int = 128,
+    bnb: int = 16,
+    bnc: int = 16,
+    bna: int = 128,
+    interpret: bool = False,
+    plan: tuple | None = None,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Y = ((X4 ×_a C_a) ×_b C_b) ×_c C_c fused; shapes must be block
+    multiples.
+
+    ``plan`` optionally carries precomputed ESOP schedules
+    ``(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c)`` (``ops.fused3_gemt``
+    memoizes them per coefficient identity).  With a supplied plan the
+    caller already owns the accounting and ``info`` is None; standalone
+    calls get the streamed-block accounting for all three matrices
+    computed here.
+    """
+    from .esop_gemm import esop_plan
+
+    u, nc, nb, na = x4.shape
+    na2, ka = ca.shape
+    nb2, kb = cb.shape
+    nc2, kc = cc.shape
+    assert na == na2 and nb == nb2 and nc == nc2, (
+        x4.shape, ca.shape, cb.shape, cc.shape)
+    assert u % bu == 0 and ka % bka == 0, ((u, ka), (bu, bka))
+    assert nb % bnb == 0 and nc % bnc == 0 and na % bna == 0, (
+        (nc, nb, na), (bnc, bnb, bna))
+
+    if plan is None:
+        counts_a, idx_a, t_a = esop_plan(ca, bna, bka)
+        counts_b, idx_b, t_b = esop_plan(cb, bnb, kb)
+        counts_c, idx_c, t_c = esop_plan(cc, bnc, kc)
+        live = (int(counts_a.sum()), int(counts_b.sum()),
+                int(counts_c.sum()))
+        counts_a, idx_a, idx_b, idx_c = (
+            jnp.asarray(counts_a), jnp.asarray(idx_a), jnp.asarray(idx_b),
+            jnp.asarray(idx_c))
+    else:
+        counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c = plan
+        live = None
+
+    y = _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
+                     bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret)
+    if live is None:
+        return y, None
+    live_a, live_b, live_c = live
+    dense_a = (na // bna) * (ka // bka)
+    dense_b = nb // bnb
+    dense_c = nc // bnc
+    info = {
+        "blocks_dense_a": dense_a,
+        "blocks_live_a": live_a,
+        "slabs_dense_b": dense_b,
+        "slabs_live_b": live_b,
+        "slabs_dense_c": dense_c,
+        "slabs_live_c": live_c,
+        # fraction of the dense streaming grid never fetched (the grid is
+        # the product space C_a blocks × C_b slabs × C_c slabs; a dead
+        # entry on any axis skips the X fetch of its whole plane)
+        "fetch_savings": 1.0 - (live_a * max(live_b, 1) * max(live_c, 1))
+                               / max(dense_a * dense_b * dense_c, 1),
+        "t_steps": (t_a, t_b, t_c),
+        "t_steps_dense": (na // bna, nb // bnb, nc // bnc),
+    }
+    return y, info

@@ -17,11 +17,12 @@ from ..memo import ArrayMemo
 from . import ref
 from .attention import flash_attention_pallas
 from .esop_gemm import esop_gemm_pallas, esop_plan
+from .fused3_gemt import fused3_gemt_pallas
 from .fused_gemt import fused_gemt_pallas, kb_padded
 from .sr_gemm import sr_gemm_pallas
 
-__all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "flash_attention",
-           "esop_plan_cached", "on_tpu"]
+__all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "fused3_gemt",
+           "flash_attention", "esop_plan_cached", "on_tpu"]
 
 _ESOP_PLAN_MEMO = ArrayMemo()  # per-C-identity padded schedule + block stats
 
@@ -170,6 +171,80 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna, interpret=interpret,
         plan=(counts_a, idx_a, t_a, idx_b, t_b))
     return y[:u, :ka, :kb], info
+
+
+def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+                cc: jnp.ndarray, bu: int = 8, bka: int = 128, bnb: int = 16,
+                bnc: int = 16, bna: int = 128,
+                use_pallas: bool | None = None, plans: tuple | None = None):
+    """Whole-transform fused GEMT ``Y = ((X4 ×_a C_a) ×_b C_b) ×_c C_c``.
+    Returns (y, info).
+
+    ``x4`` is the u-major unfolding ``(U, Nc, Nb, Na)`` (``engine.lower``
+    produces it; U is the folded batch); the result is ``(U, Ka, Kb, Kc)``.
+    Neither intermediate ever touches HBM — see ``kernels/fused3_gemt.py``.
+    Complex coefficients (DFT) route to the einsum reference (the kernel is
+    real-valued), with identical accounting.  ``plans`` optionally supplies
+    the three precomputed ``esop_plan_cached`` tuples ``(a, b, c)`` for
+    tracer coefficients (inside a ``shard_map`` body).
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if any(jnp.iscomplexobj(t) for t in (x4, ca, cb, cc)):
+        use_pallas = False
+    u, nc, nb, na = x4.shape
+    # Validate before padding: post-pad extents can line up by accident and
+    # the kernel would silently contract against garbage rows.
+    if ca.shape[0] != na or cb.shape[0] != nb or cc.shape[0] != nc:
+        raise ValueError(
+            f"x4 {x4.shape} incompatible with C_a {ca.shape} (na) / "
+            f"C_b {cb.shape} (nb) / C_c {cc.shape} (nc)")
+    ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    kbp, kcp = kb_padded(kb), kb_padded(kc)
+    # All three schedules memoized on the coefficient identities: C_a's 2D
+    # block compaction, C_b's nb-slab and C_c's nc-slab compactions (each a
+    # single block column of the padded slab width).
+    counts_a, idx_a, t_a, stats_a = (plans[0] if plans is not None
+                                     else esop_plan_cached(ca, bna, bka))
+    # counts_b/c are unused in-kernel: the slab streams are single block
+    # columns, so every t_b / t_c step is live by construction.
+    _cb_counts, idx_b, t_b, stats_b = (plans[1] if plans is not None
+                                       else esop_plan_cached(cb, bnb, kbp))
+    _cc_counts, idx_c, t_c, stats_c = (plans[2] if plans is not None
+                                       else esop_plan_cached(cc, bnc, kcp))
+    live_bc = max(stats_b["blocks_live"], 1) * max(stats_c["blocks_live"], 1)
+    info = {
+        "blocks_dense_a": stats_a["blocks_dense"],
+        "blocks_live_a": stats_a["blocks_live"],
+        "slabs_dense_b": stats_b["blocks_dense"],
+        "slabs_live_b": stats_b["blocks_live"],
+        "slabs_dense_c": stats_c["blocks_dense"],
+        "slabs_live_c": stats_c["blocks_live"],
+        # The streamed grid is the product space (C_a blocks × C_b slabs ×
+        # C_c slabs): a dead entry on any axis skips the fetch.
+        # blocks_dense/_live use the same keys as esop_gemm so per-call
+        # savings aggregate.
+        "blocks_dense": (stats_a["blocks_dense"] * stats_b["blocks_dense"]
+                         * stats_c["blocks_dense"]),
+        "blocks_live": stats_a["blocks_live"] * live_bc,
+        "t_steps": (t_a, t_b, t_c),
+        "t_steps_dense": (stats_a["t_steps_dense"], stats_b["t_steps_dense"],
+                          stats_c["t_steps_dense"]),
+    }
+    info["fetch_savings"] = 1.0 - (info["blocks_live"]
+                                   / max(info["blocks_dense"], 1))
+    if not use_pallas:
+        return ref.ref_fused3_gemt(x4, ca, cb, cc), info
+    interpret = not on_tpu()
+    xp = _pad_to(x4, (bu, bnc, bnb, bna))
+    cap = _pad_to(ca, (bna, bka))
+    cbp = _pad_to(cb, (bnb, kbp))
+    ccp = _pad_to(cc, (bnc, kcp))
+    y, _ = fused3_gemt_pallas(
+        xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
+        interpret=interpret,
+        plan=(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c))
+    return y[:u, :ka, :kb, :kc], info
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_fused_gemt", "ref_attention"]
+__all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_fused_gemt",
+           "ref_fused3_gemt", "ref_attention"]
 
 
 def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
@@ -50,6 +51,26 @@ def ref_fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
     ka, kb = ca.shape[1], cb.shape[1]
     p = (x3.reshape(u * nb, na) @ ca).reshape(u, nb, ka)
     return (jnp.swapaxes(p, 1, 2).reshape(u * ka, nb) @ cb).reshape(u, ka, kb)
+
+
+@jax.jit
+def ref_fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+                    cc: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the whole-transform fused GEMT (u-major layout).
+
+    ``Y[u,ka,kb,kc] = Σ_nc Σ_nb Σ_na X4[u,nc,nb,na]·C_a·C_b·C_c`` as three
+    flat GEMMs under one jit, so neither intermediate ever exists outside
+    the compiled computation — the reference-path analogue of the
+    megakernel's two VMEM-resident partials.  Handles complex dtypes
+    (DFT stages).
+    """
+    u, nc, nb, na = x4.shape
+    ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    p1 = (x4.reshape(u * nc * nb, na) @ ca).reshape(u, nc, nb, ka)
+    p2 = (jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb)
+          @ cb).reshape(u, nc, ka, kb)
+    return (jnp.moveaxis(p2, 1, 3).reshape(u * ka * kb, nc)
+            @ cc).reshape(u, ka, kb, kc)
 
 
 def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -89,7 +89,7 @@ class DxtServeSession:
     use_pallas: bool | None = None
     # appended (not inserted) so existing positional constructions keep
     # their meaning; None = auto stage fusion via the engine cost model
-    fuse: bool | None = None
+    fuse: bool | str | None = None  # see engine.FUSE_MODES
     mesh: Any = None  # jax.sharding.Mesh | None
     axes: Any = None  # per-mode mesh axes (None = engine default for mesh)
     batch_axis: Any = None  # mesh axis sharding the request batch dim
@@ -97,7 +97,8 @@ class DxtServeSession:
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
         self.requests_served = 0
-        self.fused_served = 0  # requests that ran the fused stage pair
+        self.fused_served = 0  # requests that ran any fused kernel
+        self.fused3_served = 0  # … of those, the whole-transform megakernel
         self.hbm_bytes_moved = 0  # modeled traffic of everything served
         self.hbm_bytes_staged = 0  # what the all-staged schedule would move
         self.collective_bytes = 0  # modeled ICI traffic (0 without a mesh)
@@ -137,6 +138,8 @@ class DxtServeSession:
         self.requests_served += int(x.shape[0])
         if info.get("fused"):
             self.fused_served += int(x.shape[0])
+            if len(info["fused"].get("modes", ())) == 3:
+                self.fused3_served += int(x.shape[0])
         self.hbm_bytes_moved += int(info.get("hbm_bytes_moved", 0))
         self.hbm_bytes_staged += int(info.get("hbm_bytes_staged", 0))
         self.collective_bytes += int(info.get("collective_bytes", 0))

@@ -1,0 +1,86 @@
+"""Tier-2 bench_smoke: committed BENCH artifacts vs a fresh run.
+
+``benchmarks/run.py --check-regression ARTIFACT`` is the CI entry point;
+these tests wire the same comparison into pytest so a perf-model regression
+(byte counts, ratios, backend choices, error bounds drifting from what the
+committed artifact records) fails the suite loudly.  Wall-clock numbers are
+compared under a generous band for the fused artifacts — CI hosts are
+noisy — and skipped for the distributed artifact (its subprocess timing is
+the noisiest and its model metrics are the real contract).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.run import _parse_derived, check_regression
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _artifact(name):
+    path = os.path.join(REPO, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not committed")
+    return path
+
+
+@pytest.mark.bench_smoke
+def test_fused3_artifact_has_no_model_regression():
+    """The whole-transform megakernel artifact must reproduce: fusion
+    decisions, modeled HBM bytes/ratios and numerical error are
+    deterministic; wall-clock gets a 4x band."""
+    failures = check_regression(_artifact("BENCH_fused3_gemt.json"),
+                                tol_time=3.0)
+    assert not failures, "\n".join(failures)
+
+
+@pytest.mark.bench_smoke
+def test_fused3_artifact_meets_paper_claims():
+    """The committed artifact itself carries the PR's acceptance bar:
+    >= 2.5x modeled HBM reduction over staged and >= 1.3x wall-clock over
+    the fused pair on at least two shapes, error <= 1e-5."""
+    with open(_artifact("BENCH_fused3_gemt.json")) as f:
+        rows = json.load(f)
+    good = 0
+    for row in rows:
+        kv = _parse_derived(row["derived"])
+        assert float(kv["max_abs_err"]) <= 1e-5, row["name"]
+        if (kv["triple"] == "True"
+                and float(kv["hbm_vs_staged"].rstrip("x")) >= 2.5
+                and float(kv["speedup_vs_pair"].rstrip("x")) >= 1.3):
+            good += 1
+    assert good >= 2, f"only {good} shapes meet the triple-fusion bar"
+
+
+@pytest.mark.bench_smoke
+def test_distributed_artifact_model_metrics_reproduce():
+    """D3's modeled per-shard/collective bytes, backends and fetch savings
+    must reproduce (tol_time=None: subprocess wall-clock is too noisy for
+    a default-suite gate — the CLI covers it on bench hosts)."""
+    failures = check_regression(_artifact("BENCH_distributed_engine.json"),
+                                tol_time=None)
+    assert not failures, "\n".join(failures)
+
+
+@pytest.mark.bench_smoke
+def test_check_regression_cli_flags_a_planted_regression(tmp_path):
+    """End-to-end CLI: a doctored artifact (impossible model metric) must
+    exit 1 and name the offending key."""
+    with open(_artifact("BENCH_fused3_gemt.json")) as f:
+        rows = json.load(f)
+    rows[0]["derived"] = rows[0]["derived"].replace(
+        "hbm_vs_staged=", "hbm_vs_staged=999.0x;was_hbm_vs_staged=")
+    doctored = tmp_path / "BENCH_doctored.json"
+    doctored.write_text(json.dumps(rows))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run",
+         "--check-regression", str(doctored), "--tol-time", "-1"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=600)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "hbm_vs_staged" in r.stdout

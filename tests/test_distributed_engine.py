@@ -104,6 +104,33 @@ class TestDistributedEngineEquivalence:
         print("OK")
         """))
 
+    def test_sharded_sr_gemm_branch(self, virtual_devices):
+        """The sr_gemm sharded-mode lowering stays covered off-TPU.
+
+        The planner's break-even demotes sharded stages to einsum on
+        non-TPU hosts (the reference dispatch dominates there), which
+        would otherwise leave lower_sharded_stage's kernel branch
+        untested until real hardware: pin the backend back to sr_gemm on
+        the built plan and run it with interpret-mode Pallas.
+        """
+        virtual_devices(_case("""
+        import dataclasses
+        from repro.engine import execute_sharded_with_info
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        p = plan_gemt3(x.shape, x.dtype, *cs, mesh=mesh,
+                       axes=("data", None, None), fuse=False)
+        stages = tuple(dataclasses.replace(s, backend="sr_gemm")
+                       if s.shards > 1 else s for s in p.stages)
+        assert any(s.backend == "sr_gemm" and s.shards > 1 for s in stages)
+        p = dataclasses.replace(p, stages=stages,
+                                key=p.key + "|pinned-sr_gemm")
+        y, info = execute_sharded_with_info(p, mesh, x, *cs,
+                                            use_pallas=True)
+        check(y)
+        assert "sr_gemm" in info["backends_executed"]
+        print("OK")
+        """))
+
     def test_esop_sparse_coefficients(self, virtual_devices):
         """Block-sparse C on an unsharded mode engages block-ESOP per shard
         (reference and Pallas-interpret paths), bit-matching the dense plan."""

@@ -195,8 +195,11 @@ class TestFusionDecision:
         return (batch, n, n, n), (c, c, c)
 
     def test_triggers_on_serving_shape_with_savings(self):
+        # fuse="pair" pins the pair depth: since the whole-transform
+        # megakernel landed, auto mode prefers the triple on these shapes
+        # (tests/test_fused3_gemt.py covers that boundary).
         shape, cs = self._serving()
-        plan = build_plan(shape, jnp.float32, *cs)
+        plan = build_plan(shape, jnp.float32, *cs, fuse="pair")
         assert plan.fused is not None
         assert plan.fused.hbm_savings > 1.5
         assert plan.hbm_bytes_moved < plan.hbm_bytes_staged
@@ -213,22 +216,22 @@ class TestFusionDecision:
 
     def test_declines_when_tiles_cannot_fit_vmem(self):
         shape, cs = self._serving()
-        assert build_plan(shape, jnp.float32, *cs,
+        assert build_plan(shape, jnp.float32, *cs, fuse="pair",
                           vmem_budget=1024).fused is None
         # the boundary is monotone: a roomy budget fuses again
-        assert build_plan(shape, jnp.float32, *cs,
+        assert build_plan(shape, jnp.float32, *cs, fuse="pair",
                           vmem_budget=64 << 20).fused is not None
 
     def test_vmem_model_boundary(self):
         """Fusion flips exactly where the modeled footprint crosses."""
         shape, cs = self._serving()
-        plan = build_plan(shape, jnp.float32, *cs)
+        plan = build_plan(shape, jnp.float32, *cs, fuse="pair")
         need = plan.fused.vmem_bytes
-        assert build_plan(shape, jnp.float32, *cs,
+        assert build_plan(shape, jnp.float32, *cs, fuse="pair",
                           vmem_budget=need).fused is not None
         # the minimal-footprint tiling (all dims at 8) is the true floor
         floor = fused_vmem_bytes(8, 8, 8, 8, plan.fused.kbp, 4)
-        assert build_plan(shape, jnp.float32, *cs,
+        assert build_plan(shape, jnp.float32, *cs, fuse="pair",
                           vmem_budget=floor - 1).fused is None
 
     def test_declines_below_kernel_dims(self):
@@ -262,7 +265,7 @@ class TestFusionDecision:
         keep = np.array([[1], [0], [0], [1]]).astype(bool)  # 50% zero blocks
         c3 = _block_sparse(256, 64, keep, 64)
         c1, c2 = jnp.asarray(np.eye(64, dtype=np.float32)), _rand(48, 48)
-        plan = build_plan((64, 48, 256), jnp.float32, c1, c2, c3, fuse=True,
+        plan = build_plan((64, 48, 256), jnp.float32, c1, c2, c3, fuse="pair",
                           block_sizes=(128, 64, 64))
         assert plan.fused is not None
         assert plan.fused.mode_a == 3
@@ -288,7 +291,7 @@ class TestFusedAutotune:
     def test_autotune_fused_caches_and_matches(self, tmp_path):
         cache = AutotuneCache(str(tmp_path / "a.json"))
         x, cs = _problem((16, 16, 16), (16, 16, 16), seed=8)
-        y = gemt3_planned(x, *cs, fuse=True, autotune=True,
+        y = gemt3_planned(x, *cs, fuse="pair", autotune=True,
                           autotune_cache=cache)
         np.testing.assert_allclose(np.asarray(y), np.asarray(gemt3(x, *cs)),
                                    rtol=1e-4, atol=1e-4)
