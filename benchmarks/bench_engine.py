@@ -16,6 +16,10 @@
                         vs staged: wall-clock three ways + the HBM model;
                         shapes where the triple declines document the
                         triple -> pair graceful degradation
+  G1 grad engine        forward+backward through the differentiable engine
+                        (custom VJP: adjoint-planned GEMT + SR-GEMM factor
+                        updates) vs jax.grad of the einsum chain — gradient
+                        equivalence, backward dispatch counters, wall-clock
 """
 from __future__ import annotations
 
@@ -29,7 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import gemt3
 from repro.engine import (AutotuneCache, autotune_gemm, gemt3_planned,
-                          macs_for_order, order_costs, plan_gemt3)
+                          grad_stats, macs_for_order, order_costs,
+                          plan_gemt3, reset_grad_stats)
 
 from .bench_core import _t
 
@@ -225,4 +230,74 @@ def bench_fused3_gemt(rows):
             f"hbm_vs_pair={hbm_vs_pair:.2f}x;"
             f"hbm_vs_staged_ge_2.5={hbm_vs_staged >= 2.5};"
             f"vmem_bytes={fp['vmem_bytes'] if fp else 0};"
+            f"max_abs_err={err:.1e}"))
+
+
+def bench_grad_engine(rows):
+    """G1: forward+backward through the differentiable engine vs einsum.
+
+    ``jax.grad`` of a sum-of-squares loss over (x, C1, C2, C3) must (a)
+    reproduce the einsum-reference gradients (``max_abs_err`` is the max
+    cotangent deviation relative to the reference magnitude), (b) lower
+    the backward through the engine — nonzero kernel-stage counters, zero
+    einsum stages on these kernel-capable fp32 shapes — and (c) stay
+    wall-clock comparable to the fused einsum-chain VJP.  One square DCT
+    serving shape (the adjoint fuses like the forward) and one rectangular
+    Tucker shape (compressive forward => expansive adjoint, order search
+    reversed) are recorded.
+    """
+    from repro.core.transforms import coefficient_matrix
+
+    rng = np.random.default_rng(17)
+    problems = []
+    n = 32
+    c = coefficient_matrix("dct", n)
+    problems.append((f"B8_N{n}_dct",
+                     jnp.asarray(rng.normal(size=(8, n, n, n))
+                                 .astype(np.float32)), (c, c, c)))
+    dims, ranks = (64, 48, 32), (8, 24, 24)
+    problems.append((f"tucker_N{dims}_K{ranks}",
+                     jnp.asarray(rng.normal(size=dims).astype(np.float32)),
+                     tuple(jnp.asarray(rng.normal(size=(nn, k))
+                                       .astype(np.float32))
+                           for nn, k in zip(dims, ranks))))
+
+    for tag, x, cs in problems:
+        def eng_loss(x, c1, c2, c3):
+            return jnp.sum(gemt3_planned(x, c1, c2, c3,
+                                         differentiable=True) ** 2)
+
+        def ref_loss(x, c1, c2, c3):
+            y = jnp.einsum("...abc,ax,by,cz->...xyz", x, c1, c2, c3)
+            return jnp.sum(y ** 2)
+
+        eng_grad = jax.grad(eng_loss, argnums=(0, 1, 2, 3))
+        ref_grad = jax.grad(ref_loss, argnums=(0, 1, 2, 3))
+        fwd_us, grad_us, ref_us = _tmin_interleaved(
+            [lambda: gemt3_planned(x, *cs, differentiable=True),
+             lambda: eng_grad(x, *cs),
+             lambda: ref_grad(x, *cs)])
+        ge, gr = eng_grad(x, *cs), ref_grad(x, *cs)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  / max(float(jnp.max(jnp.abs(b))), 1.0)
+                  for a, b in zip(ge, gr))
+        reset_grad_stats()
+        jax.block_until_ready(eng_grad(x, *cs))
+        gs = grad_stats()
+        _, info = gemt3_planned(x, *cs, with_info=True, differentiable=True)
+        rows.append((
+            f"G1_grad_engine_{tag}", grad_us,
+            f"fwd_us={fwd_us:.1f};ref_grad_us={ref_us:.1f};"
+            f"speedup_vs_ref={ref_us / max(grad_us, 1e-9):.2f}x;"
+            f"bwd_fwd_ratio_us={grad_us / max(fwd_us, 1e-9):.2f};"
+            f"grad_order={info['grad_order']};"
+            f"grad_backends={'/'.join(info['grad_backends'])};"
+            f"grad_coeff_backends={'/'.join(info['grad_coeff_backends'])};"
+            f"grad_kernel_stages={info['grad_kernel_stages']};"
+            f"grad_einsum_stages={info['grad_einsum_stages']};"
+            f"grad_fused={info['grad_fused']};"
+            f"grad_macs={info['grad_macs']};"
+            f"bwd_kernel_launches={gs['kernel_stages'] + gs['coeff_kernel']};"
+            f"bwd_einsum_stages={gs['einsum_stages'] + gs['coeff_einsum']};"
+            f"engine_backward={gs['backward_calls'] == 1};"
             f"max_abs_err={err:.1e}"))

@@ -46,6 +46,7 @@ def _benches():
         bench_engine.bench_autotune_cache,
         bench_engine.bench_fused_gemt,
         bench_engine.bench_fused3_gemt,
+        bench_engine.bench_grad_engine,
     ]
 
 
@@ -64,6 +65,7 @@ _ROW_PREFIXES = {
     "E1": "bench_planner_order", "E2": "bench_esop_dispatch",
     "E3": "bench_planned_vs_einsum", "E4": "bench_autotune_cache",
     "F1": "bench_fused_gemt", "F2": "bench_fused3_gemt",
+    "G1": "bench_grad_engine",
 }
 
 # Derived keys whose values are wall-clock measurements (or booleans derived

@@ -18,7 +18,8 @@ from .esop import (EsopStats, accumulation_error, block_nonzero_mask,
 from .cellsim import TriadaCellGrid, simulate_dxt3
 from .tucker import hosvd, tucker_compress, tucker_expand, tucker_roundtrip_error
 from .distributed import gemt3_auto, gemt3_shardmap, tensor_spec
-from .layers import (apply_triada_dense, apply_triada_mixer, init_triada_dense,
+from .layers import (apply_dxt3d_layer, apply_triada_dense,
+                     apply_triada_mixer, init_dxt3d_layer, init_triada_dense,
                      make_mixer_coeffs)
 
 __all__ = [
@@ -31,6 +32,6 @@ __all__ = [
     "TriadaCellGrid", "simulate_dxt3",
     "hosvd", "tucker_compress", "tucker_expand", "tucker_roundtrip_error",
     "gemt3_auto", "gemt3_shardmap", "tensor_spec",
-    "apply_triada_dense", "apply_triada_mixer", "init_triada_dense",
-    "make_mixer_coeffs",
+    "apply_dxt3d_layer", "apply_triada_dense", "apply_triada_mixer",
+    "init_dxt3d_layer", "init_triada_dense", "make_mixer_coeffs",
 ]

@@ -155,7 +155,12 @@ def gemt3_planned(
     Thin re-export of :func:`repro.engine.gemt3_planned` (lazy import keeps
     ``core`` free of a hard dependency on the engine/kernels layers).  Unlike
     ``gemt3`` it accepts a leading batch axis and, with ``with_info=True``,
-    returns per-stage dispatch accounting.
+    returns per-stage dispatch accounting.  ``differentiable=True`` makes
+    the call ``jax.grad``-safe with a backward pass that re-enters the
+    engine: the X-cotangent is the adjoint GEMT over the transposed
+    coefficients (for the orthonormal DXT families of §2.2 that is the
+    inverse transform) and the coefficient cotangents are mode-unfolded
+    rank-k SR-GEMM updates — see docs/engine.md ("Differentiation").
     """
     from ..engine import gemt3_planned as _planned
 
@@ -177,7 +182,9 @@ def dxt3d(
     ``engine=True`` routes through the planned execution engine
     (``repro.engine``): the stage order is chosen by the cost model (the
     ``order`` argument is ignored) and each stage runs on the Pallas kernel
-    dispatch; ``engine_kwargs`` (e.g. ``autotune=True``) pass through.
+    dispatch; ``engine_kwargs`` (e.g. ``autotune=True``, or
+    ``differentiable=True`` for a ``jax.grad``-safe engine-lowered
+    backward pass) pass through.
     """
     from .transforms import coefficient_matrix, inverse_coefficient_matrix
 

@@ -8,6 +8,13 @@
   ``(B, S, D)`` are treated as a 3-mode tensor and transformed along S and D
   by orthonormal DCT/DHT matrices via the GEMT engine.  This is literally the
   paper's bilinear transform of each batch slice (identity on mode 1).
+* ``Dxt3dLayer`` — a *learned* trilinear transform on volumetric batches
+  ``(B, N1, N2, N3)``: the three coefficient factors are parameters
+  (initialized at the orthonormal DXT basis, optionally truncated to
+  Tucker ranks) and the forward pass runs the planned engine with
+  ``differentiable=True``, so ``jax.grad`` lowers the backward pass as the
+  adjoint-planned GEMT + SR-GEMM factor updates (docs/engine.md,
+  "Differentiation").  ``train.step.build_dxt_fit_step`` trains it.
 
 Pure-functional: ``init_*`` returns a params pytree; ``apply_*`` consumes it.
 """
@@ -16,7 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .gemt import mode_product
+from .gemt import gemt3_planned, mode_product
 from .transforms import coefficient_matrix
 
 __all__ = [
@@ -24,6 +31,8 @@ __all__ = [
     "apply_triada_dense",
     "make_mixer_coeffs",
     "apply_triada_mixer",
+    "init_dxt3d_layer",
+    "apply_dxt3d_layer",
 ]
 
 
@@ -63,3 +72,62 @@ def apply_triada_mixer(coeffs: dict, x: jnp.ndarray) -> jnp.ndarray:
     y = mode_product(x, coeffs["c_seq"].astype(x.dtype), 2)
     y = mode_product(y, coeffs["c_dim"].astype(x.dtype), 3)
     return y
+
+
+def init_dxt3d_layer(dims: tuple[int, int, int],
+                     ranks: tuple[int, int, int] | None = None,
+                     kind: str = "dct", key=None, init_scale: float = 0.0,
+                     dtype=None) -> dict:
+    """Learnable trilinear-transform parameters ``{"c1", "c2", "c3"}``.
+
+    Each factor starts at the orthonormal DXT coefficient matrix (paper
+    §2.2), truncated to the first ``ranks[s]`` basis columns for Tucker
+    compression (§2.3) — the exact-transform starting point that fitting
+    then refines.  ``key``/``init_scale`` optionally add Gaussian noise to
+    break the symmetry of the orthonormal start.  ``dtype=None`` keeps the
+    transform's natural dtype (complex for the DFT); requesting a real
+    dtype for a complex kind raises rather than silently dropping the
+    imaginary part.
+    """
+    ranks = tuple(ranks) if ranks is not None else tuple(dims)
+    params = {}
+    for i, (n, k) in enumerate(zip(dims, ranks), 1):
+        if k > n:
+            raise ValueError(f"rank {k} exceeds mode-{i} extent {n}")
+        c = coefficient_matrix(kind, n)[:, :k]
+        if dtype is not None:
+            if (jnp.iscomplexobj(c)
+                    and not jnp.issubdtype(jnp.dtype(dtype),
+                                           jnp.complexfloating)):
+                raise ValueError(
+                    f"kind={kind!r} has complex coefficients; dtype={dtype} "
+                    f"would drop the imaginary part (use dtype=None or a "
+                    f"complex dtype)")
+            c = c.astype(dtype)
+        if key is not None and init_scale > 0.0:
+            key, sub = jax.random.split(key)
+            noise = jax.random.normal(sub, c.shape)
+            if jnp.iscomplexobj(c):
+                key, sub = jax.random.split(key)
+                noise = noise + 1j * jax.random.normal(sub, c.shape)
+            c = c + init_scale * noise.astype(c.dtype)
+        params[f"c{i}"] = c
+    return params
+
+
+def apply_dxt3d_layer(params: dict, x: jnp.ndarray,
+                      **engine_kwargs) -> jnp.ndarray:
+    """Apply the learned trilinear transform to ``(B, N1, N2, N3)`` (or
+    unbatched 3D) input through the planned engine, differentiably.
+
+    The engine's custom VJP makes the whole layer ``jax.grad``-safe at
+    engine speed: the input cotangent replans as the adjoint GEMT over the
+    transposed factors, the factor cotangents are mode-unfolded rank-k
+    SR-GEMM updates.  ``engine_kwargs`` (``fuse=``, ``autotune=``,
+    ``mesh=``, …) pass through to :func:`repro.engine.gemt3_planned`;
+    ``differentiable`` defaults to True here (the layer exists to be
+    trained) but an explicit override is honoured.
+    """
+    engine_kwargs.setdefault("differentiable", True)
+    return gemt3_planned(x, params["c1"], params["c2"], params["c3"],
+                         **engine_kwargs)

@@ -6,42 +6,50 @@ problem's shapes and block sparsity, lowers each mode contraction to a 2D
 GEMM on the Pallas kernels, and tunes tile sizes against a persisted cache.
 Topology-aware since PR 3: given a ``Mesh`` + per-mode axes, the planner
 scores collective bytes and the executor runs the per-shard schedule inside
-``shard_map`` (paper §3–§5).  See ``docs/engine.md`` and
-``docs/distributed.md``; the paper-section→module map is in
-``docs/architecture.md``.
+``shard_map`` (paper §3–§5).  Differentiable since PR 5:
+``gemt3_planned(differentiable=True)`` installs a custom VJP whose backward
+pass re-enters the engine — the X-cotangent as the derived adjoint plan
+(transposed coefficients, reversed order; §2.2's orthonormality makes it
+the inverse transform) and the coefficient cotangents as rank-k SR-GEMM
+updates.  See ``docs/engine.md`` and ``docs/distributed.md``; the
+paper-section→module map is in ``docs/architecture.md``.
 """
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FUSE_MODES,
                    FusedPairPlan, FusedTriplePlan, GemtPlan,
                    SHARDED_EINSUM_BREAKEVEN_MACS, StagePlan, build_plan,
-                   fused3_tile_sizes, fused3_vmem_bytes, fused_tile_sizes,
-                   fused_vmem_bytes, macs_for_order, mesh_axis_size,
-                   normalize_axes, order_costs, plan_hbm_bytes,
-                   refresh_fused_pair, refresh_fused_triple,
+                   derive_adjoint_plan, fused3_tile_sizes, fused3_vmem_bytes,
+                   fused_tile_sizes, fused_vmem_bytes, macs_for_order,
+                   mesh_axis_size, normalize_axes, order_costs,
+                   plan_hbm_bytes, refresh_fused_pair, refresh_fused_triple,
                    sparsity_signature, stage_hbm_bytes,
                    staged_pair_hbm_bytes)
-from .lower import (lower_fused_pair, lower_fused_triple,
-                    lower_sharded_stage, lower_stage, mode_fold, mode_unfold)
+from .lower import (coeff_grad_backend, lower_coeff_grad, lower_fused_pair,
+                    lower_fused_triple, lower_sharded_stage, lower_stage,
+                    mode_fold, mode_unfold)
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, default_cache_path, make_fused3_key,
                        make_fused_key, make_key)
 from .executor import (clear_plan_cache, default_mode_axes, execute,
                        execute_sharded_with_info, execute_with_info,
-                       gemt3_planned, plan_cache_info, plan_gemt3)
+                       gemt3_planned, grad_stats, plan_cache_info,
+                       plan_gemt3, reset_grad_stats)
 
 __all__ = [
     "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FUSE_MODES",
     "FusedPairPlan", "FusedTriplePlan", "GemtPlan",
     "SHARDED_EINSUM_BREAKEVEN_MACS", "StagePlan", "build_plan",
+    "derive_adjoint_plan",
     "fused3_tile_sizes", "fused3_vmem_bytes", "fused_tile_sizes",
     "fused_vmem_bytes", "macs_for_order", "mesh_axis_size", "normalize_axes",
     "order_costs", "plan_hbm_bytes",
     "refresh_fused_pair", "refresh_fused_triple", "sparsity_signature",
     "stage_hbm_bytes", "staged_pair_hbm_bytes",
+    "coeff_grad_backend", "lower_coeff_grad",
     "lower_fused_pair", "lower_fused_triple", "lower_sharded_stage",
     "lower_stage", "mode_fold", "mode_unfold",
     "AutotuneCache", "autotune_fused", "autotune_fused3", "autotune_gemm",
     "default_cache_path", "make_fused3_key", "make_fused_key", "make_key",
     "clear_plan_cache", "default_mode_axes", "execute",
     "execute_sharded_with_info", "execute_with_info", "gemt3_planned",
-    "plan_cache_info", "plan_gemt3",
+    "grad_stats", "plan_cache_info", "plan_gemt3", "reset_grad_stats",
 ]

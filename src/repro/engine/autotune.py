@@ -45,20 +45,33 @@ def default_cache_path() -> str:
 
 
 def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "") -> str:
-    return f"{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{sig}"
+    """Autotune-cache key for a staged GEMM (cache version v2).
+
+    Adjoint stages (the differentiable engine's backward pass contracts
+    against ``C_sᵀ``) deliberately hit the **same** cache: the key is pure
+    shape/dtype/kind/structure, so a transposed problem that matches a
+    forward one — e.g. any square orthonormal DXT stage, whose transposed
+    nonzero structure equals the forward one — reuses its tiles for free.
+    The v2 bump orphans pre-differentiable v1 entries: their timings were
+    measured against the unwrapped kernel dispatch, and the VJP-safe
+    wrappers changed the measured object.
+    """
+    return f"v2:{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{sig}"
 
 
 def make_fused_key(u: int, na: int, ka: int, nb: int, kb: int,
                    dtype, sig: str = "",
                    vmem_budget: int | None = None) -> str:
-    """Autotune-cache key for the fused pair kernel (cache version v2).
+    """Autotune-cache key for the fused pair kernel (cache version v3).
 
     The VMEM budget is part of the problem, exactly as in the plan cache's
     ``vb=`` component: tiles tuned under a roomy budget must never replay
     under a stricter one (the budget filter would not re-run on a cache
-    hit).  v1 keys lacked the budget, so the version bump orphans them.
+    hit); the v2 bump added it.  v3 orphans pre-differentiable entries for
+    the same reason as :func:`make_key`'s v2: the VJP-safe wrappers
+    changed the measured dispatch.
     """
-    return (f"fused:v2:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
+    return (f"fused:v3:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
             f"|{sig}|vb{vmem_budget}")
 
 
@@ -66,8 +79,9 @@ def make_fused3_key(u: int, na: int, ka: int, nb: int, kb: int,
                     nc: int, kc: int, dtype, sig: str = "",
                     vmem_budget: int | None = None) -> str:
     """Autotune-cache key for the whole-transform megakernel (budget-keyed
-    from day one — see :func:`make_fused_key`)."""
-    return (f"fused3:v1:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
+    from day one; v2 orphans pre-differentiable timings — see
+    :func:`make_fused_key`)."""
+    return (f"fused3:v2:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
             f"|{jnp.dtype(dtype).name}|{sig}|vb{vmem_budget}")
 
 

@@ -13,6 +13,14 @@ schedule (paper §4–§5): the planned per-shard stages execute inside a
 ``psum_scatter`` per sharded-mode stage — and ``info`` splits the byte
 accounting into per-shard local HBM traffic and modeled collective ICI
 bytes.  See ``docs/distributed.md``.
+
+``differentiable=True`` makes the execution boundary a ``jax.custom_vjp``
+whose backward pass re-enters the engine (docs/engine.md,
+"Differentiation"): the X-cotangent runs as the *adjoint plan* — another
+planned GEMT over the transposed coefficients, derived from (and cached
+off) the forward plan — and the three coefficient cotangents as
+mode-unfolded rank-k SR-GEMM updates.  ``info`` gains ``grad_*`` fields
+and ``grad_stats()`` counts the executed backward dispatch.
 """
 from __future__ import annotations
 
@@ -29,11 +37,12 @@ from ..kernels import ops
 from ..memo import ArrayMemo
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, make_key)
-from .lower import (lower_fused_pair, lower_fused_triple,
+from .lower import (lower_coeff_grad, lower_fused_pair, lower_fused_triple,
                     lower_sharded_stage, lower_stage)
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, GemtPlan,
-                   _is_traced, build_plan, normalize_axes, plan_hbm_bytes,
-                   refresh_fused_pair, refresh_fused_triple)
+                   _is_traced, build_plan, derive_adjoint_plan,
+                   normalize_axes, plan_hbm_bytes, refresh_fused_pair,
+                   refresh_fused_triple)
 
 __all__ = [
     "plan_gemt3",
@@ -43,12 +52,46 @@ __all__ = [
     "gemt3_planned",
     "clear_plan_cache",
     "plan_cache_info",
+    "grad_stats",
+    "reset_grad_stats",
 ]
 
 _PLAN_CACHE: dict[tuple, GemtPlan] = {}
+_ADJ_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # forward plan key -> adjoint
 _TUNED_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # post-autotune variants
 _SHARDED_FN_CACHE: dict[tuple, tuple] = {}  # plan+cs -> (jitted shard_map, infos)
 _FP_MEMO = ArrayMemo()  # per-array-identity digests: plan-cache hits stay cheap
+
+# Host-side proof that backward passes actually lower through the engine —
+# incremented while the VJP body runs in Python, never from plan metadata.
+# "kernel" counts SR-GEMM / block-ESOP / fused launches, "einsum" the
+# planned fallback stages; the coeff_* split covers the three coefficient
+# cotangents' rank-k updates.
+_GRAD_STATS = {
+    "backward_calls": 0,
+    "kernel_stages": 0,
+    "einsum_stages": 0,
+    "coeff_kernel": 0,
+    "coeff_einsum": 0,
+    "fused_launches": 0,
+}
+
+
+def grad_stats() -> dict:
+    """Engine-wide backward-pass dispatch counters (see ``_GRAD_STATS``).
+
+    Counted when the VJP's Python body runs: once per eager backward
+    call, but only once per *compilation* under ``jax.jit`` (cached
+    executions never re-enter Python).  The counters prove what the
+    backward lowers to — kernel vs einsum dispatch — not how many jitted
+    steps executed; count steps at the training loop if needed.
+    """
+    return dict(_GRAD_STATS)
+
+
+def reset_grad_stats() -> None:
+    for k in _GRAD_STATS:
+        _GRAD_STATS[k] = 0
 
 
 def _fingerprint(c: jnp.ndarray) -> str:
@@ -74,12 +117,14 @@ def _fingerprint(c: jnp.ndarray) -> str:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _ADJ_PLAN_CACHE.clear()
     _TUNED_PLAN_CACHE.clear()
     _SHARDED_FN_CACHE.clear()
 
 
 def plan_cache_info() -> dict:
-    return {"entries": len(_PLAN_CACHE), "tuned": len(_TUNED_PLAN_CACHE),
+    return {"entries": len(_PLAN_CACHE), "adjoint": len(_ADJ_PLAN_CACHE),
+            "tuned": len(_TUNED_PLAN_CACHE),
             "sharded_fns": len(_SHARDED_FN_CACHE)}
 
 
@@ -300,6 +345,9 @@ def _assemble_info(plan: GemtPlan, stage_infos: list[dict]) -> dict:
         "collective_bytes": plan.collective_bytes,
         "fetch_savings": ((1.0 - live / dense) if dense
                           else (fused_info or {}).get("fetch_savings", 0.0)),
+        # Bounded ESOP-schedule memo accounting (LRU; see kernels.ops) —
+        # serve telemetry uses this to prove the host-side cache behaves.
+        "esop_memo": ops.esop_memo_stats(),
     }
 
 
@@ -429,13 +477,451 @@ def execute_sharded_with_info(
         # serving hot loop measured the per-call dict building).
         info = _assemble_info(plan, list(stage_infos))
         hit[2] = info
-    return y, dict(info)
+    info = dict(info)
+    info["esop_memo"] = ops.esop_memo_stats()  # live, not cache-frozen
+    return y, info
 
 
 def execute(plan, x, c1, c2, c3, out=None, *, use_pallas=None):
     """Run a plan, result only."""
     y, _ = execute_with_info(plan, x, c1, c2, c3, out, use_pallas=use_pallas)
     return y
+
+
+# --------------------------------------------------------------------------
+# Differentiation: the engine's custom VJP (the backward pass re-enters the
+# engine as another planned trilinear transform — see docs/engine.md,
+# "Differentiation").
+# --------------------------------------------------------------------------
+
+
+def _transposed(c: jnp.ndarray) -> jnp.ndarray:
+    return ops.transposed_cached(c)
+
+
+def _match_cotangent(t: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Cast a cotangent to its primal's dtype (custom_vjp requires it).
+
+    A real primal feeding a complex computation (DFT stages promote) gets
+    the real part — the transpose of the real→complex embedding, matching
+    jax's ``convert_element_type`` transpose rule.
+    """
+    if (jnp.issubdtype(t.dtype, jnp.complexfloating)
+            and not jnp.issubdtype(like.dtype, jnp.complexfloating)):
+        t = jnp.real(t)
+    return t.astype(like.dtype)
+
+
+def _tuned_plan(plan: GemtPlan, cs: dict[int, jnp.ndarray], batch: int,
+                autotune_cache, use_pallas, vmem_budget: int,
+                x_dtype) -> GemtPlan:
+    """Memoized autotuned variant of ``plan`` (forward and adjoint share
+    this path, so adjoint shapes hit the same JSON cache)."""
+    cache = (autotune_cache if isinstance(autotune_cache, AutotuneCache)
+             else AutotuneCache(autotune_cache))
+    # Memoize the tuned variant: a warm hot loop must not pay the cache
+    # probes + fused-mask refresh (a device pad + host sync) per call.
+    # plan.key only digests the zero *structure*, so the content
+    # fingerprints are added — different coefficient matrices of identical
+    # sparsity must still tune under their own sigs.
+    tkey = (plan.key, cache.path, batch, use_pallas,
+            _fingerprint(cs[1]), _fingerprint(cs[2]), _fingerprint(cs[3]))
+    tuned = _TUNED_PLAN_CACHE.get(tkey)
+    if tuned is None:
+        tuned = _autotuned_plan(plan, cs, batch, cache, use_pallas,
+                                vmem_budget=vmem_budget, x_dtype=x_dtype)
+        _TUNED_PLAN_CACHE[tkey] = tuned
+    return tuned
+
+
+def _adjoint_plan(plan: GemtPlan, g_shape, g_dtype,
+                  cts: dict[int, jnp.ndarray], *, esop_threshold, block_sizes,
+                  fuse, vmem_budget, mesh) -> GemtPlan:
+    """Derive (or fetch) the adjoint plan keyed off the forward plan."""
+    key = (plan.key, tuple(g_shape), jnp.dtype(g_dtype).name, esop_threshold,
+           block_sizes, fuse, vmem_budget,
+           _fingerprint(cts[1]), _fingerprint(cts[2]), _fingerprint(cts[3]))
+    adj = _ADJ_PLAN_CACHE.get(key)
+    if adj is None:
+        adj = derive_adjoint_plan(plan, g_shape, g_dtype, cts[1], cts[2],
+                                  cts[3], esop_threshold=esop_threshold,
+                                  block_sizes=block_sizes, fuse=fuse,
+                                  vmem_budget=vmem_budget, mesh=mesh)
+        _ADJ_PLAN_CACHE[key] = adj
+    return adj
+
+
+def _adjoint_fused_dx_wins(adj: GemtPlan, g_shape, g_dtype) -> bool:
+    """Should the backward run dX fused *in addition to* the staged prefix?
+
+    The coefficient cotangents always need the chain intermediates
+    ``g1, g2``, so a fused adjoint launch does not replace the first two
+    staged stages — it adds a whole-transform launch on top of them.  That
+    only pays when the fused launch's modeled traffic undercuts the one
+    staged stage it saves (the chain's last): HBM-dominated serving shapes
+    usually qualify (the fused triple moves ~1/5 of the staged schedule),
+    MAC-bound ones do not.  The byte model decides, exactly as it decides
+    the forward fusion ladder.
+    """
+    from .plan import stage_hbm_bytes
+
+    if adj.fused3 is None and adj.fused is None:
+        return False
+    batch = int(g_shape[0]) if len(g_shape) == 4 else 1
+    isz = jnp.dtype(g_dtype).itemsize
+    prefix = sum(stage_hbm_bytes(st, batch, isz) for st in adj.stages[:-1])
+    for st in adj.stages[:-2]:  # inter-stage boundary round trips
+        prefix += 2 * st.rows * batch * st.k_local * isz
+    return adj.hbm_bytes_moved + prefix < adj.hbm_bytes_staged
+
+
+def _execute_vjp(plan: GemtPlan, adj: GemtPlan, x, cs: dict, cts: dict, g,
+                 use_pallas) -> tuple:
+    """Single-device backward pass.  Returns ``(dx, dcs, stage_infos)``.
+
+    Three engine-lowered pieces (see docs/engine.md "Differentiation"):
+
+    1. *forward recompute* — the first two forward stages re-run staged to
+       rebuild the stage-boundary inputs ``y0=x, y1, y2`` (residuals are
+       just ``(x, C_s)``: memory-light, one extra partial forward);
+    2. *adjoint chain* — the X-cotangent as the planned adjoint GEMT over
+       ``C_sᵀ`` in reversed order.  The staged prefix stages always run
+       (their intermediates ``g1, g2`` feed the coefficient cotangents);
+       dX additionally takes the fused launch only when the byte model
+       says the fused traffic beats the one staged stage it replaces
+       (:func:`_adjoint_fused_dx_wins`), else one staged walk yields
+       everything with no duplicated work;
+    3. *coefficient cotangents* — ``dC_s = unfold(y_{i-1})ᵀ @ unfold(g_i)``
+       rank-k SR-GEMM updates pairing each forward boundary with the
+       matching chain cotangent.
+    """
+    infos = []
+    ys = [x]
+    y = x
+    for st in plan.stages[:-1]:
+        y, si = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
+        si["kind"] = "grad_recompute"
+        infos.append(si)
+        ys.append(y)
+
+    gs = [g]
+    if _adjoint_fused_dx_wins(adj, g.shape, g.dtype):
+        dx, ainfo = execute_with_info(adj, g, cts[1], cts[2], cts[3],
+                                      use_pallas=use_pallas)
+        for si in ainfo["stages"]:
+            si = dict(si)
+            si["kind"] = "grad_x"
+            infos.append(si)
+        gi = g
+        for st in adj.stages[:-1]:
+            gi, si = lower_stage(gi, cts[st.mode], st, use_pallas=use_pallas)
+            si["kind"] = "grad_chain"
+            infos.append(si)
+            gs.append(gi)
+    else:
+        gi = g
+        for st in adj.stages:
+            gi, si = lower_stage(gi, cts[st.mode], st, use_pallas=use_pallas)
+            si["kind"] = "grad_x"
+            infos.append(si)
+            gs.append(gi)
+        dx = gs.pop()  # gs keeps [g, g1, g2]
+
+    dcs = {}
+    for i, mode in enumerate(plan.order):
+        dc, ci = lower_coeff_grad(ys[i], gs[2 - i], mode,
+                                  use_pallas=use_pallas)
+        infos.append(ci)
+        dcs[mode] = dc
+    return dx, dcs, infos
+
+
+def _sharded_prefix_callable(plan: GemtPlan, mesh, use_pallas,
+                             cs: dict[int, jnp.ndarray], batched: bool):
+    """Jitted shard_map recomputing the first two forward stage boundaries.
+
+    The backward pass needs the stage-input tensors ``y1, y2`` globally;
+    each stage runs exactly as in the forward program (kernels on local
+    shards, ``psum_scatter`` on sharded modes), and every boundary keeps
+    the stationary spec — the per-mode axis assignment never changes, only
+    N_s↔K_s extents do.
+    """
+    esop_plans = {}
+    for st in plan.stages[:-1]:
+        if st.backend == "esop":
+            esop_plans[st.mode] = ops.esop_plan_cached(cs[st.mode], st.bk,
+                                                       st.bn)
+    spec = (P(plan.batch_axis, *plan.axes) if batched else P(*plan.axes))
+    stage_infos: list[dict] = []
+
+    def body(x_l, c1_l, c2_l, c3_l):
+        del stage_infos[:]
+        cs_l = {1: c1_l, 2: c2_l, 3: c3_l}
+        y = x_l
+        inter = []
+        for st in plan.stages[:-1]:
+            if st.axis is None:
+                y, si = lower_stage(y, cs_l[st.mode], st,
+                                    use_pallas=use_pallas,
+                                    esop_plan=esop_plans.get(st.mode))
+            else:
+                y, si = lower_sharded_stage(y, cs_l[st.mode], st, mesh,
+                                            use_pallas=use_pallas)
+            stage_infos.append(si)
+            inter.append(y)
+        return tuple(inter)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, P(), P(), P()),
+                   out_specs=(spec, spec), check_vma=False)
+    return jax.jit(fn), stage_infos
+
+
+def _sharded_chain_callable(adj: GemtPlan, mesh, use_pallas,
+                            cts: dict[int, jnp.ndarray], batched: bool):
+    """Jitted shard_map running the full adjoint chain staged, returning
+    ``(g1, g2, dx)``.
+
+    The chain runs staged even when the adjoint plan could fuse (only
+    possible in the all-modes-local corner): the intermediates *are* the
+    coefficient cotangents' operands, and a sharded-mode stage's
+    ``psum_scatter`` must fire between them — the X-cotangent's collective
+    handling is exactly the forward schedule's, inherited through
+    ``lower_sharded_stage``.
+    """
+    esop_plans = {}
+    for st in adj.stages:
+        if st.backend == "esop":
+            esop_plans[st.mode] = ops.esop_plan_cached(cts[st.mode], st.bk,
+                                                       st.bn)
+    spec = (P(adj.batch_axis, *adj.axes) if batched else P(*adj.axes))
+    stage_infos: list[dict] = []
+
+    def body(g_l, c1t_l, c2t_l, c3t_l):
+        del stage_infos[:]
+        ct_l = {1: c1t_l, 2: c2t_l, 3: c3t_l}
+        y = g_l
+        inter = []
+        for st in adj.stages:
+            if st.axis is None:
+                y, si = lower_stage(y, ct_l[st.mode], st,
+                                    use_pallas=use_pallas,
+                                    esop_plan=esop_plans.get(st.mode))
+            else:
+                y, si = lower_sharded_stage(y, ct_l[st.mode], st, mesh,
+                                            use_pallas=use_pallas)
+            si = dict(si)
+            si["kind"] = "grad_x"
+            stage_infos.append(si)
+            inter.append(y)
+        return tuple(inter)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, P(), P(), P()),
+                   out_specs=(spec, spec, spec), check_vma=False)
+    return jax.jit(fn), stage_infos
+
+
+def _plan_tiles(plan: GemtPlan) -> tuple:
+    return tuple((s.bm, s.bn, s.bk) for s in plan.stages)
+
+
+def _execute_vjp_sharded(plan: GemtPlan, adj: GemtPlan, mesh, x, cs: dict,
+                         cts: dict, g, use_pallas) -> tuple:
+    """Mesh backward pass: chain + recompute inside ``shard_map`` programs
+    (cached like the forward program), coefficient cotangents on the
+    resulting global arrays.  Returns ``(dx, dcs, stage_infos)``."""
+    batched = x.ndim == 4
+    pkey = ("vjp_prefix", plan.key, _plan_tiles(plan), use_pallas, x.ndim,
+            _fingerprint(cs[1]), _fingerprint(cs[2]), _fingerprint(cs[3]))
+    hit = _SHARDED_FN_CACHE.get(pkey)
+    if hit is None:
+        fn, infos = _sharded_prefix_callable(plan, mesh, use_pallas, cs,
+                                             batched)
+        hit = [fn, infos, None]
+        _SHARDED_FN_CACHE[pkey] = hit
+    y1, y2 = hit[0](x, cs[1], cs[2], cs[3])
+    prefix_infos = [dict(si, kind="grad_recompute") for si in hit[1]]
+
+    ckey = ("vjp_chain", adj.key, _plan_tiles(adj), use_pallas, g.ndim,
+            _fingerprint(cts[1]), _fingerprint(cts[2]), _fingerprint(cts[3]))
+    hit = _SHARDED_FN_CACHE.get(ckey)
+    if hit is None:
+        fn, infos = _sharded_chain_callable(adj, mesh, use_pallas, cts,
+                                            batched)
+        hit = [fn, infos, None]
+        _SHARDED_FN_CACHE[ckey] = hit
+    g1, g2, dx = hit[0](g, cts[1], cts[2], cts[3])
+    infos = prefix_infos + [dict(si) for si in hit[1]]
+
+    ys = [x, y1, y2]
+    gs = [g, g1, g2]
+    dcs = {}
+    for i, mode in enumerate(plan.order):
+        # Global-level rank-k update: the chain/recompute arrays are global
+        # (sharded) outputs, so the contraction over their rows is complete
+        # — the cross-device sum GSPMD inserts here is the coefficient
+        # cotangent's psum (coefficients are replicated, their cotangents
+        # must be too).  Backend pinned to einsum: these operands live
+        # *outside* shard_map, where only dot_general is partitionable —
+        # a pallas_call on sharded global arrays has no SPMD rule.
+        dc, ci = lower_coeff_grad(ys[i], gs[2 - i], mode,
+                                  use_pallas=use_pallas, backend="einsum")
+        infos.append(ci)
+        dcs[mode] = dc
+    return dx, dcs, infos
+
+
+def _count_grad_dispatch(infos: list[dict]) -> dict:
+    counts = {"kernel_stages": 0, "einsum_stages": 0, "coeff_kernel": 0,
+              "coeff_einsum": 0, "fused_launches": 0}
+    for si in infos:
+        kernel = si.get("backend") != "einsum"
+        if si.get("kind") == "coeff_grad":
+            counts["coeff_kernel" if kernel else "coeff_einsum"] += 1
+            continue
+        if si.get("backend") == "fused":
+            counts["fused_launches"] += 1
+        counts["kernel_stages" if kernel else "einsum_stages"] += 1
+    return counts
+
+
+def _vjp_backward(plan: GemtPlan, mesh, x, c1, c2, c3, g, *, use_pallas,
+                  esop_threshold, block_sizes, fuse, vmem_budget,
+                  autotune, autotune_cache):
+    """The custom-VJP backward: re-enters the engine and returns the four
+    cotangents ``(dx, dc1, dc2, dc3)``."""
+    cs = {1: c1, 2: c2, 3: c3}
+    cts = {m: _transposed(cs[m]) for m in (1, 2, 3)}
+    adj = _adjoint_plan(plan, g.shape, g.dtype, cts,
+                        esop_threshold=esop_threshold,
+                        block_sizes=block_sizes, fuse=fuse,
+                        vmem_budget=vmem_budget, mesh=mesh)
+    if autotune and not _is_traced(c1, c2, c3):
+        batch = ((int(g.shape[0]) if g.ndim == 4 else 1)
+                 // max(adj.batch_shards, 1))
+        adj = _tuned_plan(adj, cts, batch, autotune_cache, use_pallas,
+                          vmem_budget, g.dtype)
+    sharded = mesh is not None and (
+        any(a is not None for a in plan.axes) or plan.batch_axis is not None)
+    if sharded:
+        dx, dcs, infos = _execute_vjp_sharded(plan, adj, mesh, x, cs, cts, g,
+                                              use_pallas)
+    else:
+        dx, dcs, infos = _execute_vjp(plan, adj, x, cs, cts, g, use_pallas)
+    _GRAD_STATS["backward_calls"] += 1
+    for k, v in _count_grad_dispatch(infos).items():
+        _GRAD_STATS[k] += v
+    return (_match_cotangent(dx, x),
+            _match_cotangent(dcs[1], c1),
+            _match_cotangent(dcs[2], c2),
+            _match_cotangent(dcs[3], c3))
+
+
+def _grad_info_fields(plan: GemtPlan, adj: GemtPlan, g_shape, g_dtype) -> dict:
+    """Forward-time ``grad_*`` accounting: what the backward pass will run.
+
+    Derived from the (cached) adjoint plan, so ``info`` can prove — before
+    any gradient is pulled — that the backward lowers through the engine
+    (nonzero kernel counters, no silent einsum fallback on kernel-capable
+    shapes).  ``grad_stats()`` counts actual backward executions.
+    """
+    from .lower import coeff_grad_backend
+
+    fused_dx = _adjoint_fused_dx_wins(adj, g_shape, g_dtype)
+    if fused_dx and adj.fused3 is not None:
+        executed = (f"fused{(adj.fused3.mode_a, adj.fused3.mode_b, adj.fused3.mode_c)}",)
+    elif fused_dx and adj.fused is not None:
+        fp = adj.fused
+        executed = tuple(
+            f"fused{(fp.mode_a, fp.mode_b)}" if i == fp.first else
+            adj.stages[i].backend
+            for i in range(3) if i not in (fp.first + 1,))
+    else:
+        executed = adj.backends
+    batch = int(g_shape[0]) if len(g_shape) == 4 else 1
+    dims = dict(zip((1, 2, 3), plan.in_shape))
+    out_dims = dict(zip((1, 2, 3), plan.out_shape))
+    sharded = (any(a is not None for a in plan.axes)
+               or plan.batch_axis is not None)
+    coeff_backends = []
+    coeff_macs = 0
+    for mode in (1, 2, 3):
+        # dC_s rows: every non-s forward output extent (the boundary pair
+        # shares them) times the batch; extents (N_s, K_s).
+        rows = batch
+        for m in (1, 2, 3):
+            if m != mode:
+                rows *= out_dims[m] if plan.order.index(m) < plan.order.index(mode) else dims[m]
+        # Sharded plans pin the coefficient cotangent to einsum (global
+        # arrays outside shard_map — see _execute_vjp_sharded).
+        coeff_backends.append(
+            "einsum" if sharded else
+            coeff_grad_backend(rows, dims[mode], out_dims[mode], g_dtype))
+        coeff_macs += rows * dims[mode] * out_dims[mode]
+    kernel = (sum(1 for b in executed if b != "einsum")
+              + sum(1 for b in coeff_backends if b != "einsum"))
+    einsum = (sum(1 for b in executed if b == "einsum")
+              + sum(1 for b in coeff_backends if b == "einsum"))
+    return {
+        "grad_order": adj.order,
+        "grad_backends": adj.backends,
+        "grad_backends_executed": executed,
+        "grad_coeff_backends": tuple(coeff_backends),
+        "grad_kernel_stages": kernel,
+        "grad_einsum_stages": einsum,
+        "grad_fused": fused_dx,
+        "grad_macs": adj.macs + coeff_macs,
+        "grad_hbm_bytes_moved": adj.hbm_bytes_moved,
+        "grad_collective_bytes": adj.collective_bytes,
+    }
+
+
+def _execute_differentiable(plan: GemtPlan, mesh, x, c1, c2, c3, *,
+                            use_pallas, grad_opts: dict):
+    """Run ``plan`` under the engine's custom VJP.  Returns ``(y, info)``.
+
+    The primal is the ordinary executor; the backward re-enters the engine
+    (``_vjp_backward``): the X-cotangent as the derived adjoint plan over
+    ``C_sᵀ`` (planned GEMT — staged/pair/triple fusion, ESOP, autotune all
+    apply) and the coefficient cotangents as mode-unfolded rank-k SR-GEMM
+    updates.  ``info`` gains the forward-time ``grad_*`` fields.
+    """
+    info_cell: dict = {}
+
+    def prim(x, c1, c2, c3):
+        if mesh is not None:
+            y, info = execute_sharded_with_info(plan, mesh, x, c1, c2, c3,
+                                                use_pallas=use_pallas)
+        else:
+            y, info = execute_with_info(plan, x, c1, c2, c3,
+                                        use_pallas=use_pallas)
+        info_cell.update(info)
+        return y
+
+    @jax.custom_vjp
+    def f(x, c1, c2, c3):
+        return prim(x, c1, c2, c3)
+
+    def bwd(res, g):
+        xr, c1r, c2r, c3r = res
+        return _vjp_backward(plan, mesh, xr, c1r, c2r, c3r, g,
+                             use_pallas=use_pallas, **grad_opts)
+
+    f.defvjp(lambda x, c1, c2, c3: (prim(x, c1, c2, c3), (x, c1, c2, c3)),
+             bwd)
+    y = f(x, c1, c2, c3)
+    info = dict(info_cell)
+    # Forward-time grad accounting: derive the adjoint plan now (cached —
+    # the backward reuses it) so info proves what the VJP will lower.
+    g_shape = plan.out_shape if x.ndim == 3 else (x.shape[0],) + plan.out_shape
+    g_dtype = jnp.result_type(x.dtype, c1.dtype)
+    cts = {m: _transposed(c) for m, c in ((1, c1), (2, c2), (3, c3))}
+    adj = _adjoint_plan(plan, g_shape, g_dtype, cts,
+                        esop_threshold=grad_opts["esop_threshold"],
+                        block_sizes=grad_opts["block_sizes"],
+                        fuse=grad_opts["fuse"],
+                        vmem_budget=grad_opts["vmem_budget"], mesh=mesh)
+    info.update(_grad_info_fields(plan, adj, g_shape, g_dtype))
+    return y, info
 
 
 def gemt3_planned(
@@ -454,6 +940,7 @@ def gemt3_planned(
     autotune_cache: AutotuneCache | str | None = None,
     use_pallas: bool | None = None,
     with_info: bool = False,
+    differentiable: bool = False,
     mesh=None,
     axes=None,
     batch_axis=None,
@@ -483,6 +970,15 @@ def gemt3_planned(
     Traced coefficients (calling this under an outer ``jit``) degrade
     planning to dense sr_gemm/einsum backends and skip autotuning — zero
     structure is unreadable from a tracer.
+
+    ``differentiable=True`` wraps the execution in the engine's custom VJP
+    (docs/engine.md, "Differentiation"): ``jax.grad``/``jax.vjp`` then
+    lower the backward pass *through the engine* — the X-cotangent as the
+    derived adjoint plan (another planned GEMT over the transposed
+    coefficients, with the same fusion tiers / ESOP schedules / autotune
+    caches) and the three coefficient cotangents as mode-unfolded rank-k
+    SR-GEMM updates.  ``info`` gains ``grad_*`` fields describing the
+    planned backward; ``grad_stats()`` counts executed backward passes.
     """
     if mesh is not None and axes is None:
         axes = default_mode_axes(mesh, batch_axis)
@@ -491,25 +987,21 @@ def gemt3_planned(
                       fuse=fuse, vmem_budget=vmem_budget, mesh=mesh,
                       axes=axes, batch_axis=batch_axis)
     if autotune and not _is_traced(c1, c2, c3):
-        cache = (autotune_cache if isinstance(autotune_cache, AutotuneCache)
-                 else AutotuneCache(autotune_cache))
         # Per-shard batch: the tuned tiles must see the local GEMM rows.
         batch = ((int(x.shape[0]) if x.ndim == 4 else 1)
                  // max(plan.batch_shards, 1))
-        # Memoize the tuned variant: a warm hot loop must not pay the
-        # cache probes + fused-mask refresh (a device pad + host sync)
-        # per call.  plan.key only digests the zero *structure*, so the
-        # content fingerprints are added — different coefficient matrices
-        # of identical sparsity must still tune under their own sigs.
-        tkey = (plan.key, cache.path, batch, use_pallas,
-                _fingerprint(c1), _fingerprint(c2), _fingerprint(c3))
-        tuned = _TUNED_PLAN_CACHE.get(tkey)
-        if tuned is None:
-            tuned = _autotuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch,
-                                    cache, use_pallas,
-                                    vmem_budget=vmem_budget, x_dtype=x.dtype)
-            _TUNED_PLAN_CACHE[tkey] = tuned
-        plan = tuned
+        plan = _tuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch,
+                           autotune_cache, use_pallas, vmem_budget, x.dtype)
+    if differentiable:
+        y, info = _execute_differentiable(
+            plan, mesh, x, c1, c2, c3, use_pallas=use_pallas,
+            grad_opts=dict(esop_threshold=esop_threshold,
+                           block_sizes=block_sizes, fuse=fuse,
+                           vmem_budget=vmem_budget, autotune=autotune,
+                           autotune_cache=autotune_cache))
+        if out is not None:
+            y = out + y  # differentiates natively: d(out) = g
+        return (y, info) if with_info else y
     if mesh is not None:
         y, info = execute_sharded_with_info(plan, mesh, x, c1, c2, c3, out,
                                             use_pallas=use_pallas)

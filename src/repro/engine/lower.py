@@ -25,7 +25,8 @@ from ..kernels import ops
 from .plan import FusedPairPlan, FusedTriplePlan, StagePlan
 
 __all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair",
-           "lower_fused_triple", "lower_sharded_stage"]
+           "lower_fused_triple", "lower_sharded_stage", "lower_coeff_grad",
+           "coeff_grad_backend"]
 
 # The einsum backend contracts in place (XLA folds the relayout into one
 # dot_general) instead of the unfold→matmul→fold chain, whose
@@ -158,6 +159,68 @@ def lower_sharded_stage(
     combined = jax.lax.psum_scatter(moved, names, scatter_dimension=0,
                                     tiled=True)
     return jnp.moveaxis(combined, 0, ax), info
+
+
+def coeff_grad_backend(rows_total: int, n: int, k: int, dtype) -> str:
+    """Backend for a coefficient-cotangent GEMM ``(N_s, rows) @ (rows, K_s)``.
+
+    The cotangent of a coefficient matrix is a mode-unfolded rank-``rows``
+    product — dense regardless of C's zero structure (the linearization in
+    C does not inherit its sparsity), so the menu is SR-GEMM vs the einsum
+    fallback, by the same complex-dtype and minimum-extent rules as
+    forward stages.
+    """
+    from .plan import MIN_KERNEL_DIM
+
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        return "einsum"
+    if min(rows_total, n, k) < MIN_KERNEL_DIM:
+        return "einsum"
+    return "sr_gemm"
+
+
+def lower_coeff_grad(
+    a: jnp.ndarray,
+    g: jnp.ndarray,
+    mode: int,
+    *,
+    use_pallas: bool | None = None,
+    backend: str | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Coefficient cotangent ``dC_s = unfold_s(A)ᵀ @ unfold_s(G)``.
+
+    ``a`` is the forward stage's *input* tensor (mode ``s`` still at extent
+    N_s) and ``g`` the cotangent of that stage's *output* (mode ``s`` at
+    K_s); every other axis — including a leading batch — is identical on
+    both sides and folds into the contraction rows, so the whole update is
+    one SR-GEMM rank-``rows`` product.  Returns ``(dC, info)`` with the
+    ``kind="coeff_grad"`` dispatch accounting the VJP executor aggregates
+    into the ``grad_*`` counters.
+
+    ``backend`` overrides :func:`coeff_grad_backend` — the sharded
+    executor pins ``"einsum"`` because its operands are *global* sharded
+    arrays outside any ``shard_map``: only a plain ``dot_general`` gives
+    GSPMD something it can partition (and psum across shards); a
+    ``pallas_call`` on multi-device operands has no SPMD rule.
+    """
+    from .plan import _pow2_clamp
+
+    a2d, _ = mode_unfold(a, mode)
+    g2d, _ = mode_unfold(g, mode)
+    rows, n = a2d.shape
+    k = g2d.shape[1]
+    if backend is None:
+        backend = coeff_grad_backend(rows, n, k,
+                                     jnp.result_type(a2d.dtype, g2d.dtype))
+    info = {"mode": mode, "backend": backend, "kind": "coeff_grad",
+            "rows": int(rows), "macs": int(rows) * int(n) * int(k)}
+    if backend == "einsum":
+        dc = jnp.swapaxes(a2d, 0, 1) @ g2d
+    else:
+        dc = ops.sr_gemm(jnp.swapaxes(a2d, 0, 1), g2d,
+                         bm=_pow2_clamp(n), bn=_pow2_clamp(k),
+                         bk=_pow2_clamp(rows), use_pallas=use_pallas)
+    return dc, info
 
 
 def lower_fused_pair(

@@ -61,6 +61,7 @@ __all__ = [
     "FusedTriplePlan",
     "GemtPlan",
     "build_plan",
+    "derive_adjoint_plan",
     "order_costs",
     "macs_for_order",
     "sparsity_signature",
@@ -983,6 +984,53 @@ def _plan_fusion(
     if not force and best.hbm_bytes_fused >= staged:
         return None
     return best
+
+
+def derive_adjoint_plan(
+    plan: GemtPlan,
+    g_shape: tuple[int, ...],
+    g_dtype,
+    c1t: jnp.ndarray,
+    c2t: jnp.ndarray,
+    c3t: jnp.ndarray,
+    *,
+    esop_threshold: float = DEFAULT_ESOP_THRESHOLD,
+    block_sizes: tuple[int, int, int] | None = None,
+    fuse: bool | str | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    mesh=None,
+) -> GemtPlan:
+    """Plan the backward 3D-GEMT of ``plan`` — the X-cotangent problem.
+
+    The VJP of ``Y = X ×₁C1 ×₂C2 ×₃C3`` with respect to X is itself a
+    three-stage GEMT over the transposed coefficient matrices,
+    ``dX = g ×₁C1ᵀ ×₂C2ᵀ ×₃C3ᵀ`` (for the paper's orthonormal transforms,
+    §2.2, ``Cᵀ = C⁻¹`` — the backward pass *is* the inverse transform) —
+    so it re-enters the same planner, fusion tiers, ESOP schedules and
+    autotune caches as any forward problem.
+
+    The stage order is **pinned to the reverse of the forward order**, not
+    searched: the adjoint chain's intermediates ``g_i`` (cotangents of the
+    forward stage boundaries) are exactly what the three coefficient
+    cotangents contract against, and only the reversed order produces
+    them.  It is also the cost-symmetric choice — compressive forward
+    modes (planned early) become expansive adjoint modes (planned late).
+
+    Topology: the adjoint inherits the forward plan's ``axes`` and
+    ``batch_axis`` verbatim — the cotangent carries the output's sharding,
+    which equals the input's (the stationary-tensor invariant), and the
+    forward divisibility checks (N_s *and* K_s divide the axis) already
+    guarantee the adjoint's.  The derived plan's key is the forward key
+    plus an ``|adjoint`` tag, so forward and backward programs share the
+    plan cache without colliding.
+    """
+    adj = build_plan(
+        g_shape, g_dtype, c1t, c2t, c3t, order=plan.order[::-1],
+        esop_threshold=esop_threshold, block_sizes=block_sizes, fuse=fuse,
+        vmem_budget=vmem_budget, mesh=mesh,
+        axes=plan.axes if mesh is not None else None,
+        batch_axis=plan.batch_axis if mesh is not None else None)
+    return dataclasses.replace(adj, key=plan.key + "|adjoint")
 
 
 def build_plan(

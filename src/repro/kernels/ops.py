@@ -10,6 +10,9 @@ contract is documented in ``docs/engine.md`` ("Lowering").
 """
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -22,9 +25,51 @@ from .fused_gemt import fused_gemt_pallas, kb_padded
 from .sr_gemm import sr_gemm_pallas
 
 __all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "fused3_gemt",
-           "flash_attention", "esop_plan_cached", "on_tpu"]
+           "flash_attention", "esop_plan_cached", "esop_memo_stats",
+           "set_esop_memo_size", "transposed_cached", "on_tpu"]
 
-_ESOP_PLAN_MEMO = ArrayMemo()  # per-C-identity padded schedule + block stats
+# Host-side ESOP schedules are memoized per coefficient-matrix identity.
+# Long-running serve sessions stream *distinct* matrices through, so the
+# memo is LRU-bounded (satellite of the differentiable-engine PR); the knob
+# is REPRO_ESOP_MEMO_SIZE (entries, default 256) or set_esop_memo_size().
+_ESOP_MEMO_DEFAULT = int(os.environ.get("REPRO_ESOP_MEMO_SIZE", "256"))
+_ESOP_PLAN_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT)
+# Adjoint reuse: the VJP paths contract against C^T.  Recomputing the
+# transpose per backward call would give it a fresh identity every time and
+# defeat every identity-keyed memo downstream (esop plans, fingerprints,
+# plan caches) — so the transpose itself is memoized on C's identity.
+_TRANSPOSED_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT)
+
+
+def esop_memo_stats() -> dict:
+    """Hit/miss/evict accounting of the bounded ESOP-schedule memo.
+
+    Surfaced in the engine's ``info["esop_memo"]`` so serve telemetry can
+    prove the schedule cache is neither thrashing nor growing unbounded.
+    """
+    return {"entries": len(_ESOP_PLAN_MEMO),
+            "maxsize": _ESOP_PLAN_MEMO.maxsize,
+            **_ESOP_PLAN_MEMO.stats}
+
+
+def set_esop_memo_size(maxsize: int | None) -> None:
+    """Re-bound the ESOP-schedule (and transpose) memos; LRU-evicts now."""
+    _ESOP_PLAN_MEMO.set_maxsize(maxsize)
+    _TRANSPOSED_MEMO.set_maxsize(maxsize)
+
+
+def transposed_cached(c: jnp.ndarray) -> jnp.ndarray:
+    """``C^T`` memoized on C's identity (tracers transpose uncached).
+
+    The adjoint of every GEMT stage contracts against the transposed
+    coefficient matrix; returning the *same* transposed array object per
+    forward matrix keeps the identity-keyed ESOP/plan/fingerprint memos hot
+    across backward passes.
+    """
+    if isinstance(c, jax.core.Tracer):
+        return jnp.swapaxes(c, 0, 1)
+    return _TRANSPOSED_MEMO.get_or_compute(
+        c, "T", lambda: jnp.swapaxes(c, 0, 1))
 
 
 def esop_plan_cached(c: jnp.ndarray, bk: int, bn: int):
@@ -65,12 +110,46 @@ def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
     return x
 
 
-def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
-            bm: int = 128, bn: int = 128, bk: int = 128,
-            use_pallas: bool | None = None) -> jnp.ndarray:
-    """Y = (out +) X @ C via the streaming outer-product kernel."""
-    if use_pallas is None:
-        use_pallas = on_tpu()
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _linear_custom_vjp(prim, bwd_x, bwd_c, x, c, out):
+    """Wrap the bilinear kernel dispatch ``prim(x, c, out)`` in a custom VJP.
+
+    ``pallas_call`` defines no differentiation rule, so without this any
+    ``jax.grad`` touching the kernel dispatch would fail (compiled) or
+    differentiate through kernel internals (interpret mode).  The wrapper
+    makes every public op VJP-safe: the backward GEMMs re-enter the same
+    kernel dispatch (``bwd_x``/``bwd_c`` callables), so a gradient never
+    silently leaves the kernel path.  ``out``'s cotangent is ``g`` itself
+    (the affine seed adds straight through, Eq. 1's ``+=``).
+
+    Built per call because ESOP's ``prim`` closes over unhashable
+    prefetch-plan device arrays; SR-GEMM, the forward hot path, gets the
+    memoized :func:`_sr_gemm_vjp` factory instead.
+    """
+    if out is None:
+        @jax.custom_vjp
+        def f(x, c):
+            return prim(x, c, None)
+
+        f.defvjp(lambda x, c: (prim(x, c, None), (x, c)),
+                 lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g)))
+        return f(x, c)
+
+    @jax.custom_vjp
+    def fo(x, c, out):
+        return prim(x, c, out)
+
+    fo.defvjp(lambda x, c, out: (prim(x, c, out), (x, c)),
+              lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g), g))
+    return fo(x, c, out)
+
+
+def _sr_dispatch(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None,
+                 bm: int, bn: int, bk: int, use_pallas: bool) -> jnp.ndarray:
+    """Raw (non-differentiable) SR-GEMM dispatch: pad → kernel → crop."""
     if not use_pallas:
         return ref.ref_sr_gemm(x, c, out)
     interpret = not on_tpu()
@@ -80,6 +159,63 @@ def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
     op = _pad_to(out, (bm, bn)) if out is not None else None
     y = sr_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y[:m, :n]
+
+
+@functools.lru_cache(maxsize=None)
+def _sr_gemm_vjp(bm: int, bn: int, bk: int, use_pallas: bool,
+                 has_out: bool):
+    """Module-level custom-VJP builder for SR-GEMM, memoized per static
+    config.
+
+    SR-GEMM is the engine's dense workhorse and runs on forward-only
+    serving hot loops too, so — unlike the rarer ESOP/fused ops, whose
+    unhashable prefetch-plan operands force per-call closures — its
+    wrapper is built once per ``(tiles, dispatch, out)`` config, not per
+    call.
+    """
+    def prim(x, c, out):
+        return _sr_dispatch(x, c, out, bm, bn, bk, use_pallas)
+
+    def bwd_x(g, c):
+        # dX (m, k) = g (m, n) @ C^T (n, k): output cols k, contraction n.
+        return _sr_dispatch(g, transposed_cached(c), None, bm, bk, bn,
+                            use_pallas)
+
+    def bwd_c(x, g):
+        # dC (k, n) = X^T (k, m) @ g (m, n): rows k, contraction m.
+        return _sr_dispatch(jnp.swapaxes(x, 0, 1), g, None, bk, bn, bm,
+                            use_pallas)
+
+    if has_out:
+        @jax.custom_vjp
+        def fo(x, c, out):
+            return prim(x, c, out)
+
+        fo.defvjp(lambda x, c, out: (prim(x, c, out), (x, c)),
+                  lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g), g))
+        return fo
+
+    @jax.custom_vjp
+    def f(x, c):
+        return prim(x, c, None)
+
+    f.defvjp(lambda x, c: (prim(x, c, None), (x, c)),
+             lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g)))
+    return f
+
+
+def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
+            bm: int = 128, bn: int = 128, bk: int = 128,
+            use_pallas: bool | None = None) -> jnp.ndarray:
+    """Y = (out +) X @ C via the streaming outer-product kernel.
+
+    VJP-safe: ``dX = g @ C^T`` and ``dC = X^T @ g`` run the same kernel
+    dispatch with the tile roles swapped.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    f = _sr_gemm_vjp(bm, bn, bk, use_pallas, out is not None)
+    return f(x, c, out) if out is not None else f(x, c)
 
 
 def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
@@ -98,18 +234,40 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
         use_pallas = on_tpu()
     counts, idx, t_steps, stats = (plan if plan is not None
                                    else esop_plan_cached(c, bk, bn))
+
+    def prim(x, c, out):
+        if not use_pallas:
+            return ref.ref_esop_gemm(x, c, (bk, bn), out)
+        interpret = not on_tpu()
+        m, n = x.shape[0], c.shape[1]
+        xp = _pad_to(x, (bm, bk))
+        cp = _pad_to(c, (bk, bn))
+        op = _pad_to(out, (bm, bn)) if out is not None else None
+        yk, _ = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret,
+                                 plan=(counts, idx, t_steps))
+        return yk[:m, :n]
+
+    def bwd_x(g, c):
+        # dX = g @ C^T reuses block skipping on the transposed structure
+        # (same zero blocks, transposed grid).  A traced C has no
+        # host-readable schedule — dense SR-GEMM then (still the kernel).
+        if _is_traced(c):
+            return _sr_dispatch(g, jnp.swapaxes(c, 0, 1), None,
+                                bm, bk, bn, use_pallas)
+        dx, _ = esop_gemm(g, transposed_cached(c), bm=bm, bn=bk, bk=bn,
+                          use_pallas=use_pallas)
+        return dx
+
+    def bwd_c(x, g):
+        # dC = X^T @ g is dense regardless of C's zeros: the linearization
+        # of Y = X @ C in C does not inherit C's sparsity.
+        return _sr_dispatch(jnp.swapaxes(x, 0, 1), g, None, bk, bn, bm,
+                            use_pallas)
+
     # dict(stats): the memoized entry is shared across calls — handing the
     # caller the cached object would let an info-dict mutation poison it
-    if not use_pallas:
-        return ref.ref_esop_gemm(x, c, (bk, bn), out), dict(stats)
-    interpret = not on_tpu()
-    m, n = x.shape[0], c.shape[1]
-    xp = _pad_to(x, (bm, bk))
-    cp = _pad_to(c, (bk, bn))
-    op = _pad_to(out, (bm, bn)) if out is not None else None
-    y, _ = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
-                            interpret=interpret, plan=(counts, idx, t_steps))
-    return y[:m, :n], dict(stats)
+    return _linear_custom_vjp(prim, bwd_x, bwd_c, x, c, out), dict(stats)
 
 
 def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
@@ -161,16 +319,48 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     }
     info["fetch_savings"] = 1.0 - (info["blocks_live"]
                                    / max(info["blocks_dense"], 1))
-    if not use_pallas:
-        return ref.ref_fused_gemt(x3, ca, cb), info
-    interpret = not on_tpu()
-    xp = _pad_to(x3, (bu, bnb, bna))
-    cap = _pad_to(ca, (bna, bka))
-    cbp = _pad_to(cb, (bnb, kbp))
-    y, _ = fused_gemt_pallas(
-        xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna, interpret=interpret,
-        plan=(counts_a, idx_a, t_a, idx_b, t_b))
-    return y[:u, :ka, :kb], info
+
+    def prim(x3, ca, cb):
+        if not use_pallas:
+            return ref.ref_fused_gemt(x3, ca, cb)
+        interpret = not on_tpu()
+        xp = _pad_to(x3, (bu, bnb, bna))
+        cap = _pad_to(ca, (bna, bka))
+        cbp = _pad_to(cb, (bnb, kbp))
+        yk, _ = fused_gemt_pallas(
+            xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna,
+            interpret=interpret, plan=(counts_a, idx_a, t_a, idx_b, t_b))
+        return yk[:u, :ka, :kb]
+
+    @jax.custom_vjp
+    def f(x3, ca, cb):
+        return prim(x3, ca, cb)
+
+    def bwd(res, g):
+        x3r, car, cbr = res
+        # dX3 is itself a fused two-stage GEMT over the transposed
+        # coefficients (the orthonormal-transform adjoint, paper §2.2):
+        # the (Ka, Kb) output modes slide into the kernel's (na', nb')
+        # slots.  Traced coefficients have no host-readable ESOP schedule,
+        # so they take the fused jnp oracle instead of the kernel.
+        gsw = jnp.swapaxes(g, 1, 2)  # (U, Kb, Ka)
+        if _is_traced(car, cbr):
+            dx3 = ref.ref_fused_gemt(gsw, jnp.swapaxes(car, 0, 1),
+                                     jnp.swapaxes(cbr, 0, 1))
+        else:
+            dx3, _ = fused_gemt(gsw, transposed_cached(car),
+                                transposed_cached(cbr), bu=bu,
+                                use_pallas=use_pallas)
+        dx3 = jnp.swapaxes(dx3, 1, 2)
+        # Coefficient cotangents are mode-unfolded rank-k products; the
+        # engine-level VJP owns the training hot path with planned kernels,
+        # this direct-op safety net contracts them in place.
+        dca = jnp.einsum("uba,ukl,bl->ak", x3r, g, cbr)
+        dcb = jnp.einsum("uba,ak,ukl->bl", x3r, car, g)
+        return dx3, dca, dcb
+
+    f.defvjp(lambda x3, ca, cb: (prim(x3, ca, cb), (x3, ca, cb)), bwd)
+    return f(x3, ca, cb), info
 
 
 def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
@@ -233,18 +423,49 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     }
     info["fetch_savings"] = 1.0 - (info["blocks_live"]
                                    / max(info["blocks_dense"], 1))
-    if not use_pallas:
-        return ref.ref_fused3_gemt(x4, ca, cb, cc), info
-    interpret = not on_tpu()
-    xp = _pad_to(x4, (bu, bnc, bnb, bna))
-    cap = _pad_to(ca, (bna, bka))
-    cbp = _pad_to(cb, (bnb, kbp))
-    ccp = _pad_to(cc, (bnc, kcp))
-    y, _ = fused3_gemt_pallas(
-        xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
-        interpret=interpret,
-        plan=(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c))
-    return y[:u, :ka, :kb, :kc], info
+
+    def prim(x4, ca, cb, cc):
+        if not use_pallas:
+            return ref.ref_fused3_gemt(x4, ca, cb, cc)
+        interpret = not on_tpu()
+        xp = _pad_to(x4, (bu, bnc, bnb, bna))
+        cap = _pad_to(ca, (bna, bka))
+        cbp = _pad_to(cb, (bnb, kbp))
+        ccp = _pad_to(cc, (bnc, kcp))
+        yk, _ = fused3_gemt_pallas(
+            xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
+            interpret=interpret,
+            plan=(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c))
+        return yk[:u, :ka, :kb, :kc]
+
+    @jax.custom_vjp
+    def f(x4, ca, cb, cc):
+        return prim(x4, ca, cb, cc)
+
+    def bwd(res, g):
+        x4r, car, cbr, ccr = res
+        # dX4 is the whole-transform adjoint — another fused triple over
+        # the transposed coefficients, with the (Ka, Kb, Kc) output modes
+        # reversed into the kernel's (nc', nb', na') streaming slots.
+        gsw = jnp.transpose(g, (0, 3, 2, 1))  # (U, Kc, Kb, Ka)
+        if _is_traced(car, cbr, ccr):
+            dx4 = ref.ref_fused3_gemt(gsw, jnp.swapaxes(car, 0, 1),
+                                      jnp.swapaxes(cbr, 0, 1),
+                                      jnp.swapaxes(ccr, 0, 1))
+        else:
+            dx4, _ = fused3_gemt(gsw, transposed_cached(car),
+                                 transposed_cached(cbr),
+                                 transposed_cached(ccr), bu=bu,
+                                 use_pallas=use_pallas)
+        dx4 = jnp.transpose(dx4, (0, 3, 2, 1))
+        dca = jnp.einsum("ucba,uklm,bl,cm->ak", x4r, g, cbr, ccr)
+        dcb = jnp.einsum("ucba,ak,uklm,cm->bl", x4r, car, g, ccr)
+        dcc = jnp.einsum("ucba,ak,bl,uklm->cm", x4r, car, cbr, g)
+        return dx4, dca, dcb, dcc
+
+    f.defvjp(lambda x4, ca, cb, cc: (prim(x4, ca, cb, cc), (x4, ca, cb, cc)),
+             bwd)
+    return f(x4, ca, cb, cc), info
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -7,27 +7,49 @@ the cost the memo is supposed to avoid.  :class:`ArrayMemo` keys on
 keyed object (entries self-evict when the array is collected).  Objects that
 don't support weak references (e.g. raw ``np.ndarray``) are computed but not
 cached — correct, just not memoized.
+
+A ``maxsize`` bound makes the memo an LRU cache: long-running serve
+sessions stream distinct coefficient matrices through ``esop_plan_cached``
+and friends, and without a bound the host-side schedules (plus the strong
+references some values hold on derived arrays) grow without limit.  Hits
+refresh recency; inserting past the bound evicts the least-recently-used
+entry.  ``stats`` counts hits/misses/evictions so the engine's ``info``
+dict can prove cache behaviour in production.
 """
 from __future__ import annotations
 
 import weakref
+from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
 __all__ = ["ArrayMemo"]
 
 
 class ArrayMemo:
-    """``(array identity, extra key) -> value`` cache with weakref eviction."""
+    """``(array identity, extra key) -> value`` LRU cache with weakref
+    eviction and hit/miss/evict accounting.
 
-    def __init__(self):
-        self._entries: dict[tuple, tuple[weakref.ref, Any]] = {}
+    ``maxsize=None`` (default) keeps the pre-bound behaviour: unbounded,
+    entries only leave when their keyed array is garbage-collected.
+    """
+
+    def __init__(self, maxsize: int | None = None):
+        if maxsize is not None and maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
+        self._entries: "OrderedDict[tuple, tuple[weakref.ref, Any]]" = (
+            OrderedDict())
+        self.maxsize = maxsize
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     def get_or_compute(self, array, extra: Hashable,
                        compute: Callable[[], Any]) -> Any:
         key = (id(array), extra)
         hit = self._entries.get(key)
         if hit is not None and hit[0]() is array:
+            self.stats["hits"] += 1
+            self._entries.move_to_end(key)  # refresh LRU recency
             return hit[1]
+        self.stats["misses"] += 1
         value = compute()
         try:
             ref = weakref.ref(array,
@@ -35,7 +57,26 @@ class ArrayMemo:
         except TypeError:
             return value  # not weakref-able: skip caching
         self._entries[key] = (ref, value)
+        self._entries.move_to_end(key)
+        self._evict_over_bound()
         return value
+
+    def set_maxsize(self, maxsize: int | None) -> None:
+        """Re-bound the memo; shrinking evicts LRU entries immediately."""
+        if maxsize is not None and maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
+        self.maxsize = maxsize
+        self._evict_over_bound()
+
+    def _evict_over_bound(self) -> None:
+        if self.maxsize is None:
+            return
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)  # least recently used
+            self.stats["evictions"] += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -39,16 +39,23 @@ def schedule(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
 
 
 def init_opt_state(params, cfg: OptConfig) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    # m mirrors the gradient (complex for complex params — learned DFT
+    # factors); v holds |g|² and stays real either way.
+    def zeros_m(p):
+        dt = jnp.complex64 if jnp.iscomplexobj(p) else cfg.state_dtype
+        return jnp.zeros(p.shape, dt)
+
     return {
-        "m": jax.tree.map(zeros, params),
-        "v": jax.tree.map(zeros, params),
+        "m": jax.tree.map(zeros_m, params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.state_dtype),
+                          params),
         "step": jnp.zeros((), jnp.int32),
     }
 
 
 def global_norm(tree) -> jnp.ndarray:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+    # |x|² so complex leaves contribute their modulus (== x² for real).
+    return jnp.sqrt(sum(jnp.sum(jnp.square(jnp.abs(x)).astype(jnp.float32))
                         for x in jax.tree.leaves(tree)))
 
 
@@ -63,14 +70,19 @@ def adamw_update(params, grads, state, cfg: OptConfig):
     b2c = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1)
 
     def upd(p, g, m, v):
-        g = g.astype(jnp.float32) * scale
-        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
-        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        work = jnp.complex64 if jnp.iscomplexobj(g) else jnp.float32
+        g = g.astype(work) * scale
+        m_new = cfg.b1 * m.astype(work) + (1 - cfg.b1) * g
+        # |g|² (real, == g·g for real grads): complex parameters — e.g.
+        # learned DFT factors — need the modulus for the second moment.
+        v_new = (cfg.b2 * v.astype(jnp.float32)
+                 + (1 - cfg.b2) * jnp.real(g * jnp.conj(g)))
         mhat = m_new / b1c
         vhat = v_new / b2c
-        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
-        p_new = p.astype(jnp.float32) - lr * delta
-        return (p_new.astype(p.dtype), m_new.astype(cfg.state_dtype),
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(work)
+        p_new = p.astype(work) - lr * delta
+        m_dtype = work if jnp.iscomplexobj(m_new) else cfg.state_dtype
+        return (p_new.astype(p.dtype), m_new.astype(m_dtype),
                 v_new.astype(cfg.state_dtype))
 
     flat_p, treedef = jax.tree.flatten(params)

@@ -80,6 +80,14 @@ class DxtServeSession:
     byte counters gain the collective split (``collective_bytes`` is the
     modeled per-device psum_scatter ICI traffic; the HBM counters are
     per-shard when a mesh is set).
+
+    ``inverse=True`` serves the inverse transform via
+    ``inverse_coefficient_matrix``; ``transform(batch, inverse=...)``
+    overrides it per request, so one session serves both directions from
+    the same per-dims coefficient/plan caches.  Forward and inverse share
+    autotuned tiles for free: the autotune key digests shapes + the
+    *zero-structure* fingerprint, and a dense orthonormal C and its
+    transposed inverse have identical shapes and structure.
     """
 
     kind: str = "dct"
@@ -104,25 +112,33 @@ class DxtServeSession:
         self.collective_bytes = 0  # modeled ICI traffic (0 without a mesh)
         self.last_info: dict | None = None
 
-    def _coeffs_for(self, dims: tuple[int, int, int]) -> tuple:
-        key = (self.kind, self.inverse, dims)
+    def _coeffs_for(self, dims: tuple[int, int, int],
+                    inverse: bool | None = None) -> tuple:
+        inv = self.inverse if inverse is None else bool(inverse)
+        key = (self.kind, inv, dims)
         if key not in self._coeffs:
             from ..core.transforms import (coefficient_matrix,
                                            inverse_coefficient_matrix)
-            build = (inverse_coefficient_matrix if self.inverse
-                     else coefficient_matrix)
+            build = inverse_coefficient_matrix if inv else coefficient_matrix
             self._coeffs[key] = tuple(build(self.kind, n) for n in dims)
         return self._coeffs[key]
 
-    def transform(self, batch) -> jnp.ndarray:
-        """Apply the transform to a (B, N1, N2, N3) batch."""
+    def transform(self, batch, inverse: bool | None = None) -> jnp.ndarray:
+        """Apply the transform to a (B, N1, N2, N3) batch.
+
+        ``inverse`` overrides the session's direction for this request
+        (None = the session default): round-trip serving — forward then
+        inverse on the same session — reuses the per-dims coefficient
+        cache and, since the directions share shapes and zero structure,
+        the same engine plans and autotuned tiles.
+        """
         from ..engine import gemt3_planned
 
         x = jnp.asarray(batch)
         if x.ndim != 4:
             raise ValueError(f"expected (B, N1, N2, N3), got shape {x.shape}")
         dims = tuple(int(d) for d in x.shape[1:])
-        c1, c2, c3 = self._coeffs_for(dims)
+        c1, c2, c3 = self._coeffs_for(dims, inverse)
         if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x):
             x = x.astype(c1.dtype)
 

@@ -3,5 +3,6 @@
 Not a paper subsystem — production scaffolding for the north-star training
 path (``docs/architecture.md``, "Production substrate").
 """
-from .step import (build_train_step, cross_entropy, init_train_state,
-                   loss_fn, train_state_axes)
+from .step import (build_dxt_fit_step, build_train_step, cross_entropy,
+                   init_dxt_fit_state, init_train_state, loss_fn,
+                   train_state_axes)

@@ -140,6 +140,48 @@ def build_train_step(cfg, ctx: ShardCtx, opt_cfg: OptConfig,
     return train_step
 
 
+def build_dxt_fit_step(opt_cfg: OptConfig, **engine_kwargs):
+    """Fitting step for the engine-backed DXT layer (``core.layers``).
+
+    Returns ``fit_step(state, batch) -> (state, metrics)`` minimizing the
+    MSE between the layer's transform of ``batch["x"]`` (B, N1, N2, N3)
+    and ``batch["y"]``.  The forward runs the planned engine and the
+    backward runs *through* it too — ``jax.value_and_grad`` hits the
+    engine's custom VJP, so the input cotangent is the adjoint-planned
+    GEMT and the factor gradients are SR-GEMM rank-k updates
+    (docs/engine.md, "Differentiation"); ``repro.engine.grad_stats()``
+    counts the lowered backward kernels.  ``engine_kwargs`` (``fuse=``,
+    ``autotune=``, ``mesh=``, …) pass through to the engine.
+    """
+    from ..core.layers import apply_dxt3d_layer
+
+    def loss_fn(params, batch):
+        pred = apply_dxt3d_layer(params, batch["x"], **engine_kwargs)
+        # |·|² keeps the loss real for complex kinds (DFT factors train
+        # too); identical to the squared error on real transforms.
+        return jnp.mean(jnp.abs(pred - batch["y"]) ** 2)
+
+    def fit_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_params, new_opt, om = adamw_update(state["params"], grads,
+                                               state["opt"], opt_cfg)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+
+    return fit_step
+
+
+def init_dxt_fit_state(dims, opt_cfg: OptConfig, ranks=None,
+                       kind: str = "dct", key=None,
+                       init_scale: float = 0.0) -> dict:
+    """Train state for ``build_dxt_fit_step``: DXT-initialized factors +
+    AdamW state (m/v inherit the factor shapes)."""
+    from ..core.layers import init_dxt3d_layer
+
+    params = init_dxt3d_layer(dims, ranks, kind=kind, key=key,
+                              init_scale=init_scale)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
 def init_train_state(key, cfg, opt_cfg: OptConfig) -> dict:
     params = init_model(key, cfg)
     return {"params": params, "opt": init_opt_state(params, opt_cfg)}

@@ -84,3 +84,29 @@ def test_check_regression_cli_flags_a_planted_regression(tmp_path):
         capture_output=True, text=True, cwd=REPO, env=env, timeout=600)
     assert r.returncode == 1, r.stdout + r.stderr
     assert "hbm_vs_staged" in r.stdout
+
+
+@pytest.mark.grad_smoke
+def test_grad_artifact_has_no_model_regression():
+    """G1 must reproduce: backward dispatch counters, adjoint order and
+    backends, gradient error are deterministic; wall-clock gets a 4x band."""
+    failures = check_regression(_artifact("BENCH_grad_engine.json"),
+                                tol_time=3.0)
+    assert not failures, "\n".join(failures)
+
+
+@pytest.mark.grad_smoke
+def test_grad_artifact_meets_acceptance_bar():
+    """The committed artifact carries the differentiable-engine acceptance
+    bar: gradients match the einsum reference to 1e-5 (relative), the
+    backward ran through the engine (nonzero kernel launches) and no
+    einsum stage leaked onto these kernel-capable shapes."""
+    with open(_artifact("BENCH_grad_engine.json")) as f:
+        rows = json.load(f)
+    assert rows, "empty artifact"
+    for row in rows:
+        kv = _parse_derived(row["derived"])
+        assert float(kv["max_abs_err"]) <= 1e-5, row["name"]
+        assert int(kv["bwd_kernel_launches"]) > 0, row["name"]
+        assert int(kv["bwd_einsum_stages"]) == 0, row["name"]
+        assert kv["engine_backward"] == "True", row["name"]
