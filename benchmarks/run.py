@@ -72,6 +72,16 @@ _ROW_PREFIXES = {
 # from them): compared under the --tol-time band, never exactly.
 _NOISY_MARKERS = ("_us", "us_", "speedup", "wallclock", "no_worse", "warm")
 
+# Counter-snapshot keys that legitimately vary between the recording run and
+# a fresh check (process-warm plan/memo/autotune caches shift hit/miss/build
+# splits; degradations only fire at build time) — skipped entirely.  Keys
+# carrying timing (histogram stats, *_us) get the --tol-time band; everything
+# else (MAC/byte totals, stage/launch/request counts) must reproduce exactly.
+_CACHE_COUNTER_MARKERS = ("hit", "miss", "evict", "load", "write", "build",
+                          "degradation", "probe")
+_TIMING_COUNTER_MARKERS = ("_us", "latency", ".mean", ".p50", ".p90", ".p99",
+                           ".max", ".min")
+
 
 def _parse_derived(derived: str) -> dict[str, str]:
     out = {}
@@ -93,8 +103,47 @@ def _is_noisy(key: str) -> bool:
     return any(m in key for m in _NOISY_MARKERS)
 
 
+def compare_counters(recorded: dict, fresh: dict,
+                     tol_time: float | None = 1.0) -> list[str]:
+    """Compare a recorded registry counter snapshot against a fresh one.
+
+    Cache-behaviour keys are skipped (warm-process hit/miss splits are not
+    a contract), timing keys get the ``tol_time`` band, everything else —
+    modeled MAC/byte totals, stage/launch/request counts — must reproduce
+    exactly.
+    """
+    failures = []
+    for key, rec_v in recorded.items():
+        if any(m in key for m in _CACHE_COUNTER_MARKERS):
+            continue
+        if key not in fresh:
+            failures.append(f"counters: {key} disappeared from fresh run")
+            continue
+        new_v = fresh[key]
+        if any(m in key for m in _TIMING_COUNTER_MARKERS):
+            if (tol_time is not None and float(rec_v) > 0
+                    and float(new_v) > float(rec_v) * (1.0 + tol_time)):
+                failures.append(
+                    f"counters: {key} regressed {rec_v} -> {new_v} "
+                    f"(band {tol_time:.0%})")
+        elif float(new_v) != float(rec_v):
+            failures.append(
+                f"counters: {key} changed {rec_v} -> {new_v} (re-record "
+                "the artifact if the model legitimately moved)")
+    return failures
+
+
+def _split_artifact(recorded):
+    """A BENCH artifact is either the original bare row list or the
+    counter-carrying ``{"rows": [...], "counters": {...}}`` form."""
+    if isinstance(recorded, dict):
+        return recorded.get("rows"), recorded.get("counters") or {}
+    return recorded, {}
+
+
 def check_regression(path: str, tol_time: float | None = 1.0,
                      rows: list[tuple[str, float, str]] | None = None,
+                     counters: dict | None = None,
                      ) -> list[str]:
     """Compare a committed BENCH artifact against a fresh run.
 
@@ -104,13 +153,16 @@ def check_regression(path: str, tol_time: float | None = 1.0,
     to recorded/(1+tol)); ``None`` skips wall-clock comparison entirely
     (deterministic model metrics only — useful where the committed
     artifact was recorded on different hardware).  ``rows`` injects
-    pre-collected fresh rows (tests reuse one sweep for several checks).
+    pre-collected fresh rows (tests reuse one sweep for several checks);
+    ``counters`` likewise injects a fresh registry snapshot for artifacts
+    that embed one.
     """
     try:
         with open(path) as f:
             recorded = json.load(f)
     except (OSError, ValueError) as e:
         return [f"{path}: cannot read artifact ({e})"]
+    recorded, rec_counters = _split_artifact(recorded)
     if not isinstance(recorded, list) or not recorded:
         return [f"{path}: not a BENCH artifact (expected a non-empty list)"]
 
@@ -121,13 +173,23 @@ def check_regression(path: str, tol_time: float | None = 1.0,
             return [f"{path}: unknown row prefixes {unknown} — update "
                     "_ROW_PREFIXES in benchmarks/run.py"]
         wanted = {_ROW_PREFIXES[p] for p in prefixes}
-        rows = []
-        for fn in _benches():
-            if fn.__name__ in wanted:
-                fn(rows)
+        from repro import obs
+
+        # The fresh sweep runs inside its own registry so the snapshot
+        # compares only what *these* benches recorded, not whatever else
+        # ran in this process.
+        with obs.session(name="bench-check", enable_tracing=False) as s:
+            rows = []
+            for fn in _benches():
+                if fn.__name__ in wanted:
+                    fn(rows)
+            counters = s.registry.snapshot()
     fresh = {name: (us, _parse_derived(derived)) for name, us, derived in rows}
 
     failures = []
+    if rec_counters:
+        failures.extend(compare_counters(rec_counters, counters or {},
+                                         tol_time=tol_time))
     for rec in recorded:
         name = rec["name"]
         if name not in fresh:
@@ -198,6 +260,11 @@ def main(argv: list[str] | None = None) -> None:
                          "e.g. BENCH_fused_gemt.json)")
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="only run bench functions whose name contains this")
+    ap.add_argument("--trace", metavar="TRACE_OUT", default=None,
+                    help="record engine spans during the sweep and write a "
+                         "Chrome-trace JSON (open in Perfetto / "
+                         "chrome://tracing, or inspect with "
+                         "`python -m repro.obs TRACE_OUT`)")
     ap.add_argument("--check-regression", metavar="ARTIFACT", default=None,
                     help="re-run the benches behind a committed BENCH "
                          "artifact and fail (exit 1) on regressions")
@@ -228,7 +295,14 @@ def main(argv: list[str] | None = None) -> None:
         if path is None:
             ap.error("--json without a path requires --out PATH")
 
-    rows = collect_rows(args.filter)
+    from repro import obs
+
+    # The sweep runs inside its own tracer/registry: the artifact's counter
+    # snapshot reflects this sweep only, and --trace captures its spans.
+    with obs.session(name="bench", enable_tracing=args.trace is not None) as s:
+        rows = collect_rows(args.filter)
+        counters = s.registry.snapshot()
+        spans = s.tracer.spans() if args.trace else []
     if args.filter and not rows:
         ap.error(f"--filter {args.filter!r} matched no bench function "
                  "(artifact would be empty)")
@@ -236,10 +310,15 @@ def main(argv: list[str] | None = None) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
+    if args.trace:
+        obs.write_chrome_trace(args.trace, spans, s.registry)
+        print(f"# wrote {len(spans)} spans to {args.trace}")
+
     if path:
         with open(path, "w") as f:
-            json.dump([{"name": n, "us_per_call": round(us, 1), "derived": d}
-                       for n, us, d in rows], f, indent=1)
+            json.dump({"rows": [{"name": n, "us_per_call": round(us, 1),
+                                 "derived": d} for n, us, d in rows],
+                       "counters": counters}, f, indent=1)
         print(f"# wrote {len(rows)} rows to {path}")
 
 

@@ -186,17 +186,24 @@ def dxt3d(
     ``differentiable=True`` for a ``jax.grad``-safe engine-lowered
     backward pass) pass through.
     """
+    from ..obs import trace as _trace
     from .transforms import coefficient_matrix, inverse_coefficient_matrix
 
-    build = inverse_coefficient_matrix if inverse else coefficient_matrix
-    n1, n2, n3 = x.shape
-    c1, c2, c3 = build(kind, n1), build(kind, n2), build(kind, n3)
-    if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x):
-        x = x.astype(c1.dtype)
-    if engine:
-        return gemt3_planned(x, c1, c2, c3, out=out, **engine_kwargs)
-    fn = gemt3_outer if outer else gemt3
-    return fn(x, c1, c2, c3, order=order, out=out)
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span(f"dxt3d:{kind}",
+                         {"kind": kind, "inverse": bool(inverse),
+                          "engine": bool(engine), "shape": tuple(x.shape)})
+    with sp:
+        build = inverse_coefficient_matrix if inverse else coefficient_matrix
+        n1, n2, n3 = x.shape
+        c1, c2, c3 = build(kind, n1), build(kind, n2), build(kind, n3)
+        if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x):
+            x = x.astype(c1.dtype)
+        if engine:
+            return gemt3_planned(x, c1, c2, c3, out=out, **engine_kwargs)
+        fn = gemt3_outer if outer else gemt3
+        return fn(x, c1, c2, c3, order=order, out=out)
 
 
 def macs(n1: int, n2: int, n3: int) -> int:

@@ -21,12 +21,15 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 
 __all__ = ["AutotuneCache", "autotune_gemm", "autotune_fused",
            "autotune_fused3", "default_cache_path", "make_key",
@@ -97,21 +100,51 @@ class AutotuneCache:
         try:
             with open(self.path) as f:
                 data = json.load(f)
-            if isinstance(data, dict):
-                self._entries = {k: v for k, v in data.items()
-                                 if isinstance(v, dict)}
-        except (OSError, ValueError):
+        except OSError:
+            self._entries = {}  # cold cache: no file yet (or unreadable)
+            return
+        except ValueError:
+            # Corrupt JSON (e.g. a torn write from a pre-atomic-rename
+            # version, or external truncation): recover to empty rather
+            # than fail the run, and count it so operators can see it.
             self._entries = {}
+            _metrics.inc("autotune.cache.corrupt_recovered")
+            return
+        if isinstance(data, dict):
+            self._entries = {k: v for k, v in data.items()
+                             if isinstance(v, dict)}
+        else:
+            self._entries = {}
+            _metrics.inc("autotune.cache.corrupt_recovered")
+            return
+        _metrics.inc("autotune.cache.loads")
 
     def save(self) -> None:
-        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._entries, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        """Atomically persist: write a *uniquely named* temp file in the
+        destination directory, then ``os.replace``.  A fixed temp name
+        would let two concurrent savers interleave (one renames the
+        other's half-written file); mkstemp gives each writer its own."""
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            dir=d, prefix=os.path.basename(self.path) + ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._entries, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        _metrics.inc("autotune.cache.writes")
 
     def get(self, key: str) -> dict | None:
-        return self._entries.get(key)
+        entry = self._entries.get(key)
+        _metrics.inc("autotune.cache.hits" if entry is not None
+                     else "autotune.cache.misses")
+        return entry
 
     def put(self, key: str, entry: dict) -> None:
         self._entries[key] = entry
@@ -201,7 +234,12 @@ def autotune_gemm(
             y = dispatch(x, c, bm=bm, bn=bn, bk=bk, use_pallas=use_pallas)
             return y[0] if isinstance(y, tuple) else y
 
-        return _time_us(call, reps=reps)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("autotune.probe",
+                             {"kind": kind, "cfg": cfg, "key": key})
+        with sp:
+            return _time_us(call, reps=reps)
 
     cur = tuple(min(128, cap) for cap in caps)
     cur_us = measure(cur)
@@ -295,7 +333,12 @@ def autotune_fused(
                                   bna=bna, use_pallas=use_pallas)
             return y
 
-        return _time_us(call, reps=reps)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("autotune.probe",
+                             {"kind": "fused", "cfg": cfg, "key": key})
+        with sp:
+            return _time_us(call, reps=reps)
 
     cur_us = measure(cur)
     for _ in range(max_steps):
@@ -393,7 +436,12 @@ def autotune_fused3(
                                    bnc=bnc_, bna=bna, use_pallas=use_pallas)
             return y
 
-        return _time_us(call, reps=reps)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("autotune.probe",
+                             {"kind": "fused3", "cfg": cfg, "key": key})
+        with sp:
+            return _time_us(call, reps=reps)
 
     cur_us = measure(cur)
     for _ in range(max_steps):

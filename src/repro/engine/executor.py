@@ -34,7 +34,10 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..kernels import ops
+from ..kernels.ops import _memo_sink
 from ..memo import ArrayMemo
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, make_key)
 from .lower import (lower_coeff_grad, lower_fused_pair, lower_fused_triple,
@@ -60,38 +63,46 @@ _PLAN_CACHE: dict[tuple, GemtPlan] = {}
 _ADJ_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # forward plan key -> adjoint
 _TUNED_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # post-autotune variants
 _SHARDED_FN_CACHE: dict[tuple, tuple] = {}  # plan+cs -> (jitted shard_map, infos)
-_FP_MEMO = ArrayMemo()  # per-array-identity digests: plan-cache hits stay cheap
+# per-array-identity digests: plan-cache hits stay cheap
+_FP_MEMO = ArrayMemo(on_event=_memo_sink("memo.fingerprint."))
 
 # Host-side proof that backward passes actually lower through the engine —
 # incremented while the VJP body runs in Python, never from plan metadata.
 # "kernel" counts SR-GEMM / block-ESOP / fused launches, "einsum" the
 # planned fallback stages; the coeff_* split covers the three coefficient
-# cotangents' rank-k updates.
-_GRAD_STATS = {
-    "backward_calls": 0,
-    "kernel_stages": 0,
-    "einsum_stages": 0,
-    "coeff_kernel": 0,
-    "coeff_einsum": 0,
-    "fused_launches": 0,
-}
+# cotangents' rank-k updates.  The counters live in the *current* metrics
+# registry under the ``grad.`` namespace (``obs.session()`` scoping
+# applies); ``grad_stats``/``reset_grad_stats`` are kept as thin shims.
+_GRAD_KEYS = (
+    "backward_calls",
+    "kernel_stages",
+    "einsum_stages",
+    "coeff_kernel",
+    "coeff_einsum",
+    "fused_launches",
+)
 
 
 def grad_stats() -> dict:
-    """Engine-wide backward-pass dispatch counters (see ``_GRAD_STATS``).
+    """Engine-wide backward-pass dispatch counters (``grad.*`` namespace).
 
     Counted when the VJP's Python body runs: once per eager backward
     call, but only once per *compilation* under ``jax.jit`` (cached
     executions never re-enter Python).  The counters prove what the
     backward lowers to — kernel vs einsum dispatch — not how many jitted
     steps executed; count steps at the training loop if needed.
+
+    Shim over the current :class:`repro.obs.MetricsRegistry` — prefer
+    ``obs.get_registry().snapshot()`` for new code.
     """
-    return dict(_GRAD_STATS)
+    reg = _metrics.get_registry()
+    return {k: reg.value("grad." + k) for k in _GRAD_KEYS}
 
 
 def reset_grad_stats() -> None:
-    for k in _GRAD_STATS:
-        _GRAD_STATS[k] = 0
+    """Zero the ``grad.*`` counters in the current registry (shim —
+    prefer ``obs.get_registry().reset("grad.")``)."""
+    _metrics.get_registry().reset("grad.")
 
 
 def _fingerprint(c: jnp.ndarray) -> str:
@@ -169,12 +180,22 @@ def plan_gemt3(
     )
     plan = _PLAN_CACHE.get(key)
     if plan is None:
-        plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
-                          esop_threshold=esop_threshold,
-                          block_sizes=block_sizes, fuse=fuse,
-                          vmem_budget=vmem_budget, mesh=mesh, axes=axes,
-                          batch_axis=batch_axis)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("plan", {"shape": tuple(x_shape), "fuse": fuse,
+                                      "vmem_budget": vmem_budget})
+        with sp:
+            plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
+                              esop_threshold=esop_threshold,
+                              block_sizes=block_sizes, fuse=fuse,
+                              vmem_budget=vmem_budget, mesh=mesh, axes=axes,
+                              batch_axis=batch_axis)
         _PLAN_CACHE[key] = plan
+        _metrics.inc("plan.builds")
+        if plan.events:
+            _metrics.inc("plan.fusion_degradations", len(plan.events))
+    else:
+        _metrics.inc("plan.cache_hits")
     return plan
 
 
@@ -277,33 +298,63 @@ def execute_with_info(
     ``info["hbm_bytes_moved"]`` / ``"hbm_bytes_staged"`` expose the modeled
     traffic of the executed vs. the all-staged schedule.
     """
-    cs = {1: c1, 2: c2, 3: c3}
-    y = x
-    stage_infos = []
-    i = 0
-    while i < len(plan.stages):
-        if plan.fused3 is not None and i == 0:
-            ft = plan.fused3
-            y, finfo = lower_fused_triple(y, cs[ft.mode_a], cs[ft.mode_b],
-                                          cs[ft.mode_c], ft,
-                                          use_pallas=use_pallas)
-            stage_infos.append(finfo)
-            i += 3
-            continue
-        if plan.fused is not None and i == plan.fused.first:
-            fp = plan.fused
-            y, finfo = lower_fused_pair(y, cs[fp.mode_a], cs[fp.mode_b], fp,
-                                        use_pallas=use_pallas)
-            stage_infos.append(finfo)
-            i += 2
-            continue
-        st = plan.stages[i]
-        y, sinfo = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
-        stage_infos.append(sinfo)
-        i += 1
-    if out is not None:
-        y = out + y
-    return y, _assemble_info(plan, stage_infos)
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span("execute", {"order": plan.order,
+                                     "backends": plan.backends,
+                                     "macs": plan.macs,
+                                     "hbm_bytes_moved": plan.hbm_bytes_moved,
+                                     "shape": tuple(x.shape),
+                                     "key": plan.key})
+    with sp:
+        cs = {1: c1, 2: c2, 3: c3}
+        y = x
+        stage_infos = []
+        i = 0
+        while i < len(plan.stages):
+            if plan.fused3 is not None and i == 0:
+                ft = plan.fused3
+                y, finfo = lower_fused_triple(y, cs[ft.mode_a], cs[ft.mode_b],
+                                              cs[ft.mode_c], ft,
+                                              use_pallas=use_pallas)
+                stage_infos.append(finfo)
+                i += 3
+                continue
+            if plan.fused is not None and i == plan.fused.first:
+                fp = plan.fused
+                y, finfo = lower_fused_pair(y, cs[fp.mode_a], cs[fp.mode_b],
+                                            fp, use_pallas=use_pallas)
+                stage_infos.append(finfo)
+                i += 2
+                continue
+            st = plan.stages[i]
+            y, sinfo = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
+            stage_infos.append(sinfo)
+            i += 1
+        if out is not None:
+            y = out + y
+        info = _assemble_info(plan, stage_infos)
+    _record_execution(info)
+    return y, info
+
+
+def _record_execution(info: dict) -> None:
+    """Mirror one execution's ``info`` accounting into the current
+    metrics registry (``engine.*`` namespace) — the counter totals stay
+    in exact parity with summing the per-call ``info`` fields."""
+    reg = _metrics.get_registry()
+    reg.inc("engine.executions")
+    reg.inc("engine.macs", info["macs"])
+    reg.inc("engine.hbm_bytes_moved", info["hbm_bytes_moved"])
+    reg.inc("engine.hbm_bytes_staged", info["hbm_bytes_staged"])
+    reg.inc("engine.collective_bytes", info["collective_bytes"])
+    for si in info["stages"]:
+        backend = si.get("backend")
+        if backend == "fused":
+            reg.inc("engine.fused3_launches"
+                    if len(si.get("modes", ())) == 3
+                    else "engine.fused_launches")
+        reg.inc(f"engine.stage.{backend}")
 
 
 def _assemble_info(plan: GemtPlan, stage_infos: list[dict]) -> dict:
@@ -348,6 +399,9 @@ def _assemble_info(plan: GemtPlan, stage_infos: list[dict]) -> dict:
         # Bounded ESOP-schedule memo accounting (LRU; see kernels.ops) —
         # serve telemetry uses this to prove the host-side cache behaves.
         "esop_memo": ops.esop_memo_stats(),
+        # Planner events (fusion degradations) replayed from the plan —
+        # present on cache hits too, so serving sees why a tier demoted.
+        "events": list(plan.events),
     }
 
 
@@ -468,9 +522,18 @@ def execute_sharded_with_info(
         hit = [fn, stage_infos, None]  # assembled info filled post-trace
         _SHARDED_FN_CACHE[key] = hit
     fn, stage_infos, info = hit
-    y = fn(x, c1, c2, c3)
-    if out is not None:
-        y = out + y
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span("execute.sharded",
+                         {"order": plan.order, "backends": plan.backends,
+                          "axes": tuple(str(a) for a in plan.axes),
+                          "macs": plan.macs,
+                          "collective_bytes": plan.collective_bytes,
+                          "shape": tuple(x.shape), "key": plan.key})
+    with sp:
+        y = fn(x, c1, c2, c3)
+        if out is not None:
+            y = out + y
     if info is None:
         # stage_infos is static trace-time accounting, identical for every
         # call of this program — assemble once, not per request (the
@@ -479,6 +542,7 @@ def execute_sharded_with_info(
         hit[2] = info
     info = dict(info)
     info["esop_memo"] = ops.esop_memo_stats()  # live, not cache-frozen
+    _record_execution(info)
     return y, info
 
 
@@ -528,9 +592,15 @@ def _tuned_plan(plan: GemtPlan, cs: dict[int, jnp.ndarray], batch: int,
             _fingerprint(cs[1]), _fingerprint(cs[2]), _fingerprint(cs[3]))
     tuned = _TUNED_PLAN_CACHE.get(tkey)
     if tuned is None:
-        tuned = _autotuned_plan(plan, cs, batch, cache, use_pallas,
-                                vmem_budget=vmem_budget, x_dtype=x_dtype)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("autotune.plan",
+                             {"key": plan.key, "batch": batch})
+        with sp:
+            tuned = _autotuned_plan(plan, cs, batch, cache, use_pallas,
+                                    vmem_budget=vmem_budget, x_dtype=x_dtype)
         _TUNED_PLAN_CACHE[tkey] = tuned
+        _metrics.inc("plan.tuned_builds")
     return tuned
 
 
@@ -543,11 +613,17 @@ def _adjoint_plan(plan: GemtPlan, g_shape, g_dtype,
            _fingerprint(cts[1]), _fingerprint(cts[2]), _fingerprint(cts[3]))
     adj = _ADJ_PLAN_CACHE.get(key)
     if adj is None:
-        adj = derive_adjoint_plan(plan, g_shape, g_dtype, cts[1], cts[2],
-                                  cts[3], esop_threshold=esop_threshold,
-                                  block_sizes=block_sizes, fuse=fuse,
-                                  vmem_budget=vmem_budget, mesh=mesh)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("plan.adjoint",
+                             {"key": plan.key, "shape": tuple(g_shape)})
+        with sp:
+            adj = derive_adjoint_plan(plan, g_shape, g_dtype, cts[1], cts[2],
+                                      cts[3], esop_threshold=esop_threshold,
+                                      block_sizes=block_sizes, fuse=fuse,
+                                      vmem_budget=vmem_budget, mesh=mesh)
         _ADJ_PLAN_CACHE[key] = adj
+        _metrics.inc("plan.adjoint_builds")
     return adj
 
 
@@ -599,29 +675,53 @@ def _execute_vjp(plan: GemtPlan, adj: GemtPlan, x, cs: dict, cts: dict, g,
     ys = [x]
     y = x
     for st in plan.stages[:-1]:
-        y, si = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span(f"grad.recompute:m{st.mode}",
+                             {"mode": st.mode, "backend": st.backend,
+                              "macs": st.macs})
+        with sp:
+            y, si = lower_stage(y, cs[st.mode], st, use_pallas=use_pallas)
         si["kind"] = "grad_recompute"
         infos.append(si)
         ys.append(y)
 
     gs = [g]
     if _adjoint_fused_dx_wins(adj, g.shape, g.dtype):
-        dx, ainfo = execute_with_info(adj, g, cts[1], cts[2], cts[3],
-                                      use_pallas=use_pallas)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("grad.x:fused", {"order": adj.order})
+        with sp:
+            dx, ainfo = execute_with_info(adj, g, cts[1], cts[2], cts[3],
+                                          use_pallas=use_pallas)
         for si in ainfo["stages"]:
             si = dict(si)
             si["kind"] = "grad_x"
             infos.append(si)
         gi = g
         for st in adj.stages[:-1]:
-            gi, si = lower_stage(gi, cts[st.mode], st, use_pallas=use_pallas)
+            sp = _trace.NULL_SPAN
+            if _trace.enabled():
+                sp = _trace.span(f"grad.chain:m{st.mode}",
+                                 {"mode": st.mode, "backend": st.backend,
+                                  "macs": st.macs})
+            with sp:
+                gi, si = lower_stage(gi, cts[st.mode], st,
+                                     use_pallas=use_pallas)
             si["kind"] = "grad_chain"
             infos.append(si)
             gs.append(gi)
     else:
         gi = g
         for st in adj.stages:
-            gi, si = lower_stage(gi, cts[st.mode], st, use_pallas=use_pallas)
+            sp = _trace.NULL_SPAN
+            if _trace.enabled():
+                sp = _trace.span(f"grad.x:m{st.mode}",
+                                 {"mode": st.mode, "backend": st.backend,
+                                  "macs": st.macs})
+            with sp:
+                gi, si = lower_stage(gi, cts[st.mode], st,
+                                     use_pallas=use_pallas)
             si["kind"] = "grad_x"
             infos.append(si)
             gs.append(gi)
@@ -629,8 +729,12 @@ def _execute_vjp(plan: GemtPlan, adj: GemtPlan, x, cs: dict, cts: dict, g,
 
     dcs = {}
     for i, mode in enumerate(plan.order):
-        dc, ci = lower_coeff_grad(ys[i], gs[2 - i], mode,
-                                  use_pallas=use_pallas)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span(f"grad.coeff:m{mode}", {"mode": mode})
+        with sp:
+            dc, ci = lower_coeff_grad(ys[i], gs[2 - i], mode,
+                                      use_pallas=use_pallas)
         infos.append(ci)
         dcs[mode] = dc
     return dx, dcs, infos
@@ -789,31 +893,39 @@ def _vjp_backward(plan: GemtPlan, mesh, x, c1, c2, c3, g, *, use_pallas,
                   autotune, autotune_cache):
     """The custom-VJP backward: re-enters the engine and returns the four
     cotangents ``(dx, dc1, dc2, dc3)``."""
-    cs = {1: c1, 2: c2, 3: c3}
-    cts = {m: _transposed(cs[m]) for m in (1, 2, 3)}
-    adj = _adjoint_plan(plan, g.shape, g.dtype, cts,
-                        esop_threshold=esop_threshold,
-                        block_sizes=block_sizes, fuse=fuse,
-                        vmem_budget=vmem_budget, mesh=mesh)
-    if autotune and not _is_traced(c1, c2, c3):
-        batch = ((int(g.shape[0]) if g.ndim == 4 else 1)
-                 // max(adj.batch_shards, 1))
-        adj = _tuned_plan(adj, cts, batch, autotune_cache, use_pallas,
-                          vmem_budget, g.dtype)
-    sharded = mesh is not None and (
-        any(a is not None for a in plan.axes) or plan.batch_axis is not None)
-    if sharded:
-        dx, dcs, infos = _execute_vjp_sharded(plan, adj, mesh, x, cs, cts, g,
-                                              use_pallas)
-    else:
-        dx, dcs, infos = _execute_vjp(plan, adj, x, cs, cts, g, use_pallas)
-    _GRAD_STATS["backward_calls"] += 1
-    for k, v in _count_grad_dispatch(infos).items():
-        _GRAD_STATS[k] += v
-    return (_match_cotangent(dx, x),
-            _match_cotangent(dcs[1], c1),
-            _match_cotangent(dcs[2], c2),
-            _match_cotangent(dcs[3], c3))
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span("vjp.backward",
+                         {"key": plan.key, "shape": tuple(g.shape),
+                          "sharded": mesh is not None})
+    with sp:
+        cs = {1: c1, 2: c2, 3: c3}
+        cts = {m: _transposed(cs[m]) for m in (1, 2, 3)}
+        adj = _adjoint_plan(plan, g.shape, g.dtype, cts,
+                            esop_threshold=esop_threshold,
+                            block_sizes=block_sizes, fuse=fuse,
+                            vmem_budget=vmem_budget, mesh=mesh)
+        if autotune and not _is_traced(c1, c2, c3):
+            batch = ((int(g.shape[0]) if g.ndim == 4 else 1)
+                     // max(adj.batch_shards, 1))
+            adj = _tuned_plan(adj, cts, batch, autotune_cache, use_pallas,
+                              vmem_budget, g.dtype)
+        sharded = mesh is not None and (
+            any(a is not None for a in plan.axes)
+            or plan.batch_axis is not None)
+        if sharded:
+            dx, dcs, infos = _execute_vjp_sharded(plan, adj, mesh, x, cs,
+                                                  cts, g, use_pallas)
+        else:
+            dx, dcs, infos = _execute_vjp(plan, adj, x, cs, cts, g,
+                                          use_pallas)
+        _metrics.inc("grad.backward_calls")
+        for k, v in _count_grad_dispatch(infos).items():
+            _metrics.inc("grad." + k, v)
+        return (_match_cotangent(dx, x),
+                _match_cotangent(dcs[1], c1),
+                _match_cotangent(dcs[2], c2),
+                _match_cotangent(dcs[3], c3))
 
 
 def _grad_info_fields(plan: GemtPlan, adj: GemtPlan, g_shape, g_dtype) -> dict:

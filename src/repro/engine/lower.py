@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..core import gemt as _gemt
 from ..kernels import ops
+from ..obs import trace as _trace
 from .plan import FusedPairPlan, FusedTriplePlan, StagePlan
 
 __all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair",
@@ -89,25 +90,31 @@ def lower_stage(
     distributed executor computes it host-side before entering the
     ``shard_map`` body, where ``c`` is a tracer.
     """
-    if stage.backend == "einsum":
-        rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
-        info = {"mode": stage.mode, "backend": "einsum", "rows": int(rows),
-                "macs": stage.macs}
-        return _einsum_stage(x, c, stage.mode), info
-    x2d, lead = mode_unfold(x, stage.mode)
-    info: dict = {"mode": stage.mode, "backend": stage.backend,
-                  "rows": int(x2d.shape[0]), "macs": stage.macs}
-    if stage.backend == "esop":
-        y2d, esop_info = ops.esop_gemm(x2d, c, bm=stage.bm, bn=stage.bn,
-                                       bk=stage.bk, use_pallas=use_pallas,
-                                       plan=esop_plan)
-        info.update(esop_info)
-    elif stage.backend == "sr_gemm":
-        y2d = ops.sr_gemm(x2d, c, bm=stage.bm, bn=stage.bn, bk=stage.bk,
-                          use_pallas=use_pallas)
-    else:
-        raise ValueError(f"unknown backend {stage.backend!r}")
-    return mode_fold(y2d, lead, stage.mode), info
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span(f"stage:m{stage.mode}:{stage.backend}",
+                         {"mode": stage.mode, "backend": stage.backend,
+                          "macs": stage.macs, "shape": tuple(x.shape)})
+    with sp:
+        if stage.backend == "einsum":
+            rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
+            info = {"mode": stage.mode, "backend": "einsum",
+                    "rows": int(rows), "macs": stage.macs}
+            return _einsum_stage(x, c, stage.mode), info
+        x2d, lead = mode_unfold(x, stage.mode)
+        info: dict = {"mode": stage.mode, "backend": stage.backend,
+                      "rows": int(x2d.shape[0]), "macs": stage.macs}
+        if stage.backend == "esop":
+            y2d, esop_info = ops.esop_gemm(x2d, c, bm=stage.bm, bn=stage.bn,
+                                           bk=stage.bk, use_pallas=use_pallas,
+                                           plan=esop_plan)
+            info.update(esop_info)
+        elif stage.backend == "sr_gemm":
+            y2d = ops.sr_gemm(x2d, c, bm=stage.bm, bn=stage.bn, bk=stage.bk,
+                              use_pallas=use_pallas)
+        else:
+            raise ValueError(f"unknown backend {stage.backend!r}")
+        return mode_fold(y2d, lead, stage.mode), info
 
 
 def lower_sharded_stage(
@@ -129,36 +136,50 @@ def lower_sharded_stage(
     ``K_s / shards`` chunk in place.  The tensor never moves; only partial
     sums do (paper §5's stationary-tensor invariant).
     """
-    names = stage.axis if isinstance(stage.axis, tuple) else (stage.axis,)
-    idx = jnp.zeros((), jnp.int32)
-    for name in names:  # row-major linear index over the (possibly tuple) axis
-        idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
-    c_rows = jax.lax.dynamic_slice_in_dim(c, idx * stage.n, stage.n, 0)
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():  # trace-time inside shard_map: structure is exact
+        sp = _trace.span(f"stage:m{stage.mode}:{stage.backend}:sharded",
+                         {"mode": stage.mode, "backend": stage.backend,
+                          "macs": stage.macs, "axis": str(stage.axis),
+                          "shards": stage.shards,
+                          "collective_bytes": stage.collective_bytes})
+    with sp:
+        names = stage.axis if isinstance(stage.axis, tuple) else (stage.axis,)
+        idx = jnp.zeros((), jnp.int32)
+        for name in names:  # row-major linear index over the (tuple) axis
+            idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
+        c_rows = jax.lax.dynamic_slice_in_dim(c, idx * stage.n, stage.n, 0)
 
-    rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
-    info: dict = {"mode": stage.mode, "backend": stage.backend,
-                  "rows": int(rows), "macs": stage.macs,
-                  "axis": stage.axis, "shards": stage.shards,
-                  "collective_bytes": stage.collective_bytes}
-    if stage.backend == "einsum":
-        partial = _einsum_stage(x, c_rows, stage.mode)
-    elif stage.backend == "sr_gemm":
-        x2d, lead = mode_unfold(x, stage.mode)
-        y2d = ops.sr_gemm(x2d, c_rows, bm=stage.bm, bn=stage.bn, bk=stage.bk,
-                          use_pallas=use_pallas)
-        partial = mode_fold(y2d, lead, stage.mode)
-    else:
-        # The planner never assigns esop here: the row slice is selected by
-        # axis_index at run time, so its zero structure is device-dependent
-        # and the host-side block schedule cannot exist.
-        raise ValueError(
-            f"backend {stage.backend!r} cannot run a sharded-mode stage")
-    # partial holds the full K_s extent as a partial sum
-    ax = partial.ndim - 3 + (stage.mode - 1)
-    moved = jnp.moveaxis(partial, ax, 0)
-    combined = jax.lax.psum_scatter(moved, names, scatter_dimension=0,
-                                    tiled=True)
-    return jnp.moveaxis(combined, 0, ax), info
+        rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
+        info: dict = {"mode": stage.mode, "backend": stage.backend,
+                      "rows": int(rows), "macs": stage.macs,
+                      "axis": stage.axis, "shards": stage.shards,
+                      "collective_bytes": stage.collective_bytes}
+        if stage.backend == "einsum":
+            partial = _einsum_stage(x, c_rows, stage.mode)
+        elif stage.backend == "sr_gemm":
+            x2d, lead = mode_unfold(x, stage.mode)
+            y2d = ops.sr_gemm(x2d, c_rows, bm=stage.bm, bn=stage.bn,
+                              bk=stage.bk, use_pallas=use_pallas)
+            partial = mode_fold(y2d, lead, stage.mode)
+        else:
+            # The planner never assigns esop here: the row slice is selected
+            # by axis_index at run time, so its zero structure is
+            # device-dependent and the host-side block schedule cannot exist.
+            raise ValueError(
+                f"backend {stage.backend!r} cannot run a sharded-mode stage")
+        # partial holds the full K_s extent as a partial sum
+        ax = partial.ndim - 3 + (stage.mode - 1)
+        moved = jnp.moveaxis(partial, ax, 0)
+        csp = _trace.NULL_SPAN
+        if _trace.enabled():
+            csp = _trace.span("collective:psum_scatter",
+                              {"mode": stage.mode, "axis": str(stage.axis),
+                               "collective_bytes": stage.collective_bytes})
+        with csp:
+            combined = jax.lax.psum_scatter(moved, names,
+                                            scatter_dimension=0, tiled=True)
+        return jnp.moveaxis(combined, 0, ax), info
 
 
 def coeff_grad_backend(rows_total: int, n: int, k: int, dtype) -> str:
@@ -214,12 +235,18 @@ def lower_coeff_grad(
                                      jnp.result_type(a2d.dtype, g2d.dtype))
     info = {"mode": mode, "backend": backend, "kind": "coeff_grad",
             "rows": int(rows), "macs": int(rows) * int(n) * int(k)}
-    if backend == "einsum":
-        dc = jnp.swapaxes(a2d, 0, 1) @ g2d
-    else:
-        dc = ops.sr_gemm(jnp.swapaxes(a2d, 0, 1), g2d,
-                         bm=_pow2_clamp(n), bn=_pow2_clamp(k),
-                         bk=_pow2_clamp(rows), use_pallas=use_pallas)
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span(f"coeff_grad:m{mode}:{backend}",
+                         {"mode": mode, "backend": backend,
+                          "rows": int(rows), "macs": info["macs"]})
+    with sp:
+        if backend == "einsum":
+            dc = jnp.swapaxes(a2d, 0, 1) @ g2d
+        else:
+            dc = ops.sr_gemm(jnp.swapaxes(a2d, 0, 1), g2d,
+                             bm=_pow2_clamp(n), bn=_pow2_clamp(k),
+                             bk=_pow2_clamp(rows), use_pallas=use_pallas)
     return dc, info
 
 
@@ -246,13 +273,22 @@ def lower_fused_pair(
         raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
     axa = x.ndim - 3 + (fp.mode_a - 1)
     axb = x.ndim - 3 + (fp.mode_b - 1)
-    xm = jnp.moveaxis(x, (axb, axa), (-2, -1))
-    lead = xm.shape[:-2]
-    x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
-    y3, kinfo = ops.fused_gemt(x3, ca, cb, bu=fp.bu, bka=fp.bka, bnb=fp.bnb,
-                               bna=fp.bna, use_pallas=use_pallas,
-                               plans=plans)
-    y = jnp.moveaxis(y3.reshape(*lead, fp.ka, fp.kb), (-2, -1), (axa, axb))
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span(f"fused_pair:m{fp.mode_a}{fp.mode_b}",
+                         {"modes": (fp.mode_a, fp.mode_b), "macs": fp.macs,
+                          "vmem_bytes": fp.vmem_bytes,
+                          "hbm_bytes_fused": fp.hbm_bytes_fused,
+                          "shape": tuple(x.shape)})
+    with sp:
+        xm = jnp.moveaxis(x, (axb, axa), (-2, -1))
+        lead = xm.shape[:-2]
+        x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
+        y3, kinfo = ops.fused_gemt(x3, ca, cb, bu=fp.bu, bka=fp.bka,
+                                   bnb=fp.bnb, bna=fp.bna,
+                                   use_pallas=use_pallas, plans=plans)
+        y = jnp.moveaxis(y3.reshape(*lead, fp.ka, fp.kb), (-2, -1),
+                         (axa, axb))
     info: dict = {"modes": (fp.mode_a, fp.mode_b), "backend": "fused",
                   "rows": int(x3.shape[0]), "macs": fp.macs,
                   "vmem_bytes": fp.vmem_bytes,
@@ -290,14 +326,22 @@ def lower_fused_triple(
     axa = off + ft.mode_a - 1
     axb = off + ft.mode_b - 1
     axc = off + ft.mode_c - 1
-    xm = jnp.moveaxis(x, (axc, axb, axa), (-3, -2, -1))
-    lead = xm.shape[:-3]
-    x4 = xm.reshape(-1, *xm.shape[-3:])
-    y4, kinfo = ops.fused3_gemt(x4, ca, cb, cc, bu=ft.bu, bka=ft.bka,
-                                bnb=ft.bnb, bnc=ft.bnc, bna=ft.bna,
-                                use_pallas=use_pallas, plans=plans)
-    y = jnp.moveaxis(y4.reshape(*lead, ft.ka, ft.kb, ft.kc),
-                     (-3, -2, -1), (axa, axb, axc))
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span(f"fused_triple:m{ft.mode_a}{ft.mode_b}{ft.mode_c}",
+                         {"modes": (ft.mode_a, ft.mode_b, ft.mode_c),
+                          "macs": ft.macs, "vmem_bytes": ft.vmem_bytes,
+                          "hbm_bytes_fused": ft.hbm_bytes_fused,
+                          "shape": tuple(x.shape)})
+    with sp:
+        xm = jnp.moveaxis(x, (axc, axb, axa), (-3, -2, -1))
+        lead = xm.shape[:-3]
+        x4 = xm.reshape(-1, *xm.shape[-3:])
+        y4, kinfo = ops.fused3_gemt(x4, ca, cb, cc, bu=ft.bu, bka=ft.bka,
+                                    bnb=ft.bnb, bnc=ft.bnc, bna=ft.bna,
+                                    use_pallas=use_pallas, plans=plans)
+        y = jnp.moveaxis(y4.reshape(*lead, ft.ka, ft.kb, ft.kc),
+                         (-3, -2, -1), (axa, axb, axc))
     info: dict = {"modes": (ft.mode_a, ft.mode_b, ft.mode_c),
                   "backend": "fused", "rows": int(x4.shape[0]),
                   "macs": ft.macs, "vmem_bytes": ft.vmem_bytes,

@@ -261,6 +261,11 @@ class GemtPlan:
     batch_axis: AxisName = None  # mesh axis sharding the leading batch dim
     batch_shards: int = 1
     collective_bytes: int = 0  # modeled per-device ICI bytes (psum_scatters)
+    # Plan-time degradation record: fusion demotions (triple→pair→staged)
+    # forced by the VMEM budget or the byte model, each with the numbers
+    # that forced it.  Replayed as info["events"] on every execution of
+    # this (cached) plan — see docs/observability.md.
+    events: tuple = ()
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -816,6 +821,7 @@ def _plan_fusion3(
     vmem_budget: int,
     force: bool,
     axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
+    events: list | None = None,
 ) -> FusedTriplePlan | None:
     """Evaluate fusing the whole three-stage transform into the megakernel.
 
@@ -846,6 +852,7 @@ def _plan_fusion3(
     staged = plan_hbm_bytes(stages, None, batch, itemsize)
 
     best = None
+    vmem_floors = []  # minimal-tile footprints of VMEM-declined candidates
     for mode_a, mode_b, mode_c in itertools.permutations((1, 2, 3)):
         ca, cb, cc = cs[mode_a], cs[mode_b], cs[mode_c]
         na, ka = ca.shape
@@ -860,7 +867,12 @@ def _plan_fusion3(
                    st_a.bk if st_a.zero_block_frac > 0 else None,
                    None, None))
         if tiles is None:
-            continue  # no tiling keeps both partials on-chip
+            # no tiling keeps both partials on-chip: record the footprint
+            # at the floor tiles (8 everywhere) — the smallest this
+            # assignment could ever need vs what the budget allows
+            vmem_floors.append(fused3_vmem_bytes(
+                8, 8, 8, 8, 8, kb_padded(kb), kb_padded(kc), itemsize))
+            continue
         bu, bka, bnb, bnc, bna, kbp, kcp = tiles
         mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
         mask_b = np.asarray(_padded_block_mask(cb, bnb, kbp))
@@ -885,8 +897,24 @@ def _plan_fusion3(
                             < (best.hbm_bytes_fused, best.macs)):
             best = cand
     if best is None:
+        if events is not None and vmem_floors:
+            events.append({
+                "kind": "fusion_degradation", "from": "triple",
+                "reason": "vmem_budget",
+                "vmem_bytes_min": min(vmem_floors),
+                "vmem_budget": vmem_budget,
+            })
         return None
     if not force and best.hbm_bytes_fused >= staged:
+        if events is not None:
+            events.append({
+                "kind": "fusion_degradation", "from": "triple",
+                "reason": "byte_model",
+                "hbm_bytes_fused": best.hbm_bytes_fused,
+                "hbm_bytes_staged": staged,
+                "vmem_bytes": best.vmem_bytes,
+                "vmem_budget": vmem_budget,
+            })
         return None
     return best
 
@@ -904,6 +932,7 @@ def _plan_fusion(
     force: bool,
     axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
     shards: tuple[int, int, int] = (1, 1, 1),
+    events: list | None = None,
 ) -> FusedPairPlan | None:
     """Evaluate fusing the consecutive pair starting at stage ``first``.
 
@@ -941,6 +970,7 @@ def _plan_fusion(
                                    itemsize)
 
     best = None
+    vmem_floors = []  # minimal-tile footprints of VMEM-declined candidates
     for mode_a, mode_b in (pair, pair[::-1]):
         ca, cb = cs[mode_a], cs[mode_b]
         na, ka = ca.shape
@@ -959,7 +989,11 @@ def _plan_fusion(
                    st_a.bk if sparse_a else None,
                    st_b.bk if st_b.zero_block_frac > 0 else None))
         if tiles is None:
-            continue  # no tiling keeps the resident slab on-chip
+            # no tiling keeps the resident slab on-chip: record the floor
+            # footprint (8-everywhere tiles) vs the budget
+            vmem_floors.append(
+                fused_vmem_bytes(8, 8, 8, 8, kb_padded(kb), itemsize))
+            continue
         bu, bka, bnb, bna, kbp = tiles
         mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
         mask_b = np.asarray(_padded_block_mask(cb, bnb, kbp))
@@ -980,8 +1014,24 @@ def _plan_fusion(
         if best is None or cand.hbm_bytes_fused < best.hbm_bytes_fused:
             best = cand
     if best is None:
+        if events is not None and vmem_floors:
+            events.append({
+                "kind": "fusion_degradation", "from": "pair",
+                "reason": "vmem_budget", "first": first,
+                "vmem_bytes_min": min(vmem_floors),
+                "vmem_budget": vmem_budget,
+            })
         return None
     if not force and best.hbm_bytes_fused >= staged:
+        if events is not None:
+            events.append({
+                "kind": "fusion_degradation", "from": "pair",
+                "reason": "byte_model", "first": first,
+                "hbm_bytes_fused": best.hbm_bytes_fused,
+                "hbm_bytes_staged": staged,
+                "vmem_bytes": best.vmem_bytes,
+                "vmem_budget": vmem_budget,
+            })
         return None
     return best
 
@@ -1141,18 +1191,21 @@ def build_plan(
     isz_raw = jnp.dtype(x_dtype).itemsize
     fused = None
     fused3 = None
+    fusion_events: list[dict] = []  # demotion records, filtered below
     if fuse not in FUSE_MODES:
         raise ValueError(f"fuse must be one of {FUSE_MODES}, got {fuse!r}")
     if fuse in (None, True, "triple"):
         fused3 = _plan_fusion3(chosen, stages, cs, batch=batch,
                                itemsize=isz_raw, vmem_budget=vmem_budget,
-                               force=fuse in (True, "triple"), axes=axes)
+                               force=fuse in (True, "triple"), axes=axes,
+                               events=fusion_events)
     if fuse in (None, True, "pair") and not (fused3 and fuse is True):
         cands = []
         for first in (0, 1):
             fp = _plan_fusion(first, chosen, stages, local, cs, batch=batch,
                               itemsize=isz_raw, vmem_budget=vmem_budget,
-                              force=(fuse is True), axes=axes, shards=shards)
+                              force=(fuse is True), axes=axes, shards=shards,
+                              events=fusion_events)
             if fp is not None:
                 cands.append(fp)
         if cands:  # fuse the pair that saves the most modeled bytes
@@ -1169,7 +1222,25 @@ def build_plan(
                 <= plan_hbm_bytes(stages, fused, batch, isz_raw)):
             fused = None
         else:
+            fusion_events.append({
+                "kind": "fusion_degradation", "from": "triple",
+                "reason": "byte_model_vs_pair",
+                "hbm_bytes_fused": fused3.hbm_bytes_fused,
+                "hbm_bytes_pair_plan": plan_hbm_bytes(stages, fused, batch,
+                                                      isz_raw),
+                "vmem_bytes": fused3.vmem_bytes,
+                "vmem_budget": vmem_budget,
+            })
             fused3 = None
+    # Keep only genuine demotions: an event whose "from" tier still ended
+    # up running (e.g. one pair candidate declined but the other fused, or
+    # the triple engaged after a pair decline) is not a degradation.
+    tier_rank = {"staged": 0, "pair": 1, "triple": 2}
+    final_tier = ("triple" if fused3 is not None
+                  else "pair" if fused is not None else "staged")
+    events = tuple(
+        dict(ev, to=final_tier) for ev in fusion_events
+        if tier_rank[final_tier] < tier_rank[ev["from"]])
 
     out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
     blocks = {s.mode: (s.bk, s.bn) for s in stages}
@@ -1191,4 +1262,5 @@ def build_plan(
                     hbm_bytes_moved=plan_hbm_bytes(stages, fused, batch,
                                                    isz_raw, fused3=fused3),
                     axes=axes, shards=shards, batch_axis=batch_axis,
-                    batch_shards=batch_shards, collective_bytes=coll)
+                    batch_shards=batch_shards, collective_bytes=coll,
+                    events=events)

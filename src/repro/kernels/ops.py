@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from ..memo import ArrayMemo
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from . import ref
 from .attention import flash_attention_pallas
 from .esop_gemm import esop_gemm_pallas, esop_plan
@@ -33,12 +35,24 @@ __all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "fused3_gemt",
 # memo is LRU-bounded (satellite of the differentiable-engine PR); the knob
 # is REPRO_ESOP_MEMO_SIZE (entries, default 256) or set_esop_memo_size().
 _ESOP_MEMO_DEFAULT = int(os.environ.get("REPRO_ESOP_MEMO_SIZE", "256"))
-_ESOP_PLAN_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT)
+
+
+def _memo_sink(prefix: str):
+    """Mirror a memo's hit/miss/evict events into the *current* metrics
+    registry (resolved per event, so ``obs.session()`` scoping applies)."""
+    def sink(event: str) -> None:
+        _metrics.inc(prefix + event)
+    return sink
+
+
+_ESOP_PLAN_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT,
+                            on_event=_memo_sink("memo.esop."))
 # Adjoint reuse: the VJP paths contract against C^T.  Recomputing the
 # transpose per backward call would give it a fresh identity every time and
 # defeat every identity-keyed memo downstream (esop plans, fingerprints,
 # plan caches) — so the transpose itself is memoized on C's identity.
-_TRANSPOSED_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT)
+_TRANSPOSED_MEMO = ArrayMemo(maxsize=_ESOP_MEMO_DEFAULT,
+                             on_event=_memo_sink("memo.transposed."))
 
 
 def esop_memo_stats() -> dict:
@@ -83,18 +97,23 @@ def esop_plan_cached(c: jnp.ndarray, bk: int, bn: int):
     *and* the Pallas path alike.
     """
     def compute():
-        cp = _pad_to(c, (bk, bn))
-        counts, idx, t_steps = esop_plan(cp, bk, bn)
-        dense_blocks = (cp.shape[0] // bk) * (cp.shape[1] // bn)
-        live_blocks = int(counts.sum())
-        stats = {
-            "blocks_dense": dense_blocks,
-            "blocks_live": live_blocks,
-            "fetch_savings": 1.0 - live_blocks / max(dense_blocks, 1),
-            "t_steps": t_steps,
-            "t_steps_dense": cp.shape[0] // bk,
-        }
-        return jnp.asarray(counts), jnp.asarray(idx), t_steps, stats
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():  # memo misses only: the sweep + upload cost
+            sp = _trace.span("esop.plan",
+                             {"shape": tuple(c.shape), "bk": bk, "bn": bn})
+        with sp:
+            cp = _pad_to(c, (bk, bn))
+            counts, idx, t_steps = esop_plan(cp, bk, bn)
+            dense_blocks = (cp.shape[0] // bk) * (cp.shape[1] // bn)
+            live_blocks = int(counts.sum())
+            stats = {
+                "blocks_dense": dense_blocks,
+                "blocks_live": live_blocks,
+                "fetch_savings": 1.0 - live_blocks / max(dense_blocks, 1),
+                "t_steps": t_steps,
+                "t_steps_dense": cp.shape[0] // bk,
+            }
+            return jnp.asarray(counts), jnp.asarray(idx), t_steps, stats
 
     return _ESOP_PLAN_MEMO.get_or_compute(c, (bk, bn), compute)
 

@@ -31,25 +31,38 @@ class ArrayMemo:
 
     ``maxsize=None`` (default) keeps the pre-bound behaviour: unbounded,
     entries only leave when their keyed array is garbage-collected.
+
+    ``on_event`` optionally receives each accounting event name
+    (``"hits"``/``"misses"``/``"evictions"``, matching the ``stats`` keys)
+    as it happens — the hook the observability layer uses to mirror memo
+    behaviour into the current metrics registry without this module
+    importing it.
     """
 
-    def __init__(self, maxsize: int | None = None):
+    def __init__(self, maxsize: int | None = None,
+                 on_event: Callable[[str], None] | None = None):
         if maxsize is not None and maxsize < 1:
             raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
         self._entries: "OrderedDict[tuple, tuple[weakref.ref, Any]]" = (
             OrderedDict())
         self.maxsize = maxsize
+        self.on_event = on_event
         self.stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def _record(self, event: str) -> None:
+        self.stats[event] += 1
+        if self.on_event is not None:
+            self.on_event(event)
 
     def get_or_compute(self, array, extra: Hashable,
                        compute: Callable[[], Any]) -> Any:
         key = (id(array), extra)
         hit = self._entries.get(key)
         if hit is not None and hit[0]() is array:
-            self.stats["hits"] += 1
+            self._record("hits")
             self._entries.move_to_end(key)  # refresh LRU recency
             return hit[1]
-        self.stats["misses"] += 1
+        self._record("misses")
         value = compute()
         try:
             ref = weakref.ref(array,
@@ -73,7 +86,7 @@ class ArrayMemo:
             return
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)  # least recently used
-            self.stats["evictions"] += 1
+            self._record("evictions")
 
     def clear(self) -> None:
         self._entries.clear()

@@ -1,0 +1,4 @@
+"""CLI entry point: ``python -m repro.obs TRACE.json [--json]``."""
+from .export import main
+
+raise SystemExit(main())

@@ -1,0 +1,214 @@
+"""Metrics registry: counters, gauges and latency histograms.
+
+One :class:`MetricsRegistry` holds the engine's quantitative telemetry —
+the numbers the per-call ``info`` dicts used to be the only window into:
+
+* counters — monotonically increasing event/byte/MAC totals
+  (``engine.hbm_bytes_moved``, ``grad.backward_calls``,
+  ``autotune.cache.hits``, ``memo.esop.misses``,
+  ``plan.fusion_degradations``, …);
+* gauges — last-written values;
+* histograms — bounded-window value recorders with percentile summaries
+  (serve per-request latency).
+
+A process-global default registry collects everything; ``obs.session()``
+swaps in a fresh registry (and tracer) for per-session isolation, and
+``reset(prefix)`` zeroes a namespace explicitly.  The legacy process-global
+counters (``repro.engine.grad_stats()``, the ESOP memo stats) are thin
+shims over this registry — see ``docs/observability.md``.
+
+Recording is always on (a counter bump is a dict lookup + integer add);
+only spans have an enabled/disabled switch.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "set_registry",
+    "inc",
+    "observe",
+    "set_gauge",
+]
+
+DEFAULT_WINDOW = 2048
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def reset(self) -> None:
+        self.value = 0.0
+
+
+class Histogram:
+    """Value recorder: exact count/sum/min/max over everything recorded,
+    percentiles over a bounded most-recent window (``window`` values) so a
+    long-lived serve session cannot grow host memory without bound."""
+
+    __slots__ = ("values", "count", "total", "min", "max")
+
+    def __init__(self, window: int = DEFAULT_WINDOW):
+        self.values: deque[float] = deque(maxlen=int(window))
+        self.count = 0
+        self.total = 0.0
+        self.min: float | None = None
+        self.max: float | None = None
+
+    def record(self, v) -> None:
+        v = float(v)
+        self.values.append(v)
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile (0–100, nearest-rank) of the retained window."""
+        if not self.values:
+            return 0.0
+        vals = sorted(self.values)
+        idx = int(round(q / 100.0 * (len(vals) - 1)))
+        return vals[min(max(idx, 0), len(vals) - 1)]
+
+    def summary(self) -> dict:
+        if not self.count:
+            return {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        return {
+            "count": self.count,
+            "mean": self.total / self.count,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+    def reset(self) -> None:
+        self.values.clear()
+        self.count = 0
+        self.total = 0.0
+        self.min = None
+        self.max = None
+
+
+class MetricsRegistry:
+    """Named counters/gauges/histograms with dotted-namespace reset."""
+
+    def __init__(self, name: str = "default"):
+        self.name = name
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    # -- access (create on first use) --------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, window: int = DEFAULT_WINDOW) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(window)
+        return h
+
+    # -- recording ----------------------------------------------------
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counter(name).inc(n)
+
+    def set_gauge(self, name: str, v) -> None:
+        self.gauge(name).set(v)
+
+    def observe(self, name: str, v) -> None:
+        self.histogram(name).record(v)
+
+    # -- reading ------------------------------------------------------
+    def value(self, name: str) -> int:
+        """Current value of counter ``name`` (0 if never incremented)."""
+        c = self._counters.get(name)
+        return 0 if c is None else c.value
+
+    def snapshot(self) -> dict:
+        """Flat ``{name: number}`` view: counters and gauges verbatim,
+        histograms expanded to ``name.count`` / ``.mean`` / ``.p50`` /
+        ``.p90`` / ``.p99`` / ``.max`` entries."""
+        out: dict = {}
+        for name, c in sorted(self._counters.items()):
+            out[name] = c.value
+        for name, g in sorted(self._gauges.items()):
+            out[name] = g.value
+        for name, h in sorted(self._histograms.items()):
+            s = h.summary()
+            for stat in ("count", "mean", "p50", "p90", "p99", "max"):
+                out[f"{name}.{stat}"] = s[stat]
+        return out
+
+    def reset(self, prefix: str | None = None) -> None:
+        """Zero every metric whose name starts with ``prefix`` (all of
+        them when None).  Metrics stay registered — readers holding a
+        Counter/Histogram object keep a live reference."""
+        for group in (self._counters, self._gauges, self._histograms):
+            for name, metric in group.items():
+                if prefix is None or name.startswith(prefix):
+                    metric.reset()
+
+
+_REGISTRY = MetricsRegistry("global")
+
+
+def get_registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def set_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Install ``registry`` as process-current; returns the previous one
+    (``obs.session()`` uses this for per-session isolation)."""
+    global _REGISTRY
+    prev = _REGISTRY
+    _REGISTRY = registry
+    return prev
+
+
+def inc(name: str, n: int = 1) -> None:
+    _REGISTRY.inc(name, n)
+
+
+def observe(name: str, v) -> None:
+    _REGISTRY.observe(name, v)
+
+
+def set_gauge(name: str, v) -> None:
+    _REGISTRY.set_gauge(name, v)

@@ -1,0 +1,229 @@
+"""Structured spans: nested, timed, attribute-carrying trace records.
+
+The engine's host-side control flow (plan, autotune probe, lower, each
+kernel/einsum stage launch, the psum_scatter collective, the VJP's
+recompute + adjoint chain, serve requests) is instrumented with spans —
+``with span("stage:m2:sr_gemm", {...}):`` regions that record wall time,
+nesting and structured attributes (plan key, fuse tier, backend, modeled
+MACs/HBM/collective bytes, shapes).  Completed spans land in a per-tracer
+ring buffer (:class:`Tracer`, bounded by ``capacity``) and export to
+Chrome-trace JSON via :mod:`repro.obs.export`.
+
+Timing semantics under jax: spans measure the *host* — dispatch plus any
+compile — not device execution (jax dispatch is asynchronous).  Inside a
+``jit``/``shard_map`` body the span records trace time, once per
+compilation; the span *structure* (which stages lower, in what nesting)
+is exact either way.
+
+Disabled-mode cost is the contract: :func:`span` returns the preallocated
+:data:`NULL_SPAN` singleton without allocating, and hot call sites guard
+attribute construction behind :func:`enabled`, so an untraced serve hot
+path pays one global load + attribute check per site.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import threading
+import time
+from collections import deque
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "NULL_SPAN",
+    "get_tracer",
+    "set_tracer",
+    "enabled",
+    "enable",
+    "disable",
+    "span",
+    "spans",
+    "clear",
+    "traced",
+    "DEFAULT_CAPACITY",
+]
+
+DEFAULT_CAPACITY = 8192
+
+
+class _NullSpan:
+    """Preallocated no-op span: the disabled-mode zero-allocation fast path.
+
+    ``span()`` returns this singleton whenever tracing is off; entering,
+    exiting and ``set()`` do nothing, and it is falsy so call sites can
+    skip attribute construction with ``if sp:``.
+    """
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+    def __bool__(self):
+        return False
+
+    def __repr__(self):
+        return "<NULL_SPAN>"
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """One timed region.  Use as a context manager; ``set(**attrs)`` adds
+    attributes (before, during or right after the region — the record is
+    buffered at ``__exit__``)."""
+
+    __slots__ = ("name", "attrs", "span_id", "parent_id", "depth",
+                 "t0_ns", "dur_ns", "_tracer")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict | None):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = dict(attrs) if attrs else {}
+        self.span_id = next(tracer._ids)
+        self.parent_id = 0
+        self.depth = 0
+        self.t0_ns = 0
+        self.dur_ns = 0
+
+    def set(self, **attrs):
+        self.attrs.update(attrs)
+        return self
+
+    def __enter__(self):
+        stack = self._tracer._stack()
+        if stack:
+            self.parent_id = stack[-1].span_id
+            self.depth = len(stack)
+        stack.append(self)
+        self.t0_ns = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.dur_ns = time.perf_counter_ns() - self.t0_ns
+        stack = self._tracer._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        self._tracer._buf.append(self)
+        return False
+
+    def __repr__(self):
+        return (f"Span({self.name!r}, {self.dur_ns / 1e3:.1f}us, "
+                f"id={self.span_id}, parent={self.parent_id})")
+
+
+class Tracer:
+    """Ring-buffered span recorder (one per session; thread-safe nesting
+    via a per-thread active-span stack)."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        self.enabled = False
+        self._buf: deque[Span] = deque(maxlen=int(capacity))
+        self._ids = itertools.count(1)
+        self._tls = threading.local()
+
+    @property
+    def capacity(self) -> int:
+        return self._buf.maxlen
+
+    def _stack(self) -> list:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
+
+    def start(self, name: str, attrs: dict | None = None) -> Span:
+        return Span(self, name, attrs)
+
+    def spans(self) -> list[Span]:
+        return list(self._buf)
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+    def resize(self, capacity: int) -> None:
+        if capacity != self._buf.maxlen:
+            self._buf = deque(self._buf, maxlen=int(capacity))
+
+
+_TRACER = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _TRACER
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    """Install ``tracer`` as the process-current tracer; returns the
+    previous one (``obs.session()`` uses this for per-session isolation)."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = tracer
+    return prev
+
+
+def enabled() -> bool:
+    """Cheap guard for hot call sites: build span names/attrs only when
+    this returns True, else use :data:`NULL_SPAN` directly."""
+    return _TRACER.enabled
+
+
+def span(name: str, attrs: dict | None = None):
+    """Start a span on the current tracer; :data:`NULL_SPAN` when disabled.
+
+    ``attrs`` may be a zero-arg callable, evaluated only when tracing is
+    enabled (lazy construction for attribute dicts that cost something).
+    """
+    t = _TRACER
+    if not t.enabled:
+        return NULL_SPAN
+    if callable(attrs):
+        attrs = attrs()
+    return Span(t, name, attrs)
+
+
+def enable(capacity: int | None = None) -> Tracer:
+    if capacity is not None:
+        _TRACER.resize(capacity)
+    _TRACER.enabled = True
+    return _TRACER
+
+
+def disable() -> None:
+    _TRACER.enabled = False
+
+
+def spans() -> list[Span]:
+    return _TRACER.spans()
+
+
+def clear() -> None:
+    _TRACER.clear()
+
+
+def traced(name: str | None = None, **static_attrs):
+    """Decorator form: ``@traced("plan")`` wraps calls in a span.  When
+    tracing is disabled the wrapper adds one attribute check per call."""
+
+    def deco(fn):
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            t = _TRACER
+            if not t.enabled:
+                return fn(*args, **kwargs)
+            with Span(t, label, static_attrs):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco

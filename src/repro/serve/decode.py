@@ -4,6 +4,7 @@ sampling loop with a simple continuous-batching slot manager.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -11,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ShardCtx, apply_decode, apply_prefill, init_cache
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 
 
 def build_prefill_step(cfg, ctx: ShardCtx):
@@ -111,6 +114,9 @@ class DxtServeSession:
         self.hbm_bytes_staged = 0  # what the all-staged schedule would move
         self.collective_bytes = 0  # modeled ICI traffic (0 without a mesh)
         self.last_info: dict | None = None
+        # Per-request host dispatch latency (µs): wall time of transform()
+        # — under jit this is dispatch time, not device execution time.
+        self._latency_us = _metrics.Histogram()
 
     def _coeffs_for(self, dims: tuple[int, int, int],
                     inverse: bool | None = None) -> tuple:
@@ -145,12 +151,22 @@ class DxtServeSession:
         # Plans and tunings are memoized inside the engine (keyed on shape,
         # dtype, and the coefficient matrices' identity/zero structure —
         # the session's _coeffs dict keeps those identities stable).
-        y, info = gemt3_planned(x, c1, c2, c3, fuse=self.fuse,
-                                autotune=self.autotune,
-                                autotune_cache=self.autotune_cache,
-                                use_pallas=self.use_pallas, with_info=True,
-                                mesh=self.mesh, axes=self.axes,
-                                batch_axis=self.batch_axis)
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("serve.request",
+                             {"kind": self.kind, "dims": dims,
+                              "batch": int(x.shape[0])})
+        t0 = time.perf_counter_ns()
+        with sp:
+            y, info = gemt3_planned(x, c1, c2, c3, fuse=self.fuse,
+                                    autotune=self.autotune,
+                                    autotune_cache=self.autotune_cache,
+                                    use_pallas=self.use_pallas,
+                                    with_info=True, mesh=self.mesh,
+                                    axes=self.axes,
+                                    batch_axis=self.batch_axis)
+        self._latency_us.record((time.perf_counter_ns() - t0) / 1e3)
+        _metrics.inc("serve.requests")
         self.requests_served += int(x.shape[0])
         if info.get("fused"):
             self.fused_served += int(x.shape[0])
@@ -161,6 +177,21 @@ class DxtServeSession:
         self.collective_bytes += int(info.get("collective_bytes", 0))
         self.last_info = info
         return y
+
+    def stats(self) -> dict:
+        """Session telemetry: the served counters plus a per-request host
+        dispatch latency summary (``latency_us``: count/mean/min/max and
+        p50/p90/p99 over the most recent window — see
+        :class:`repro.obs.Histogram`)."""
+        return {
+            "requests_served": self.requests_served,
+            "fused_served": self.fused_served,
+            "fused3_served": self.fused3_served,
+            "hbm_bytes_moved": self.hbm_bytes_moved,
+            "hbm_bytes_staged": self.hbm_bytes_staged,
+            "collective_bytes": self.collective_bytes,
+            "latency_us": self._latency_us.summary(),
+        }
 
 
 class SlotManager:

@@ -15,7 +15,7 @@ import sys
 
 import pytest
 
-from benchmarks.run import _parse_derived, check_regression
+from benchmarks.run import _parse_derived, check_regression, compare_counters
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -84,6 +84,58 @@ def test_check_regression_cli_flags_a_planted_regression(tmp_path):
         capture_output=True, text=True, cwd=REPO, env=env, timeout=600)
     assert r.returncode == 1, r.stdout + r.stderr
     assert "hbm_vs_staged" in r.stdout
+
+
+@pytest.mark.bench_smoke
+@pytest.mark.obs_smoke
+def test_counter_carrying_artifact_roundtrip(tmp_path):
+    """New-format artifacts embed a registry counter snapshot: deterministic
+    keys must reproduce exactly, timing keys get the band, cache-behaviour
+    keys are exempt (warm-process hit/miss splits are not a contract)."""
+    rows = [("B1_fake", 10.0, "steps=15;macs=1800")]
+    counters = {"engine.executions": 3, "engine.macs": 5400,
+                "plan.builds": 1, "plan.cache_hits": 2,
+                "memo.esop.misses": 7, "serve.latency_us.p50": 100.0}
+    artifact = tmp_path / "BENCH_counters.json"
+    artifact.write_text(json.dumps(
+        {"rows": [{"name": "B1_fake", "us_per_call": 10.0,
+                   "derived": "steps=15;macs=1800"}],
+         "counters": counters}))
+
+    # identical fresh run: clean
+    assert not check_regression(str(artifact), tol_time=1.0, rows=rows,
+                                counters=dict(counters))
+
+    # cache-behaviour keys may drift freely (warm plan/memo caches)
+    drifted = dict(counters, **{"plan.builds": 0, "plan.cache_hits": 3,
+                                "memo.esop.misses": 0})
+    assert not check_regression(str(artifact), tol_time=1.0, rows=rows,
+                                counters=drifted)
+
+    # timing keys: in-band passes, out-of-band fails
+    in_band = dict(counters, **{"serve.latency_us.p50": 150.0})
+    assert not check_regression(str(artifact), tol_time=1.0, rows=rows,
+                                counters=in_band)
+    out_band = dict(counters, **{"serve.latency_us.p50": 500.0})
+    fails = check_regression(str(artifact), tol_time=1.0, rows=rows,
+                             counters=out_band)
+    assert any("serve.latency_us.p50" in f for f in fails)
+
+    # deterministic keys must reproduce exactly
+    doctored = dict(counters, **{"engine.macs": 9999})
+    fails = check_regression(str(artifact), tol_time=1.0, rows=rows,
+                             counters=doctored)
+    assert any("engine.macs" in f for f in fails)
+    fails = compare_counters(counters, {k: v for k, v in counters.items()
+                                        if k != "engine.executions"})
+    assert any("disappeared" in f for f in fails)
+
+    # legacy bare-list artifacts still check clean (no counters to compare)
+    legacy = tmp_path / "BENCH_legacy.json"
+    legacy.write_text(json.dumps(
+        [{"name": "B1_fake", "us_per_call": 10.0,
+          "derived": "steps=15;macs=1800"}]))
+    assert not check_regression(str(legacy), tol_time=1.0, rows=rows)
 
 
 @pytest.mark.grad_smoke

@@ -1,0 +1,448 @@
+"""Tier-2 obs_smoke: spans, metrics registry, exporters, engine telemetry.
+
+Covers the observability contract end to end: span nesting/timing, the
+disabled-mode zero-allocation fast path, Chrome-trace JSON schema
+round-trip, serve latency percentiles, counter parity with the legacy
+per-call ``info`` fields on the staged/pair/triple/sharded/backward
+paths, fusion-degradation events, autotune-cache atomicity + corrupt
+recovery, and the ``grad_stats`` shim.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.engine import (AutotuneCache, clear_plan_cache, gemt3_planned,
+                          grad_stats, reset_grad_stats)
+from repro.obs import trace as trace_mod
+
+pytestmark = pytest.mark.obs_smoke
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.random(shape, dtype=np.float32))
+
+
+def _problem(n=16):
+    return (_rand(n, n, n), _rand(n, n), _rand(n, n), _rand(n, n))
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_timing():
+    with obs.session() as s:
+        with obs.span("outer", {"k": 1}):
+            time.sleep(0.002)
+            with obs.span("inner"):
+                time.sleep(0.001)
+        spans = s.tracer.spans()
+    assert [sp.name for sp in spans] == ["inner", "outer"]  # exit order
+    inner, outer = spans
+    assert outer.parent_id == 0 and inner.parent_id == outer.span_id
+    assert inner.depth == 1 and outer.depth == 0
+    assert outer.dur_ns >= inner.dur_ns > 0
+    assert outer.t0_ns <= inner.t0_ns
+    assert outer.attrs == {"k": 1}
+
+
+def test_span_set_adds_attributes():
+    with obs.session() as s:
+        with obs.span("a") as sp:
+            sp.set(extra=42)
+        assert s.tracer.spans()[0].attrs["extra"] == 42
+
+
+def test_traced_decorator():
+    @obs.traced("decorated", kind="test")
+    def f(v):
+        return v + 1
+
+    with obs.session() as s:
+        assert f(1) == 2
+        (sp,) = s.tracer.spans()
+    assert sp.name == "decorated" and sp.attrs == {"kind": "test"}
+    # disabled: plain call, nothing recorded
+    with obs.session(enable_tracing=False) as s:
+        assert f(1) == 2
+        assert s.tracer.spans() == []
+
+
+def test_ring_buffer_bounds_spans():
+    with obs.session(capacity=4) as s:
+        for i in range(10):
+            with obs.span(f"s{i}"):
+                pass
+        names = [sp.name for sp in s.tracer.spans()]
+    assert names == ["s6", "s7", "s8", "s9"]
+
+
+def test_disabled_mode_is_zero_allocation():
+    """span() must return the preallocated NULL_SPAN singleton (identity,
+    not a fresh object) and never evaluate a callable attrs thunk."""
+    with obs.session(enable_tracing=False) as s:
+        assert trace_mod.span("x") is trace_mod.NULL_SPAN
+        assert not trace_mod.enabled()
+        called = []
+        sp = trace_mod.span("x", lambda: called.append(1) or {})
+        assert sp is trace_mod.NULL_SPAN and called == []
+        with sp:
+            pass
+        assert s.tracer.spans() == []
+    # enabled: the thunk *is* evaluated
+    with obs.session() as s:
+        with trace_mod.span("x", lambda: {"lazy": True}):
+            pass
+        assert s.tracer.spans()[0].attrs == {"lazy": True}
+
+
+def test_untraced_engine_run_records_no_spans():
+    x, c1, c2, c3 = _problem()
+    with obs.session(enable_tracing=False) as s:
+        gemt3_planned(x, c1, c2, c3)
+        assert s.tracer.spans() == []
+        # metrics are always on, even with tracing off
+        assert s.registry.value("engine.executions") == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counters_gauges_histograms():
+    r = obs.MetricsRegistry("t")
+    r.inc("a.b", 3)
+    r.inc("a.b")
+    r.set_gauge("g", 2.5)
+    for v in range(1, 101):
+        r.observe("h", float(v))
+    assert r.value("a.b") == 4
+    assert r.value("nonexistent") == 0
+    snap = r.snapshot()
+    assert snap["a.b"] == 4 and snap["g"] == 2.5
+    assert snap["h.count"] == 100
+    h = r.histogram("h")
+    assert h.percentile(50) <= h.percentile(90) <= h.percentile(99)
+    assert h.summary()["max"] == 100.0
+    r.reset("a.")
+    assert r.value("a.b") == 0 and r.gauge("g").value == 2.5
+
+
+def test_session_isolation():
+    obs.inc("iso.test", 5)
+    before = obs.get_registry().value("iso.test")
+    with obs.session() as s:
+        obs.inc("iso.test", 100)
+        assert s.registry.value("iso.test") == 100
+    assert obs.get_registry().value("iso.test") == before
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_schema_roundtrip(tmp_path):
+    path = str(tmp_path / "trace.json")
+    with obs.session() as s:
+        with obs.span("root", {"shape": (4, 4, 4)}):
+            with obs.span("child", {"macs": 64}):
+                pass
+        obs.inc("engine.macs", 64)
+        doc = obs.write_chrome_trace(path, s.tracer.spans(), s.registry)
+    loaded = json.loads(open(path).read())
+    assert loaded == json.loads(json.dumps(doc))
+    events = loaded["traceEvents"]
+    assert len(events) == 2
+    for ev in events:
+        assert ev["ph"] == "X"
+        assert set(ev) >= {"name", "cat", "ts", "dur", "pid", "tid", "args"}
+        assert ev["dur"] >= 0 and ev["ts"] >= 0
+    by_name = {e["name"]: e for e in events}
+    assert (by_name["child"]["args"]["parent_id"]
+            == by_name["root"]["args"]["span_id"])
+    assert by_name["root"]["args"]["shape"] == [4, 4, 4]
+    assert loaded["counters"]["engine.macs"] == 64
+    assert loaded["displayTimeUnit"] == "ms"
+
+
+def test_report_and_cli(tmp_path, capsys):
+    from repro.obs.export import main as obs_main
+
+    path = str(tmp_path / "trace.json")
+    with obs.session() as s:
+        with obs.span("stage:m1:sr_gemm"):
+            pass
+        obs.write_chrome_trace(path, s.tracer.spans(), s.registry)
+        text = obs.format_report(s.tracer.spans(), s.registry)
+    assert "stage:m1:sr_gemm" in text
+    assert obs_main([path]) == 0
+    assert "stage:m1:sr_gemm" in capsys.readouterr().out
+    assert obs_main([path, "--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["spans"]["stage:m1:sr_gemm"]["count"] == 1
+
+
+def test_span_tree_lines_indent_children():
+    with obs.session() as s:
+        with obs.span("parent"):
+            with obs.span("kid"):
+                pass
+        lines = obs.span_tree_lines(s.tracer.spans())
+    assert lines[0].startswith("parent") and lines[1].startswith("  kid")
+
+
+# ---------------------------------------------------------------------------
+# engine counter parity with legacy info fields
+# ---------------------------------------------------------------------------
+
+
+def _run_and_compare(fuse, n=24):
+    x, c1, c2, c3 = _problem(n)
+    clear_plan_cache()
+    with obs.session() as s:
+        infos = []
+        for _ in range(3):
+            _, info = gemt3_planned(x, c1, c2, c3, with_info=True, fuse=fuse)
+            infos.append(info)
+        reg = s.registry
+        assert reg.value("engine.executions") == len(infos)
+        assert reg.value("engine.macs") == sum(i["macs"] for i in infos)
+        assert (reg.value("engine.hbm_bytes_moved")
+                == sum(i["hbm_bytes_moved"] for i in infos))
+        assert (reg.value("engine.hbm_bytes_staged")
+                == sum(i["hbm_bytes_staged"] for i in infos))
+        fused = sum(1 for i in infos
+                    if i["fused"] and len(i["fused"]["modes"]) == 2)
+        fused3 = sum(1 for i in infos
+                     if i["fused"] and len(i["fused"]["modes"]) == 3)
+        assert reg.value("engine.fused_launches") == fused
+        assert reg.value("engine.fused3_launches") == fused3
+        assert reg.value("plan.builds") == 1
+        assert reg.value("plan.cache_hits") == len(infos) - 1
+    return infos[0]
+
+
+def test_counter_parity_staged():
+    info = _run_and_compare(fuse=False)
+    assert info["fused"] is None
+
+
+def test_counter_parity_pair():
+    info = _run_and_compare(fuse="pair")
+    assert info["fused"] and len(info["fused"]["modes"]) == 2
+
+
+def test_counter_parity_triple():
+    info = _run_and_compare(fuse="triple")
+    assert info["fused"] and len(info["fused"]["modes"]) == 3
+
+
+def test_counter_parity_sharded():
+    from jax.sharding import Mesh
+
+    x, c1, c2, c3 = _problem(16)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+    clear_plan_cache()
+    with obs.session() as s:
+        _, info = gemt3_planned(x, c1, c2, c3, with_info=True, mesh=mesh,
+                                axes=("d", None, None))
+        reg = s.registry
+        assert reg.value("engine.executions") == 1
+        assert reg.value("engine.macs") == info["macs"]
+        assert (reg.value("engine.collective_bytes")
+                == info["collective_bytes"])
+
+
+def test_counter_parity_backward():
+    x, c1, c2, c3 = _problem(16)
+    clear_plan_cache()
+    with obs.session() as s:
+        loss = lambda *a: jnp.sum(jnp.abs(
+            gemt3_planned(*a, differentiable=True)))
+        jax.grad(loss, argnums=(0, 1, 2, 3))(x, c1, c2, c3)
+        gs = grad_stats()
+        assert gs["backward_calls"] == 1
+        # shim parity: grad_stats() IS the grad.* namespace
+        for k, v in gs.items():
+            assert s.registry.value("grad." + k) == v
+        total = (gs["kernel_stages"] + gs["einsum_stages"]
+                 + gs["coeff_kernel"] + gs["coeff_einsum"])
+        assert total >= 8  # 2 recompute + >=3 chain + 3 coeff
+        reset_grad_stats()
+        assert grad_stats()["backward_calls"] == 0
+        assert s.registry.value("grad.backward_calls") == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: traced forward+backward exports a Chrome trace whose span
+# tree attributes all 8 backward launches by name
+# ---------------------------------------------------------------------------
+
+
+def test_traced_backward_exports_eight_attributed_launches(tmp_path):
+    x, c1, c2, c3 = _problem(16)
+    clear_plan_cache()
+    path = str(tmp_path / "bwd_trace.json")
+    with obs.session() as s:
+        # fuse=False pins the adjoint to the staged chain: exactly
+        # 2 recompute + 3 grad.x + 3 grad.coeff = 8 attributed launches
+        loss = lambda *a: jnp.sum(jnp.abs(
+            gemt3_planned(*a, differentiable=True, fuse=False)))
+        jax.grad(loss, argnums=(0, 1, 2, 3))(x, c1, c2, c3)
+        doc = obs.write_chrome_trace(path, s.tracer.spans(), s.registry)
+    loaded = json.loads(open(path).read())
+    assert loaded == json.loads(json.dumps(doc))
+    events = loaded["traceEvents"]
+    bwd = [e for e in events if e["name"].startswith("grad.")]
+    assert len(bwd) == 8, [e["name"] for e in bwd]
+    names = sorted(e["name"] for e in bwd)
+    assert sum(1 for n in names if n.startswith("grad.recompute:m")) == 2
+    assert sum(1 for n in names if n.startswith("grad.x:")) == 3
+    assert sum(1 for n in names if n.startswith("grad.coeff:m")) == 3
+    # every backward launch nests under the vjp.backward parent
+    vjp = [e for e in events if e["name"] == "vjp.backward"]
+    assert len(vjp) == 1
+    vjp_id = vjp[0]["args"]["span_id"]
+    for e in bwd:
+        assert e["args"]["parent_id"] == vjp_id
+    # each grad.* wrapper contains its lowered kernel/einsum stage span
+    stage_like = [e for e in events
+                  if e["name"].startswith(("stage:", "coeff_grad:",
+                                           "fused_pair:", "fused_triple:"))]
+    bwd_ids = {e["args"]["span_id"] for e in bwd}
+    assert sum(1 for e in stage_like
+               if e["args"]["parent_id"] in bwd_ids) >= 8
+    assert loaded["counters"]["grad.backward_calls"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fusion-degradation events
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_degradation_events_surface_in_info():
+    x, c1, c2, c3 = _problem(32)
+    clear_plan_cache()
+    with obs.session() as s:
+        _, info = gemt3_planned(x, c1, c2, c3, with_info=True,
+                                vmem_budget=20_000)
+        events = info["events"]
+        assert events, "tiny budget must demote fusion and record why"
+        for ev in events:
+            assert ev["kind"] == "fusion_degradation"
+            assert ev["from"] in ("triple", "pair")
+            assert ev["to"] == "staged"
+            assert ev["reason"] == "vmem_budget"
+            assert ev["vmem_bytes_min"] > ev["vmem_budget"] == 20_000
+        assert (s.registry.value("plan.fusion_degradations") == len(events))
+        # cache hit replays the same events without re-counting
+        _, info2 = gemt3_planned(x, c1, c2, c3, with_info=True,
+                                 vmem_budget=20_000)
+        assert info2["events"] == events
+        assert (s.registry.value("plan.fusion_degradations") == len(events))
+
+
+def test_no_degradation_events_on_roomy_budget():
+    x, c1, c2, c3 = _problem(16)
+    clear_plan_cache()
+    _, info = gemt3_planned(x, c1, c2, c3, with_info=True, fuse=False)
+    # forced staging is a user choice, not a degradation
+    assert info["events"] == []
+
+
+# ---------------------------------------------------------------------------
+# serve latency histogram
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stats_latency_percentiles():
+    from repro.serve.decode import DxtServeSession
+
+    sess = DxtServeSession(kind="dct")
+    batch = RNG.random((2, 8, 8, 8)).astype(np.float32)
+    with obs.session() as s:
+        for _ in range(5):
+            sess.transform(batch)
+        stats = sess.stats()
+        assert s.registry.value("serve.requests") == 5
+    assert stats["requests_served"] == 10  # 5 calls x batch 2
+    lat = stats["latency_us"]
+    assert lat["count"] == 5
+    assert lat["min"] > 0
+    assert lat["min"] <= lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"]
+    assert lat["mean"] > 0
+    assert stats["hbm_bytes_moved"] > 0
+
+
+# ---------------------------------------------------------------------------
+# autotune cache: atomic writes + corrupt recovery
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_atomic_save_roundtrip(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    with obs.session() as s:
+        cache = AutotuneCache(path)
+        cache.put("k1", {"bm": 64, "bn": 64, "bk": 64, "us": 1.0})
+        cache.save()
+        assert s.registry.value("autotune.cache.writes") == 1
+        # no temp litter, and the file is complete valid JSON
+        assert [f for f in os.listdir(tmp_path)] == ["autotune.json"]
+        assert json.loads(open(path).read())["k1"]["bm"] == 64
+        fresh = AutotuneCache(path)
+        assert fresh.get("k1")["bn"] == 64
+        assert s.registry.value("autotune.cache.loads") == 1
+        assert s.registry.value("autotune.cache.hits") == 1
+        assert fresh.get("absent") is None
+        assert s.registry.value("autotune.cache.misses") == 1
+
+
+def test_autotune_cache_corrupt_recovery(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    with open(path, "w") as f:
+        f.write('{"torn": ')  # torn write
+    with obs.session() as s:
+        cache = AutotuneCache(path)
+        assert len(cache) == 0
+        assert s.registry.value("autotune.cache.corrupt_recovered") == 1
+        # non-dict JSON counts as corrupt too
+        with open(path, "w") as f:
+            json.dump([1, 2, 3], f)
+        cache.load()
+        assert len(cache) == 0
+        assert s.registry.value("autotune.cache.corrupt_recovered") == 2
+        # recovery is silent for runs: put/save works over the rubble
+        cache.put("k", {"bm": 8, "bn": 8, "bk": 8})
+        cache.save()
+        assert AutotuneCache(path).get("k")["bm"] == 8
+
+
+# ---------------------------------------------------------------------------
+# memo counters
+# ---------------------------------------------------------------------------
+
+
+def test_esop_memo_counters_mirror_stats():
+    from repro.kernels import ops
+
+    c = jnp.asarray((RNG.random((16, 16)) > 0.5).astype(np.float32))
+    with obs.session() as s:
+        before = ops.esop_memo_stats()
+        ops.esop_plan_cached(c, 8, 8)   # miss
+        ops.esop_plan_cached(c, 8, 8)   # hit
+        after = ops.esop_memo_stats()
+        assert (s.registry.value("memo.esop.misses")
+                == after["misses"] - before["misses"] == 1)
+        assert (s.registry.value("memo.esop.hits")
+                == after["hits"] - before["hits"] == 1)
