@@ -301,3 +301,66 @@ def bench_grad_engine(rows):
             f"bwd_einsum_stages={gs['einsum_stages'] + gs['coeff_einsum']};"
             f"engine_backward={gs['backward_calls'] == 1};"
             f"max_abs_err={err:.1e}"))
+
+
+def bench_serve_resilience(rows):
+    """S1: sustained serving throughput through a scripted fault schedule.
+
+    A :class:`ResilientDxtServer` serves the same request stream twice —
+    fault-free, then under a scripted chaos schedule (two kernel
+    exceptions on the fused tier, which open the auto breaker and demote
+    to the pair tier, then one VMEM-pressure fault, which tightens the
+    budget and replans).  The row records the throughput cost of recovery
+    (wall-clock keys, banded) next to the exact recovery accounting
+    (deterministic keys: the lifecycle is deterministic by construction —
+    scripted faults, hashed jitter, injected no-op sleep — so every
+    retry/degradation/completion count must reproduce run-to-run).
+    Delay/timeout faults are deliberately absent: their outcome depends
+    on host speed and would make the artifact flaky.
+    """
+    import contextlib
+
+    from repro.runtime.faults import FaultSpec, inject_faults
+    from repro.serve import DxtServeSession, ResilientDxtServer
+
+    rng = np.random.default_rng(23)
+    n, b, n_requests = 16, 4, 24
+    reqs = [jnp.asarray(rng.normal(size=(b, n, n, n)).astype(np.float32))
+            for _ in range(n_requests)]
+
+    def run(faulted):
+        server = ResilientDxtServer(session=DxtServeSession(),
+                                    breaker_threshold=2,
+                                    breaker_cooldown_s=1e9,
+                                    sleep=lambda s: None)
+        jax.block_until_ready(server.transform(reqs[0]))  # warm: compile
+        specs = (FaultSpec(match="fused_*", kind="exception", times=2),
+                 FaultSpec(match="fused_*", kind="vmem_pressure", times=1))
+        ctx = inject_faults(*specs) if faulted else contextlib.nullcontext()
+        t0 = time.perf_counter()
+        with ctx:
+            outs = [server.transform(r) for r in reqs]
+        jax.block_until_ready(outs)
+        dt = time.perf_counter() - t0
+        return server, outs, dt
+
+    _, clean_out, clean_s = run(False)
+    server, chaos_out, chaos_s = run(True)
+    err = max(float(jnp.max(jnp.abs(a - c)))
+              for a, c in zip(chaos_out, clean_out))
+    st = server.stats()
+    rows.append((
+        "S1_serve_resilience_chaos", chaos_s / n_requests * 1e6,
+        f"clean_us_per_req={clean_s / n_requests * 1e6:.1f};"
+        f"clean_vs_chaos_speedup={clean_s / max(chaos_s, 1e-9):.2f}x;"
+        f"requests={n_requests};"
+        f"admitted={st['admitted']};"
+        f"completed={st['completed']};"
+        f"failed={st['failed']};"
+        f"shed={st['shed']};"
+        f"retries={st['retries']};"
+        f"degraded={st['degraded']};"
+        f"remeshes={st['remeshes']};"
+        f"breaker_auto={st['breakers']['auto']};"
+        f"vmem_budget_tightened={st['vmem_budget'] is not None};"
+        f"max_abs_err={err:.1e}"))

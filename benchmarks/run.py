@@ -47,6 +47,7 @@ def _benches():
         bench_engine.bench_fused_gemt,
         bench_engine.bench_fused3_gemt,
         bench_engine.bench_grad_engine,
+        bench_engine.bench_serve_resilience,
     ]
 
 
@@ -66,6 +67,7 @@ _ROW_PREFIXES = {
     "E3": "bench_planned_vs_einsum", "E4": "bench_autotune_cache",
     "F1": "bench_fused_gemt", "F2": "bench_fused3_gemt",
     "G1": "bench_grad_engine",
+    "S1": "bench_serve_resilience",
 }
 
 # Derived keys whose values are wall-clock measurements (or booleans derived

@@ -20,7 +20,48 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as _metrics
+
 _SEP = "."
+
+
+class SaveHandle:
+    """Join-able handle for a checkpoint write.
+
+    ``save(blocking=False)`` returns one wrapping the writer thread;
+    :meth:`join` waits for the write and **re-raises** any error the
+    thread hit — an async save failure must surface at the join point
+    (``run_resilient`` drains handles before restoring), not vanish in a
+    daemon thread.  Blocking saves return an already-done handle so
+    callers can treat both modes uniformly.  ``os.fspath(handle)`` /
+    ``str(handle)`` give the checkpoint path for compatibility with the
+    old str return.
+    """
+
+    def __init__(self, path: str, thread: threading.Thread | None = None):
+        self.path = path
+        self._thread = thread
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+    def join(self, timeout: float | None = None) -> str:
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"checkpoint write still running: {self.path}")
+            self._thread = None
+        if self._error is not None:
+            raise self._error
+        return self.path
+
+    def __fspath__(self) -> str:
+        return self.path
+
+    def __str__(self) -> str:
+        return self.path
 
 
 def _flatten(tree, prefix=""):
@@ -45,8 +86,13 @@ def _unflatten(flat: dict):
 
 
 def save(ckpt_dir: str, step: int, state, keep: int = 3,
-         blocking: bool = True) -> str:
-    """Write state to <ckpt_dir>/step_<N> atomically; prune old steps."""
+         blocking: bool = True) -> SaveHandle:
+    """Write state to <ckpt_dir>/step_<N> atomically; prune old steps.
+
+    Returns a :class:`SaveHandle`; with ``blocking=False`` the write runs
+    on a thread and errors surface on ``handle.join()`` (plus the
+    ``ckpt.save.error`` counter) instead of dying with the daemon thread.
+    """
     flat = _flatten(state)
     host = {k: np.asarray(v) for k, v in flat.items()}
 
@@ -72,12 +118,24 @@ def save(ckpt_dir: str, step: int, state, keep: int = 3,
         os.rename(tmp, final)
         _prune(ckpt_dir, keep)
 
+    handle = SaveHandle(os.path.join(ckpt_dir, f"step_{step:08d}"))
+
+    def _run():
+        try:
+            _write()
+            _metrics.inc("ckpt.save.ok")
+        except BaseException as e:
+            handle._error = e
+            _metrics.inc("ckpt.save.error")
+            if blocking:
+                raise
+
     if blocking:
-        _write()
+        _run()
     else:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-    return os.path.join(ckpt_dir, f"step_{step:08d}")
+        handle._thread = threading.Thread(target=_run, daemon=True)
+        handle._thread.start()
+    return handle
 
 
 def _prune(ckpt_dir: str, keep: int):

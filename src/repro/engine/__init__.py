@@ -31,8 +31,8 @@ from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        make_fused_key, make_key)
 from .executor import (clear_plan_cache, default_mode_axes, execute,
                        execute_sharded_with_info, execute_with_info,
-                       gemt3_planned, grad_stats, plan_cache_info,
-                       plan_gemt3, reset_grad_stats)
+                       gemt3_planned, grad_stats, invalidate_plans,
+                       plan_cache_info, plan_gemt3, reset_grad_stats)
 
 __all__ = [
     "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FUSE_MODES",
@@ -51,5 +51,6 @@ __all__ = [
     "default_cache_path", "make_fused3_key", "make_fused_key", "make_key",
     "clear_plan_cache", "default_mode_axes", "execute",
     "execute_sharded_with_info", "execute_with_info", "gemt3_planned",
-    "grad_stats", "plan_cache_info", "plan_gemt3", "reset_grad_stats",
+    "grad_stats", "invalidate_plans", "plan_cache_info", "plan_gemt3",
+    "reset_grad_stats",
 ]

@@ -54,6 +54,7 @@ __all__ = [
     "execute_sharded_with_info",
     "gemt3_planned",
     "clear_plan_cache",
+    "invalidate_plans",
     "plan_cache_info",
     "grad_stats",
     "reset_grad_stats",
@@ -133,6 +134,59 @@ def clear_plan_cache() -> None:
     _SHARDED_FN_CACHE.clear()
 
 
+def _mesh_desc(mesh, axes=None, batch_axis=None):
+    """Hashable mesh description used in plan-cache keys (shape + axis
+    assignment; device identity is not part of the key)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.shape.items()), normalize_axes(axes), batch_axis)
+
+
+def invalidate_plans(predicate=None, *, mesh=None) -> int:
+    """Selectively drop cached plans; returns how many primary entries fell.
+
+    ``predicate(key, plan)`` picks ``_PLAN_CACHE`` entries (the cache key's
+    last element is the ``_mesh_desc`` — ``None`` for single-device plans);
+    ``mesh=`` is the common case and matches every plan built for a mesh of
+    that shape.  Derived state — adjoint plans, autotuned variants, and the
+    jitted ``shard_map`` programs whose closures capture the old mesh's
+    devices — is dropped alongside its forward plan, so a re-meshed session
+    (``docs/serving.md``) replans from scratch instead of dispatching onto
+    dead devices.  With no arguments everything goes (a counted
+    :func:`clear_plan_cache`).  Counted in ``plan.invalidations``.
+    """
+    if predicate is None and mesh is None:
+        n = len(_PLAN_CACHE)
+        clear_plan_cache()
+        _metrics.inc("plan.invalidations", n)
+        return n
+    if predicate is None:
+        shape = tuple(mesh.shape.items())
+
+        def predicate(key, plan):
+            return key[-1] is not None and key[-1][0] == shape
+
+    dropped: set[str] = set()
+    n = 0
+    for key, plan in list(_PLAN_CACHE.items()):
+        if predicate(key, plan):
+            del _PLAN_CACHE[key]
+            dropped.add(plan.key)
+            n += 1
+    if dropped:
+        for key, adj in list(_ADJ_PLAN_CACHE.items()):
+            if key[0] in dropped:
+                del _ADJ_PLAN_CACHE[key]
+                dropped.add(adj.key)  # sharded VJP fns key off the adjoint
+        for cache in (_TUNED_PLAN_CACHE, _SHARDED_FN_CACHE):
+            for key in list(cache):
+                pk = key[1] if key[0] in ("vjp_prefix", "vjp_chain") else key[0]
+                if pk in dropped:
+                    del cache[key]
+    _metrics.inc("plan.invalidations", n)
+    return n
+
+
 def plan_cache_info() -> dict:
     return {"entries": len(_PLAN_CACHE), "adjoint": len(_ADJ_PLAN_CACHE),
             "tuned": len(_TUNED_PLAN_CACHE),
@@ -164,19 +218,18 @@ def plan_gemt3(
     block_sizes: tuple[int, int, int] | None = None,
     fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    backend: str | None = None,  # pin every stage ("einsum"); None = auto
     mesh=None,
     axes=None,
     batch_axis=None,
 ) -> GemtPlan:
     """Build (or fetch) the plan for this problem; memoized in-process."""
-    mesh_desc = (None if mesh is None else
-                 (tuple(mesh.shape.items()), normalize_axes(axes),
-                  batch_axis))
     key = (
         tuple(x_shape), jnp.dtype(x_dtype).name,
         tuple(order) if order is not None else None,
-        esop_threshold, block_sizes, fuse, vmem_budget,
-        _fingerprint(c1), _fingerprint(c2), _fingerprint(c3), mesh_desc,
+        esop_threshold, block_sizes, fuse, vmem_budget, backend,
+        _fingerprint(c1), _fingerprint(c2), _fingerprint(c3),
+        _mesh_desc(mesh, axes, batch_axis),
     )
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -188,7 +241,8 @@ def plan_gemt3(
             plan = build_plan(x_shape, x_dtype, c1, c2, c3, order=order,
                               esop_threshold=esop_threshold,
                               block_sizes=block_sizes, fuse=fuse,
-                              vmem_budget=vmem_budget, mesh=mesh, axes=axes,
+                              vmem_budget=vmem_budget, backend=backend,
+                              mesh=mesh, axes=axes,
                               batch_axis=batch_axis)
         _PLAN_CACHE[key] = plan
         _metrics.inc("plan.builds")
@@ -1048,6 +1102,7 @@ def gemt3_planned(
     block_sizes: tuple[int, int, int] | None = None,
     fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    backend: str | None = None,  # pin every stage ("einsum"); None = auto
     autotune: bool = False,
     autotune_cache: AutotuneCache | str | None = None,
     use_pallas: bool | None = None,
@@ -1068,8 +1123,11 @@ def gemt3_planned(
     both intermediates resident in VMEM) when its tiles fit
     ``vmem_budget``, degrading to the fused pair and then to staged;
     ``"pair"``/``"triple"`` pin the depth, ``True`` forces the deepest
-    feasible, ``False`` stages everything.  ``x`` may carry a leading
-    batch axis.
+    feasible, ``False`` stages everything.  ``backend="einsum"`` pins
+    every stage to the XLA einsum lowering (fusion off, no Pallas) — the
+    serving runtime's last-resort degradation tier (``docs/serving.md``);
+    the pin applies to the forward plan (the adjoint keeps its own backend
+    choice).  ``x`` may carry a leading batch axis.
 
     ``mesh`` switches to the TriADA distributed schedule: ``x`` (global)
     is sharded per ``axes`` (default: mesh axes in order, e.g.
@@ -1096,8 +1154,8 @@ def gemt3_planned(
         axes = default_mode_axes(mesh, batch_axis)
     plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
                       esop_threshold=esop_threshold, block_sizes=block_sizes,
-                      fuse=fuse, vmem_budget=vmem_budget, mesh=mesh,
-                      axes=axes, batch_axis=batch_axis)
+                      fuse=fuse, vmem_budget=vmem_budget, backend=backend,
+                      mesh=mesh, axes=axes, batch_axis=batch_axis)
     if autotune and not _is_traced(c1, c2, c3):
         # Per-shard batch: the tuned tiles must see the local GEMM rows.
         batch = ((int(x.shape[0]) if x.ndim == 4 else 1)

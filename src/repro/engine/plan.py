@@ -1095,6 +1095,7 @@ def build_plan(
     block_sizes: tuple[int, int, int] | None = None,
     fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    backend: str | None = None,  # pin every stage ("einsum"); None = auto
     mesh=None,
     axes=None,
     batch_axis: AxisName = None,
@@ -1116,6 +1117,12 @@ def build_plan(
     either way — they are the staged fallback the executor uses outside
     the fused stages.
 
+    ``backend="einsum"`` pins every stage to the XLA einsum lowering and
+    disables fusion — the bottom rung of the serving runtime's degradation
+    ladder (``docs/serving.md``): no Pallas kernels, no fused VMEM
+    residency, maximally conservative.  ``None`` (default) keeps the
+    per-stage backend choice with the cost model.
+
     ``mesh``/``axes`` make the plan topology-aware: ``axes[s-1]`` names the
     mesh axis sharding mode ``s`` of the stationary tensor (None = local;
     tuple = a folded multi-axis shard).  ``x_shape`` stays **global**; the
@@ -1124,6 +1131,9 @@ def build_plan(
     must divide its axis size.  ``batch_axis`` optionally shards a leading
     batch dim (data parallelism; no collective, the rows just split).
     """
+    if backend not in (None, "einsum"):
+        raise ValueError(
+            f"backend must be None (auto) or 'einsum', got {backend!r}")
     dims = tuple(int(d) for d in x_shape[-3:])
     if len(x_shape) not in (3, 4):
         raise ValueError(f"x must be 3D or 4D-batched, got shape {x_shape}")
@@ -1194,6 +1204,14 @@ def build_plan(
     fusion_events: list[dict] = []  # demotion records, filtered below
     if fuse not in FUSE_MODES:
         raise ValueError(f"fuse must be one of {FUSE_MODES}, got {fuse!r}")
+    if backend is not None:
+        # Pinned backend: every stage runs it dense (no block skipping) and
+        # fusion is off — the pin exists to take Pallas out of the loop.
+        stages = tuple(dataclasses.replace(s, backend=backend,
+                                           macs_effective=s.macs)
+                       for s in stages)
+        eff = macs
+        fuse = False
     if fuse in (None, True, "triple"):
         fused3 = _plan_fusion3(chosen, stages, cs, batch=batch,
                                itemsize=isz_raw, vmem_budget=vmem_budget,
@@ -1250,6 +1268,8 @@ def build_plan(
         f"bs={block_sizes}", f"fu={fuse}", f"vb={vmem_budget}",
         f"sig={sparsity_signature(cs, blocks)}",
     ]
+    if backend is not None:  # unpinned keys stay byte-identical to PR 1–6
+        key_parts.append(f"be={backend}")
     if mesh is not None:  # single-device keys stay byte-identical to PR 1–2
         key_parts.append(
             f"mesh={tuple(mesh.shape.items())};ax={axes};ba={batch_axis}")

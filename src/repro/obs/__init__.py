@@ -38,12 +38,14 @@ from .export import (chrome_trace, format_report, report_dict,
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry, inc, observe, set_gauge, set_registry)
 from .trace import (NULL_SPAN, Span, Tracer, clear, disable, enable,
-                    enabled, get_tracer, set_tracer, span, spans, traced)
+                    enabled, get_fault_hook, get_tracer, set_fault_hook,
+                    set_tracer, span, spans, traced)
 
 __all__ = [
     # spans
     "Span", "Tracer", "NULL_SPAN", "span", "traced", "enable", "disable",
     "enabled", "spans", "clear", "get_tracer", "set_tracer",
+    "set_fault_hook", "get_fault_hook",
     # metrics
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
     "set_registry", "inc", "observe", "set_gauge",

@@ -19,6 +19,15 @@ Disabled-mode cost is the contract: :func:`span` returns the preallocated
 :data:`NULL_SPAN` singleton without allocating, and hot call sites guard
 attribute construction behind :func:`enabled`, so an untraced serve hot
 path pays one global load + attribute check per site.
+
+Fault hook: the chaos layer (:mod:`repro.runtime.faults`) registers a
+callable via :func:`set_fault_hook` that receives every span *name* at the
+moment the span would start — before any work the span guards.  While a
+hook is installed :func:`enabled` reports True so the guarded call sites
+actually reach :func:`span` (tracing itself may stay off; :func:`span`
+still returns :data:`NULL_SPAN` then).  The hook may raise (injected
+kernel/collective failure) or sleep (injected delay); with no hook
+installed the hot path is unchanged — one extra global load.
 """
 from __future__ import annotations
 
@@ -41,6 +50,8 @@ __all__ = [
     "spans",
     "clear",
     "traced",
+    "set_fault_hook",
+    "get_fault_hook",
     "DEFAULT_CAPACITY",
 ]
 
@@ -156,6 +167,22 @@ class Tracer:
 
 _TRACER = Tracer()
 
+# Chaos hook (see module docstring): callable(name) invoked at span start.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install ``hook(span_name)`` on the span hot path; returns the
+    previous hook (``None`` if none) so injectors can nest/restore."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    return prev
+
+
+def get_fault_hook():
+    return _FAULT_HOOK
+
 
 def get_tracer() -> Tracer:
     return _TRACER
@@ -172,8 +199,10 @@ def set_tracer(tracer: Tracer) -> Tracer:
 
 def enabled() -> bool:
     """Cheap guard for hot call sites: build span names/attrs only when
-    this returns True, else use :data:`NULL_SPAN` directly."""
-    return _TRACER.enabled
+    this returns True, else use :data:`NULL_SPAN` directly.  True whenever
+    a fault hook is installed, so chaos drills reach :func:`span` (and the
+    hook) even with tracing off."""
+    return _TRACER.enabled or _FAULT_HOOK is not None
 
 
 def span(name: str, attrs: dict | None = None):
@@ -181,7 +210,12 @@ def span(name: str, attrs: dict | None = None):
 
     ``attrs`` may be a zero-arg callable, evaluated only when tracing is
     enabled (lazy construction for attribute dicts that cost something).
+    An installed fault hook fires first — it may raise or delay, standing
+    in for the kernel/collective failure the span would have timed.
     """
+    hook = _FAULT_HOOK
+    if hook is not None:
+        hook(name)
     t = _TRACER
     if not t.enabled:
         return NULL_SPAN
@@ -218,6 +252,9 @@ def traced(name: str | None = None, **static_attrs):
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
+            hook = _FAULT_HOOK
+            if hook is not None:
+                hook(label)
             t = _TRACER
             if not t.enabled:
                 return fn(*args, **kwargs)

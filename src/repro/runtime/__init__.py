@@ -1,9 +1,12 @@
 """Production runtime: fault tolerance, elastic re-meshing, compressed
-collectives.
+collectives, chaos fault injection.
 
 Scales the TriADA schedule to unreliable fleets — ``compressed_psum`` is
 the lossy analogue of the paper's operand-bus multicast for gradient
-combines.  See ``docs/architecture.md`` ("Production substrate").
+combines; :mod:`repro.runtime.faults` scripts failures onto the engine's
+obs span names so the serving runtime's recovery paths are drill-testable
+(``docs/serving.md``).  See ``docs/architecture.md`` ("Production
+substrate").
 """
 from .fault_tolerance import (InjectedFailure, ResilienceConfig, RunReport,
                               run_resilient)
@@ -11,3 +14,5 @@ from .compression import (compressed_psum, compressed_psum_tree,
                           dequantize_int8, error_feedback_update,
                           quantize_int8)
 from .elastic import make_elastic_mesh, remesh_plan, reshard_state
+from .faults import (FAULT_KINDS, DeviceLoss, FaultError, FaultInjector,
+                     FaultSpec, VmemPressure, inject_faults)

@@ -9,6 +9,17 @@ shardings are derived from logical axes + rules at load time, restore is a
 ``remesh_plan`` computes the largest valid (data, model) sub-mesh for a
 surviving device count (model axis preserved first: TP degree is baked into
 padding choices; the data axis absorbs elasticity — the standard posture).
+
+Multi-pod fleets add one placement constraint: a model-parallel group's
+all-to-all traffic must stay on intra-pod ICI, so a TP group must never
+straddle a pod boundary.  ``multi_pod=True`` takes the *per-pod* surviving
+counts and each pod contributes ``count // tp`` data-parallel groups —
+stragglers on a partially-dead pod are left idle rather than paired with
+devices across the (slow) inter-pod fabric.  ``make_elastic_mesh`` applies
+the same rule to device selection via ``pod_of``.
+
+The serving runtime reuses ``remesh_plan``'s validation for its device-loss
+recovery (``docs/serving.md``): shrink the leading axis, keep TP, replan.
 """
 from __future__ import annotations
 
@@ -16,21 +27,74 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
-def remesh_plan(n_devices: int, tp: int, multi_pod: bool = False):
-    """Largest (dp, tp) grid with dp*tp <= n_devices, tp fixed."""
-    if n_devices < tp:
+def remesh_plan(n_devices: int, tp: int, multi_pod: bool = False,
+                pod_counts=None):
+    """Largest (dp, tp) grid with dp*tp <= n_devices, tp fixed.
+
+    ``multi_pod=True`` requires ``pod_counts`` — the surviving device
+    count of each pod, summing to ``n_devices`` — and keeps every TP group
+    within one pod: ``dp = sum(count // tp per pod)``, which can be
+    smaller than the single-fabric ``n_devices // tp`` when survivors are
+    scattered across pods.  Passing ``pod_counts`` without ``multi_pod``
+    raises (an ignored placement constraint would silently produce
+    straddling groups).
+    """
+    if not multi_pod:
+        if pod_counts is not None:
+            raise ValueError(
+                "pod_counts is only meaningful with multi_pod=True — "
+                "refusing to silently ignore a placement constraint")
+        if n_devices < tp:
+            raise ValueError(
+                f"cannot keep TP={tp} with only {n_devices} devices; "
+                "TP degree is baked into head/vocab padding — restore requires "
+                "at least one full model-parallel group")
+        return (n_devices // tp, tp)
+    if pod_counts is None:
+        raise ValueError("multi_pod=True requires pod_counts (surviving "
+                         "devices per pod)")
+    pod_counts = tuple(int(c) for c in pod_counts)
+    if any(c < 0 for c in pod_counts) or sum(pod_counts) != n_devices:
         raise ValueError(
-            f"cannot keep TP={tp} with only {n_devices} devices; "
-            "TP degree is baked into head/vocab padding — restore requires "
-            "at least one full model-parallel group")
-    dp = n_devices // tp
+            f"pod_counts {pod_counts} must be non-negative and sum to "
+            f"n_devices={n_devices}")
+    dp = sum(c // tp for c in pod_counts)
+    if dp < 1:
+        raise ValueError(
+            f"cannot keep TP={tp} within any pod of {pod_counts}; "
+            "TP groups must not straddle a pod boundary and no pod has a "
+            "full model-parallel group left")
     return (dp, tp)
 
 
-def make_elastic_mesh(devices, tp: int) -> Mesh:
-    dp, tp = remesh_plan(len(devices), tp)
-    devs = devices[: dp * tp]
+def make_elastic_mesh(devices, tp: int, multi_pod: bool = False,
+                      pod_of=None) -> Mesh:
+    """Build the (data, model) mesh on ``devices``.
+
+    ``multi_pod=True`` groups devices by ``pod_of(device)`` (default:
+    ``device.id // tp`` is *not* assumed — ``pod_of`` is required) and
+    keeps each TP group within one pod, dropping per-pod stragglers.
+    """
     import numpy as np
+
+    if not multi_pod:
+        if pod_of is not None:
+            raise ValueError(
+                "pod_of is only meaningful with multi_pod=True — "
+                "refusing to silently ignore a placement constraint")
+        dp, tp = remesh_plan(len(devices), tp)
+        devs = devices[: dp * tp]
+        return Mesh(np.asarray(devs).reshape(dp, tp), ("data", "model"))
+    if pod_of is None:
+        raise ValueError("multi_pod=True requires pod_of (device -> pod id)")
+    pods: dict = {}
+    for d in devices:
+        pods.setdefault(pod_of(d), []).append(d)
+    counts = tuple(len(v) for _, v in sorted(pods.items()))
+    dp, tp = remesh_plan(len(devices), tp, multi_pod=True,
+                         pod_counts=counts)
+    devs = [d for _, pod in sorted(pods.items())
+            for d in pod[: (len(pod) // tp) * tp]]
     return Mesh(np.asarray(devs).reshape(dp, tp), ("data", "model"))
 
 

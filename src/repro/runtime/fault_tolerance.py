@@ -38,6 +38,10 @@ class ResilienceConfig:
     async_save: bool = False
     max_restarts: int = 10
     straggler_factor: float = 2.0
+    # Exception types that trigger checkpoint/restart instead of
+    # propagating — widen to (InjectedFailure, OSError) to also recover
+    # from transient checkpoint I/O errors.
+    retryable: tuple = (InjectedFailure,)
 
 
 @dataclasses.dataclass
@@ -59,18 +63,38 @@ def run_resilient(
     on_straggler: Callable[[int, float], None] | None = None,
 ) -> tuple[Any, RunReport]:
     """Train for n_steps with checkpoint/restart; injected failures at the
-    step numbers in ``fail_at`` raise once each, exercising recovery."""
+    step numbers in ``fail_at`` raise once each, exercising recovery.
+
+    Any exception in ``rcfg.retryable`` triggers restore-and-replay (up to
+    ``max_restarts``); replayed steps overwrite — never duplicate — the
+    lost segment's ``losses``/``step_times`` entries, so the report holds
+    exactly one entry per step.  Async saves are drained (joined, errors
+    surfaced as retryable restarts) before any restore and before
+    returning.
+    """
     fail_at = set(fail_at or ())
     report = RunReport()
     restarts = 0
+    pending: list = []  # in-flight async SaveHandles
+    retryable = tuple(rcfg.retryable)
     while True:
-        # -- (re)start: restore latest checkpoint or cold-init -------------
-        last = ckpt_lib.latest_step(rcfg.ckpt_dir)
-        if last is not None:
-            state, step = ckpt_lib.restore(rcfg.ckpt_dir)
-        else:
-            state, step = init_state_fn(), 0
         try:
+            # -- (re)start: restore latest checkpoint or cold-init ---------
+            # Drain in-flight saves first: a restore racing an async write
+            # could read a half-renamed step, and a failed write must
+            # surface here (as a retryable error) rather than vanish.
+            while pending:
+                pending.pop().join()
+            last = ckpt_lib.latest_step(rcfg.ckpt_dir)
+            if last is not None:
+                state, step = ckpt_lib.restore(rcfg.ckpt_dir)
+            else:
+                state, step = init_state_fn(), 0
+            # The lost segment's entries beyond the restored step are about
+            # to be replayed — truncate so losses/step_times hold exactly
+            # one entry per step (no double counting).
+            del report.losses[step:]
+            del report.step_times[step:]
             while step < n_steps:
                 if step in fail_at:
                     fail_at.discard(step)
@@ -89,10 +113,15 @@ def run_resilient(
                 step += 1
                 report.steps_done = step
                 if step % rcfg.ckpt_every == 0 or step == n_steps:
-                    ckpt_lib.save(rcfg.ckpt_dir, step, state, keep=rcfg.keep,
-                                  blocking=not rcfg.async_save)
+                    handle = ckpt_lib.save(rcfg.ckpt_dir, step, state,
+                                           keep=rcfg.keep,
+                                           blocking=not rcfg.async_save)
+                    if rcfg.async_save:
+                        pending.append(handle)
+            while pending:  # the return must not race a trailing write
+                pending.pop().join()
             return state, report
-        except InjectedFailure:
+        except retryable:
             restarts += 1
             report.restarts = restarts
             if restarts > rcfg.max_restarts:

@@ -1,0 +1,159 @@
+"""Chaos layer: scripted fault injection keyed to obs span names.
+
+Every engine/serve hot path is already instrumented with spans
+(``stage:m2:sr_gemm``, ``fused_triple:m312``, ``collective:psum_scatter``,
+``execute.sharded``, ``serve.request`` — see ``docs/observability.md``),
+and :func:`repro.obs.trace.span` fires an installed *fault hook* with the
+span name before any work the span would time.  A :class:`FaultInjector`
+is such a hook: it matches names against scripted :class:`FaultSpec`
+patterns and injects
+
+* ``exception`` — raise :class:`FaultError` (a failed kernel launch),
+* ``delay`` — sleep ``delay_s`` (a straggling launch / slow collective),
+* ``vmem_pressure`` — raise :class:`VmemPressure` (RESOURCE_EXHAUSTED:
+  the tile working set no longer fits on-chip),
+* ``device_loss`` — raise :class:`DeviceLoss` with the surviving device
+  count (half the pod disappears mid-request).
+
+Each spec carries a ``times`` budget and an ``after`` skip so drills can
+script "the second fused_triple launch fails twice, then heals".  The
+injector counts every injection in ``faults.injected.{kind}`` obs
+counters, so a drill's recovery accounting (``serve.retry`` etc., see
+:mod:`repro.serve.runtime`) can be balanced against what was injected.
+
+Span names fire *per call* on the single-device engine path; inside a
+jitted ``shard_map`` body they fire once per compilation (see
+``docs/observability.md``), so device-loss drills key on the per-call
+``serve.request`` / ``execute.sharded`` spans instead of ``stage:*``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import time
+
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
+from .fault_tolerance import InjectedFailure
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultSpec",
+    "FaultInjector",
+    "FaultError",
+    "VmemPressure",
+    "DeviceLoss",
+    "inject_faults",
+]
+
+FAULT_KINDS = ("exception", "delay", "vmem_pressure", "device_loss")
+
+
+class FaultError(InjectedFailure):
+    """Injected kernel/collective launch failure (retryable)."""
+
+
+class VmemPressure(FaultError):
+    """Injected RESOURCE_EXHAUSTED: plan's working set exceeds VMEM."""
+
+
+class DeviceLoss(FaultError):
+    """Injected loss of devices mid-request; ``survivors`` is the count
+    still alive (None = let the handler ask the platform)."""
+
+    def __init__(self, message: str, survivors: int | None = None):
+        super().__init__(message)
+        self.survivors = survivors
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scripted fault: ``match`` is an ``fnmatch`` pattern over span
+    names; the first ``after`` matching hits pass through, then up to
+    ``times`` injections fire (``times <= 0`` = unlimited)."""
+
+    match: str
+    kind: str = "exception"
+    times: int = 1
+    after: int = 0
+    delay_s: float = 0.0
+    survivors: int | None = None
+    message: str = ""
+    # runtime accounting (mutated by the injector)
+    hits: int = 0
+    injected: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+
+    @property
+    def exhausted(self) -> bool:
+        return 0 < self.times <= self.injected
+
+
+class FaultInjector:
+    """A fault hook (see :func:`repro.obs.trace.set_fault_hook`) driving a
+    scripted schedule of :class:`FaultSpec`\\ s.  Use :func:`inject_faults`
+    for scoped installation."""
+
+    def __init__(self, *specs: FaultSpec, sleep=time.sleep):
+        self.specs = list(specs)
+        self._sleep = sleep
+        self._prev = None
+
+    def __call__(self, name: str) -> None:
+        for spec in self.specs:
+            if not fnmatch.fnmatchcase(name, spec.match):
+                continue
+            spec.hits += 1
+            if spec.hits <= spec.after or spec.exhausted:
+                continue
+            spec.injected += 1
+            _metrics.inc(f"faults.injected.{spec.kind}")
+            tracer = _trace.get_tracer()
+            if tracer.enabled:
+                # record the injection itself (Span directly: going through
+                # trace.span() would re-enter this hook)
+                with _trace.Span(tracer, f"fault:{spec.kind}",
+                                 {"at": name, "match": spec.match}):
+                    pass
+            msg = spec.message or f"injected {spec.kind} at span {name!r}"
+            if spec.kind == "delay":
+                self._sleep(spec.delay_s)
+            elif spec.kind == "vmem_pressure":
+                raise VmemPressure(msg)
+            elif spec.kind == "device_loss":
+                raise DeviceLoss(msg, survivors=spec.survivors)
+            else:
+                raise FaultError(msg)
+
+    def install(self) -> "FaultInjector":
+        self._prev = _trace.set_fault_hook(self)
+        return self
+
+    def uninstall(self) -> None:
+        _trace.set_fault_hook(self._prev)
+        self._prev = None
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every bounded spec has spent its budget."""
+        return all(s.exhausted for s in self.specs if s.times > 0)
+
+    def stats(self) -> dict:
+        return {s.match: {"kind": s.kind, "hits": s.hits,
+                          "injected": s.injected} for s in self.specs}
+
+
+@contextlib.contextmanager
+def inject_faults(*specs: FaultSpec, sleep=time.sleep):
+    """Install a :class:`FaultInjector` for the ``with`` body (previous
+    hook restored on exit); yields the injector for accounting."""
+    inj = FaultInjector(*specs, sleep=sleep).install()
+    try:
+        yield inj
+    finally:
+        inj.uninstall()

@@ -3,6 +3,11 @@
 ``DxtServeSession`` fronts the planned GEMT engine (paper §3 order search
 + §6 ESOP + stage fusion; ``docs/engine.md``) and, with ``mesh=``, the
 distributed TriADA schedule (§4–§5; ``docs/distributed.md``).
+``ResilientDxtServer`` wraps a session with the fault-tolerant request
+lifecycle — admission/shedding, retry/backoff, the runtime degradation
+ladder, elastic remesh-replan (``docs/serving.md``).
 """
 from .decode import (DxtServeSession, ServeSession, SlotManager,
                      build_decode_step, build_prefill_step)
+from .runtime import (LADDER_TIERS, CircuitBreaker, DeadlineExceeded,
+                      Overloaded, Request, ResilientDxtServer, RetryPolicy)

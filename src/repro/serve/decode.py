@@ -15,6 +15,10 @@ from ..models import ShardCtx, apply_decode, apply_prefill, init_cache
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 
+# Per-request override sentinel: None is a meaningful value for the
+# engine knobs (auto fusion, default budget), so "not given" needs its own.
+_UNSET = object()
+
 
 def build_prefill_step(cfg, ctx: ShardCtx):
     def prefill_step(params, batch):
@@ -104,6 +108,8 @@ class DxtServeSession:
     mesh: Any = None  # jax.sharding.Mesh | None
     axes: Any = None  # per-mode mesh axes (None = engine default for mesh)
     batch_axis: Any = None  # mesh axis sharding the request batch dim
+    vmem_budget: int | None = None  # None = engine.DEFAULT_VMEM_BUDGET
+    backend: str | None = None  # pin every stage ("einsum"); None = auto
 
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
@@ -129,7 +135,32 @@ class DxtServeSession:
             self._coeffs[key] = tuple(build(self.kind, n) for n in dims)
         return self._coeffs[key]
 
-    def transform(self, batch, inverse: bool | None = None) -> jnp.ndarray:
+    def rebind_mesh(self, mesh, axes=_UNSET, batch_axis=_UNSET) -> int:
+        """Re-point the session at a new (possibly smaller) mesh.
+
+        The elastic-recovery hook (``docs/serving.md``): plans built for
+        the old mesh — including the jitted ``shard_map`` programs whose
+        closures hold the old mesh's devices — are dropped from the engine
+        caches via :func:`repro.engine.invalidate_plans`, so the next
+        request replans on the surviving devices instead of dispatching
+        onto dead ones.  ``axes``/``batch_axis`` default to keeping the
+        session's current assignment.  Returns how many plans fell.
+        """
+        from ..engine import invalidate_plans
+
+        dropped = 0
+        if self.mesh is not None:
+            dropped = invalidate_plans(mesh=self.mesh)
+        self.mesh = mesh
+        if axes is not _UNSET:
+            self.axes = axes
+        if batch_axis is not _UNSET:
+            self.batch_axis = batch_axis
+        return dropped
+
+    def transform(self, batch, inverse: bool | None = None, *,
+                  fuse=_UNSET, use_pallas=_UNSET, vmem_budget=_UNSET,
+                  backend=_UNSET) -> jnp.ndarray:
         """Apply the transform to a (B, N1, N2, N3) batch.
 
         ``inverse`` overrides the session's direction for this request
@@ -137,8 +168,22 @@ class DxtServeSession:
         inverse on the same session — reuses the per-dims coefficient
         cache and, since the directions share shapes and zero structure,
         the same engine plans and autotuned tiles.
+
+        The keyword-only ``fuse``/``use_pallas``/``vmem_budget``/
+        ``backend`` override the session defaults for this request —
+        the degradation-ladder hooks :class:`repro.serve.ResilientDxtServer`
+        uses to replan a failing request one tier down without touching
+        the session's steady-state configuration.
         """
-        from ..engine import gemt3_planned
+        from ..engine import DEFAULT_VMEM_BUDGET, gemt3_planned
+
+        fuse = self.fuse if fuse is _UNSET else fuse
+        use_pallas = self.use_pallas if use_pallas is _UNSET else use_pallas
+        backend = self.backend if backend is _UNSET else backend
+        if vmem_budget is _UNSET:
+            vmem_budget = self.vmem_budget
+        if vmem_budget is None:
+            vmem_budget = DEFAULT_VMEM_BUDGET
 
         x = jnp.asarray(batch)
         if x.ndim != 4:
@@ -158,10 +203,12 @@ class DxtServeSession:
                               "batch": int(x.shape[0])})
         t0 = time.perf_counter_ns()
         with sp:
-            y, info = gemt3_planned(x, c1, c2, c3, fuse=self.fuse,
+            y, info = gemt3_planned(x, c1, c2, c3, fuse=fuse,
+                                    vmem_budget=vmem_budget,
+                                    backend=backend,
                                     autotune=self.autotune,
                                     autotune_cache=self.autotune_cache,
-                                    use_pallas=self.use_pallas,
+                                    use_pallas=use_pallas,
                                     with_info=True, mesh=self.mesh,
                                     axes=self.axes,
                                     batch_axis=self.batch_axis)
@@ -218,8 +265,11 @@ class SlotManager:
         return int(self.pos[slot])
 
     def finish(self, slot: int):
-        self.active.pop(slot, None)
-        self.free.append(slot)
+        # idempotent: a double-finish must not put the slot on the free
+        # list twice (it would later be handed to two requests at once)
+        if slot in self.active:
+            self.active.pop(slot)
+            self.free.append(slot)
 
     @property
     def utilization(self) -> float:

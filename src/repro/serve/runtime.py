@@ -1,0 +1,469 @@
+"""Resilient serving runtime: request lifecycle around ``DxtServeSession``.
+
+:class:`ResilientDxtServer` wraps a session with the full lifecycle a
+production transform service needs (``docs/serving.md``):
+
+* **bounded admission** — a FIFO queue of ``max_queue`` requests;
+  :meth:`submit` sheds (returns None, counts ``serve.shed``) when full,
+  so overload backpressure is explicit instead of an unbounded backlog;
+* **deadlines/timeouts** — an optional per-request deadline and a
+  per-attempt latency SLO; an attempt that overruns the SLO counts
+  ``serve.timeout`` and is retried like a failure (its result is
+  discarded — a real RPC would have been cancelled);
+* **retry with backoff** — bounded exponential backoff with
+  *deterministic* jitter (hashed from request id + attempt, so drills
+  and replays reproduce exactly), counted in ``serve.retry``;
+* **a per-tier circuit breaker** driving the **degradation ladder**.
+
+The ladder extends the planner's triple→pair→staged fusion fallback to
+runtime failures.  Tiers, best first::
+
+    auto    session defaults (cost-model fusion, Pallas kernels)
+    pair    fuse="pair"
+    staged  fuse=False
+    einsum  fuse=False, backend="einsum"  (no Pallas at all)
+
+Each tier has a :class:`CircuitBreaker`; repeated kernel failure opens a
+tier's breaker and the next attempt replans one tier down (counted in
+``serve.degraded`` and recorded as a ``runtime_degradation`` event on the
+request's ``info["events"]``, next to the planner's own
+``fusion_degradation`` events).  After ``cooldown_s`` the breaker goes
+half-open, one probe request runs the higher tier again, and on success
+the breaker closes (``serve.recovered``) — the ladder climbs back up.
+The einsum tier is the floor: it is attempted even with its breaker open,
+because shedding a request the queue already admitted is the one thing
+the runtime never does.
+
+Two fault kinds bypass the ladder:
+
+* **VMEM pressure** (:class:`repro.runtime.faults.VmemPressure`) —
+  the request replans under a tightened ``vmem_budget`` (halved, floored
+  at ``min_vmem_budget``); the engine's plan keys include the budget, so
+  this is a fresh plan whose own fusion ladder may demote tiers;
+* **device loss** (:class:`repro.runtime.faults.DeviceLoss`) — the mesh
+  is rebuilt on the survivors via ``elastic.remesh_plan`` semantics (the
+  leading axis absorbs the shrink, trailing model-parallel axes keep
+  their degree), the session re-binds (``DxtServeSession.rebind_mesh``
+  invalidates every plan and jitted ``shard_map`` program of the dead
+  mesh), and the request replays on the surviving devices — counted in
+  ``serve.remesh``.
+
+All recovery is synchronous and per-request: an admitted request either
+returns a result numerically matching the fault-free run or raises with
+its last error after the retry budget/deadline is exhausted — it is never
+silently dropped.  Chaos drills script faults with
+:mod:`repro.runtime.faults` and balance the ``serve.*`` counters against
+``faults.injected.*``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import deque
+from typing import Any, Callable
+
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
+from ..runtime.faults import DeviceLoss, VmemPressure
+from .decode import DxtServeSession
+
+__all__ = [
+    "LADDER_TIERS",
+    "RetryPolicy",
+    "CircuitBreaker",
+    "Request",
+    "Overloaded",
+    "DeadlineExceeded",
+    "ResilientDxtServer",
+]
+
+# Degradation ladder, best tier first; knobs are per-request overrides
+# passed to DxtServeSession.transform (None = session default for "auto").
+LADDER_TIERS = ("auto", "pair", "staged", "einsum")
+_TIER_KNOBS: dict[str, dict] = {
+    "auto": {},
+    "pair": {"fuse": "pair"},
+    "staged": {"fuse": False},
+    "einsum": {"fuse": False, "backend": "einsum", "use_pallas": False},
+}
+
+
+class Overloaded(RuntimeError):
+    """Admission queue full — the request was shed, not queued."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline expired before an attempt succeeded."""
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded exponential backoff with deterministic jitter.
+
+    ``delay(attempt, token)`` is a pure function of its arguments: the
+    jitter is hashed from ``(token, attempt)``, not drawn from a PRNG, so
+    a replayed drill backs off identically.  ``max_attempts`` bounds the
+    per-request retry budget (the einsum floor still failing that many
+    times means the failure is real, not transient).
+    """
+
+    base_delay_s: float = 0.01
+    max_delay_s: float = 1.0
+    multiplier: float = 2.0
+    jitter: float = 0.5  # fraction of the delay shaved off, in [0, 1)
+    max_attempts: int = 16
+
+    def delay(self, attempt: int, token: int = 0) -> float:
+        d = min(self.base_delay_s * self.multiplier ** max(attempt - 1, 0),
+                self.max_delay_s)
+        if self.jitter <= 0.0:
+            return d
+        h = hashlib.sha256(f"{token}:{attempt}".encode()).digest()
+        u = int.from_bytes(h[:4], "big") / 2.0 ** 32
+        return d * (1.0 - self.jitter * u)
+
+
+class CircuitBreaker:
+    """closed → open after ``threshold`` consecutive failures → half-open
+    after ``cooldown_s`` → closed on a successful probe (or re-open on a
+    failed one).  ``clock`` is injectable for deterministic tests."""
+
+    def __init__(self, threshold: int = 2, cooldown_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = 0.0
+
+    def allow(self) -> bool:
+        if self.state == "open":
+            if self._clock() - self.opened_at >= self.cooldown_s:
+                self.state = "half_open"
+        return self.state != "open"
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.threshold:
+            self.state = "open"
+            self.opened_at = self._clock()
+            self.failures = 0
+
+    def record_success(self) -> bool:
+        """Returns True when this success *closed* a half-open breaker
+        (a recovery, not steady state)."""
+        recovered = self.state == "half_open"
+        self.state = "closed"
+        self.failures = 0
+        return recovered
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted transform request and its lifecycle record."""
+
+    id: int
+    batch: Any
+    inverse: bool | None = None
+    deadline: float | None = None  # absolute, on the server's clock
+    status: str = "queued"  # queued | done | failed
+    tier: str = "auto"  # tier of the last attempt
+    attempts: int = 0
+    retries: int = 0
+    result: Any = None
+    info: dict | None = None
+    error: BaseException | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+
+class ResilientDxtServer:
+    """Fault-tolerant request lifecycle around a :class:`DxtServeSession`.
+
+    Synchronous single-worker runtime: :meth:`submit` admits (or sheds),
+    :meth:`drain` processes the queue in order, :meth:`transform` is the
+    submit-and-drain convenience with the session's call signature.
+    ``clock``/``sleep`` are injectable so tests drive breaker cooldowns
+    and backoff deterministically.  ``devices`` overrides where remesh
+    recovery looks for survivors (default ``jax.devices()``).
+    """
+
+    def __init__(self, session: DxtServeSession | None = None, *,
+                 max_queue: int = 64,
+                 default_deadline_s: float | None = None,
+                 attempt_timeout_s: float | None = None,
+                 retry: RetryPolicy | None = None,
+                 breaker_threshold: int = 2,
+                 breaker_cooldown_s: float = 1.0,
+                 vmem_shrink: float = 0.5,
+                 min_vmem_budget: int = 1 << 18,
+                 devices=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 **session_kwargs):
+        if session is not None and session_kwargs:
+            raise ValueError("pass either a session or session kwargs")
+        self.session = session or DxtServeSession(**session_kwargs)
+        self.max_queue = int(max_queue)
+        self.default_deadline_s = default_deadline_s
+        self.attempt_timeout_s = attempt_timeout_s
+        self.retry = retry or RetryPolicy()
+        self.vmem_shrink = float(vmem_shrink)
+        self.min_vmem_budget = int(min_vmem_budget)
+        self._devices = devices
+        self._clock = clock
+        self._sleep = sleep
+        self._queue: deque[Request] = deque()
+        self._next_id = 0
+        self.breakers = {
+            tier: CircuitBreaker(breaker_threshold, breaker_cooldown_s,
+                                 clock=clock)
+            for tier in LADDER_TIERS
+        }
+        # Runtime-tightened budget override; None = session/engine default.
+        self.vmem_budget: int | None = None
+        self.counts = {k: 0 for k in
+                       ("admitted", "completed", "failed", "shed", "retries",
+                        "timeouts", "degraded", "remeshes", "recovered",
+                        "deadline_exceeded")}
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, batch, inverse: bool | None = None,
+               deadline_s: float | None = None) -> Request | None:
+        """Admit a request, or shed it (returns None) when the queue is
+        full — mirroring ``SlotManager.admit``'s admit-on-free contract."""
+        if len(self._queue) >= self.max_queue:
+            self._count("shed")
+            return None
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline = None if deadline_s is None else self._clock() + deadline_s
+        req = Request(id=self._next_id, batch=batch, inverse=inverse,
+                      deadline=deadline)
+        self._next_id += 1
+        self._queue.append(req)
+        self._count("admitted")
+        return req
+
+    def drain(self) -> list[Request]:
+        """Process every queued request in admission order."""
+        done = []
+        while self._queue:
+            done.append(self._process(self._queue.popleft()))
+        return done
+
+    def transform(self, batch, inverse: bool | None = None, *,
+                  deadline_s: float | None = None):
+        """Submit-and-drain convenience: returns the transformed batch or
+        raises (:class:`Overloaded`, :class:`DeadlineExceeded`, or the
+        request's final error)."""
+        req = self.submit(batch, inverse=inverse, deadline_s=deadline_s)
+        if req is None:
+            raise Overloaded(
+                f"admission queue full ({self.max_queue} requests)")
+        self.drain()
+        if req.status != "done":
+            raise req.error
+        return req.result
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self.counts[key] += n
+        _metrics.inc(_COUNTERS[key], n)
+
+    def _pick_tier(self) -> str:
+        for tier in LADDER_TIERS:
+            if self.breakers[tier].allow():
+                return tier
+        # Every breaker open: the einsum floor runs anyway — admitted
+        # requests are never shed because the ladder is unhealthy.
+        return LADDER_TIERS[-1]
+
+    def _degrade(self, req: Request, tier: str, reason: str) -> None:
+        self._count("degraded")
+        req.events.append({"kind": "runtime_degradation", "reason": reason,
+                           "from": req.tier, "to": tier,
+                           "request": req.id, "attempt": req.attempts})
+
+    def _attempt(self, req: Request, tier: str):
+        knobs = dict(_TIER_KNOBS[tier])
+        if self.vmem_budget is not None:
+            knobs["vmem_budget"] = self.vmem_budget
+        t0 = self._clock()
+        y = self.session.transform(req.batch, inverse=req.inverse, **knobs)
+        elapsed = self._clock() - t0
+        if (self.attempt_timeout_s is not None
+                and elapsed > self.attempt_timeout_s):
+            # The work finished but blew the per-attempt SLO; a real RPC
+            # would have been cancelled mid-flight — discard and retry.
+            self._count("timeouts")
+            raise TimeoutError(
+                f"attempt took {elapsed:.3f}s > SLO "
+                f"{self.attempt_timeout_s:.3f}s (tier {tier})")
+        return y
+
+    def _process(self, req: Request) -> Request:
+        sp = _trace.NULL_SPAN
+        if _trace.get_tracer().enabled:
+            sp = _trace.Span(_trace.get_tracer(), "serve.lifecycle",
+                             {"request": req.id})
+        with sp:
+            return self._process_inner(req)
+
+    def _process_inner(self, req: Request) -> Request:
+        prev_tier = None
+        cause = "kernel_failure"
+        while True:
+            tier = self._pick_tier()
+            if (prev_tier is not None
+                    and LADDER_TIERS.index(tier) > LADDER_TIERS.index(prev_tier)):
+                self._degrade(req, tier, reason=cause)
+            req.attempts += 1
+            req.tier = tier
+            breaker = self.breakers[tier]
+            try:
+                y = self._attempt(req, tier)
+            except VmemPressure as e:
+                self._on_vmem_pressure(req, e)
+                cause = "vmem_pressure"
+                err = e
+            except DeviceLoss as e:
+                self._on_device_loss(req, e)
+                cause = "device_loss"
+                err = e
+            except TimeoutError as e:
+                # timeouts count against the tier's health: a tier that is
+                # chronically slow should open and let a leaner tier serve
+                breaker.record_failure()
+                req.events.append({"kind": "attempt_timeout", "tier": tier,
+                                   "attempt": req.attempts})
+                cause = "attempt_timeout"
+                err = e
+            except (ValueError, TypeError) as e:
+                # malformed request: not transient, no retry budget burned
+                req.status = "failed"
+                req.error = e
+                self._count("failed")
+                return req
+            except Exception as e:  # kernel/collective failure
+                breaker.record_failure()
+                cause = "kernel_failure"
+                err = e
+            else:
+                if breaker.record_success():
+                    self._count("recovered")
+                    req.events.append({"kind": "runtime_recovery",
+                                       "tier": tier,
+                                       "attempt": req.attempts})
+                req.status = "done"
+                req.result = y
+                info = dict(self.session.last_info or {})
+                info["events"] = tuple(info.get("events", ())) \
+                    + tuple(req.events)
+                req.info = info
+                self._count("completed")
+                return req
+            req.error = err
+            # -- failed attempt: retry, fail on deadline, or give up ------
+            if (req.deadline is not None and self._clock() >= req.deadline):
+                req.status = "failed"
+                req.error = DeadlineExceeded(
+                    f"request {req.id} deadline expired after "
+                    f"{req.attempts} attempts: {err}")
+                self._count("deadline_exceeded")
+                self._count("failed")
+                return req
+            if req.attempts >= self.retry.max_attempts:
+                req.status = "failed"
+                self._count("failed")
+                return req
+            prev_tier = tier
+            req.retries += 1
+            self._count("retries")
+            self._sleep(self.retry.delay(req.attempts, req.id))
+
+    # -- recovery paths ----------------------------------------------------
+
+    def _on_vmem_pressure(self, req: Request, e: VmemPressure) -> None:
+        from ..engine import DEFAULT_VMEM_BUDGET
+
+        cur = (self.vmem_budget
+               or self.session.vmem_budget or DEFAULT_VMEM_BUDGET)
+        new = max(int(cur * self.vmem_shrink), self.min_vmem_budget)
+        self.vmem_budget = new
+        self._count("degraded")
+        req.events.append({"kind": "runtime_degradation",
+                           "reason": "vmem_pressure",
+                           "vmem_budget_from": cur, "vmem_budget_to": new,
+                           "request": req.id, "attempt": req.attempts})
+
+    def _survivors(self, e: DeviceLoss):
+        import jax
+
+        devices = list(self._devices
+                       if self._devices is not None else jax.devices())
+        if e.survivors is not None:
+            devices = devices[: int(e.survivors)]
+        return devices
+
+    def _on_device_loss(self, req: Request, e: DeviceLoss) -> None:
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from ..runtime.elastic import remesh_plan
+
+        mesh = self.session.mesh
+        if mesh is None:
+            return  # nothing to remesh; plain retry
+        survivors = self._survivors(e)
+        names = tuple(mesh.axis_names)
+        # Trailing axes keep their degree (the model-parallel posture of
+        # elastic.remesh_plan: TP is baked in, the leading axis absorbs
+        # the shrink).
+        tp = 1
+        for n in names[1:]:
+            tp *= int(mesh.shape[n])
+        dp, tp = remesh_plan(len(survivors), tp)
+        shape = (dp,) + tuple(int(mesh.shape[n]) for n in names[1:])
+        new_mesh = Mesh(
+            np.asarray(survivors[: dp * tp]).reshape(shape), names)
+        dropped = self.session.rebind_mesh(new_mesh)
+        self._count("remeshes")
+        req.events.append({"kind": "runtime_remesh",
+                           "from": dict(mesh.shape),
+                           "to": dict(new_mesh.shape),
+                           "plans_invalidated": dropped,
+                           "request": req.id, "attempt": req.attempts})
+
+    # -- telemetry ---------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def stats(self) -> dict:
+        """Runtime counters + breaker states + the wrapped session stats."""
+        return {
+            **dict(self.counts),
+            "queued": len(self._queue),
+            "vmem_budget": self.vmem_budget,
+            "breakers": {t: b.state for t, b in self.breakers.items()},
+            "session": self.session.stats(),
+        }
+
+
+_COUNTERS = {
+    "admitted": "serve.admitted",
+    "completed": "serve.completed",
+    "failed": "serve.failed",
+    "shed": "serve.shed",
+    "retries": "serve.retry",
+    "timeouts": "serve.timeout",
+    "degraded": "serve.degraded",
+    "remeshes": "serve.remesh",
+    "recovered": "serve.recovered",
+    "deadline_exceeded": "serve.deadline_exceeded",
+}

@@ -138,6 +138,37 @@ def test_counter_carrying_artifact_roundtrip(tmp_path):
     assert not check_regression(str(legacy), tol_time=1.0, rows=rows)
 
 
+@pytest.mark.bench_smoke
+@pytest.mark.chaos_smoke
+def test_serve_resilience_artifact_has_no_model_regression():
+    """S1 must reproduce: the scripted fault schedule's recovery accounting
+    (retries/degradations/completions, breaker state) is deterministic by
+    construction; wall-clock gets a 4x band."""
+    failures = check_regression(_artifact("BENCH_serve_resilience.json"),
+                                tol_time=3.0)
+    assert not failures, "\n".join(failures)
+
+
+@pytest.mark.bench_smoke
+@pytest.mark.chaos_smoke
+def test_serve_resilience_artifact_meets_acceptance_bar():
+    """The committed artifact carries the resilience acceptance bar: under
+    the scripted chaos schedule every admitted request completed (zero
+    dropped/shed), the retry count equals the injected fault count, and
+    the chaos outputs match the fault-free run to 1e-5."""
+    with open(_artifact("BENCH_serve_resilience.json")) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    assert rows, "empty artifact"
+    for row in rows:
+        kv = _parse_derived(row["derived"])
+        assert float(kv["max_abs_err"]) <= 1e-5, row["name"]
+        assert kv["completed"] == kv["admitted"], row["name"]
+        assert int(kv["failed"]) == 0 and int(kv["shed"]) == 0, row["name"]
+        assert int(kv["retries"]) == 3, row["name"]  # one per injected fault
+        assert int(kv["degraded"]) == 2, row["name"]
+
+
 @pytest.mark.grad_smoke
 def test_grad_artifact_has_no_model_regression():
     """G1 must reproduce: backward dispatch counters, adjoint order and

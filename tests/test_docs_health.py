@@ -70,3 +70,23 @@ def test_doc_pages_exist_and_cover_subpackages():
         and not d.startswith("__"))
     missing = [p for p in pkgs if f"{p}/" not in text]
     assert not missing, f"subpackages absent from architecture.md: {missing}"
+
+
+@pytest.mark.docs_health
+def test_serving_page_covers_lifecycle_and_is_cross_linked():
+    """docs/serving.md documents the resilient runtime (lifecycle, ladder,
+    fault-injection points, counter accounting) and the neighbouring pages
+    link to it."""
+    page = os.path.join(_ROOT, "docs", "serving.md")
+    assert os.path.exists(page), "docs/serving.md is missing"
+    text = open(page, encoding="utf-8").read()
+    for needed in ("ResilientDxtServer", "CircuitBreaker", "RetryPolicy",
+                   "degradation ladder", "einsum", "inject_faults",
+                   "FaultSpec", "serve.retry", "serve.degraded",
+                   "serve.remesh", "faults.injected", "invalidate_plans",
+                   "rebind_mesh", "remesh_plan", "multi_pod", "SaveHandle"):
+        assert needed in text, f"serving.md does not mention {needed!r}"
+    for other in ("README.md", os.path.join("docs", "architecture.md"),
+                  os.path.join("docs", "observability.md")):
+        linked = open(os.path.join(_ROOT, other), encoding="utf-8").read()
+        assert "serving.md" in linked, f"{other} does not link docs/serving.md"

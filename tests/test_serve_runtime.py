@@ -1,0 +1,473 @@
+"""Resilient serving runtime: chaos drills + lifecycle unit tests.
+
+The ``chaos_smoke``-marked drills run scripted fault schedules
+(:mod:`repro.runtime.faults`) against :class:`ResilientDxtServer` and
+assert the acceptance contract: every admitted request completes with
+output matching the fault-free run (atol 1e-5), zero requests dropped,
+and the ``serve.retry/degraded/remesh`` counters exactly account for the
+injected faults.  Breaker cooldowns and backoff use injected clocks, so
+the drills are deterministic.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import obs
+from repro.obs import trace as _trace
+from repro.runtime.faults import (DeviceLoss, FaultError, FaultInjector,
+                                  FaultSpec, VmemPressure, inject_faults)
+from repro.serve import (DeadlineExceeded, DxtServeSession, Overloaded,
+                         ResilientDxtServer, RetryPolicy, SlotManager)
+from repro.serve.runtime import CircuitBreaker
+
+ATOL = 1e-5
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _batch(n=16, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(b, n, n, n)).astype(np.float32)
+
+
+def _server(clock=None, **kw):
+    clock = clock or FakeClock()
+    kw.setdefault("breaker_threshold", 1)
+    kw.setdefault("breaker_cooldown_s", 60.0)
+    return ResilientDxtServer(session=DxtServeSession(), clock=clock,
+                              sleep=lambda s: None, **kw), clock
+
+
+# ---------------------------------------------------------------------------
+# chaos drills
+
+
+@pytest.mark.chaos_smoke
+class TestChaosDrills:
+    def test_ladder_descends_to_einsum_and_recovers(self):
+        """Kernel faults on every Pallas-capable tier force the ladder all
+        the way down to einsum; after cooldown the half-open breaker's
+        probe closes it and serving returns to the auto tier."""
+        x = _batch()
+        with obs.session("drill", enable_tracing=False) as s:
+            server, clock = _server()
+            y0 = server.transform(x)  # fault-free baseline (auto tier)
+            specs = [
+                FaultSpec(match="fused_*", kind="exception", times=0),
+                FaultSpec(match="stage:*:sr_gemm", kind="exception", times=0),
+                FaultSpec(match="stage:*:esop", kind="exception", times=0),
+            ]
+            with inject_faults(*specs) as inj:
+                y1 = server.transform(x)
+            assert float(jnp.max(jnp.abs(y1 - y0))) <= ATOL
+            st = server.stats()
+            # auto, pair and staged each failed exactly once before the
+            # einsum floor served: 3 retries, 3 degradations, no drops
+            assert st["retries"] == 3
+            assert st["degraded"] == 3
+            assert st["completed"] == 2 and st["failed"] == 0
+            assert st["breakers"]["auto"] == "open"
+            assert server.transform(x) is not None  # still open: einsum
+            # every recovery action is accounted against an injection
+            reg = s.registry
+            injected = sum(sp.injected for sp in inj.specs)
+            assert injected == 3
+            assert reg.value("faults.injected.exception") == 3
+            assert reg.value("serve.retry") == st["retries"] == 3
+            assert reg.value("serve.degraded") == 3
+            assert reg.value("serve.shed") == 0
+            # cooldown elapses -> half-open probe on auto succeeds -> closed
+            clock.t += 61.0
+            y2 = server.transform(x)
+            assert float(jnp.max(jnp.abs(y2 - y0))) <= ATOL
+            st = server.stats()
+            assert st["breakers"]["auto"] == "closed"
+            assert st["recovered"] == 1
+            assert reg.value("serve.recovered") == 1
+            assert st["failed"] == 0 and st["shed"] == 0
+
+    def test_ladder_events_on_info(self):
+        """The runtime's degradation trail rides info["events"], next to
+        the planner's own fusion_degradation events."""
+        x = _batch()
+        server, _ = _server()
+        req0 = server.submit(x)
+        server.drain()
+        with inject_faults(
+                FaultSpec(match="fused_*", kind="exception", times=0),
+                FaultSpec(match="stage:*:sr_gemm", kind="exception", times=0),
+                FaultSpec(match="stage:*:esop", kind="exception", times=0)):
+            req = server.submit(x)
+            server.drain()
+        assert req.status == "done"
+        kinds = [e["kind"] for e in req.info["events"]]
+        assert kinds.count("runtime_degradation") == 3
+        reasons = [e.get("reason") for e in req.info["events"]
+                   if e["kind"] == "runtime_degradation"]
+        assert set(reasons) == {"kernel_failure"}
+        assert req.tier == "einsum"
+
+    def test_vmem_pressure_replans_under_tightened_budget(self):
+        from repro.engine import DEFAULT_VMEM_BUDGET
+
+        x = _batch()
+        with obs.session("drill", enable_tracing=False) as s:
+            server, _ = _server()
+            y0 = server.transform(x)
+            with inject_faults(
+                    FaultSpec(match="fused_*", kind="vmem_pressure",
+                              times=1)):
+                req = server.submit(x)
+                server.drain()
+            assert req.status == "done"
+            assert float(jnp.max(jnp.abs(req.result - y0))) <= ATOL
+            assert server.vmem_budget == DEFAULT_VMEM_BUDGET // 2
+            st = server.stats()
+            assert st["retries"] == 1 and st["degraded"] == 1
+            assert s.registry.value("faults.injected.vmem_pressure") == 1
+            ev = [e for e in req.info["events"]
+                  if e.get("reason") == "vmem_pressure"]
+            assert ev and ev[0]["vmem_budget_to"] == DEFAULT_VMEM_BUDGET // 2
+            # the breaker did NOT trip: vmem pressure replans, not degrades
+            assert st["breakers"]["auto"] == "closed"
+
+    def test_injected_delay_trips_attempt_timeout(self):
+        """A straggling request blows the per-attempt SLO, is counted as a
+        timeout, and the retry serves it within SLO."""
+        import time as _time
+
+        x = _batch(n=8)
+        with obs.session("drill", enable_tracing=False) as s:
+            server = ResilientDxtServer(session=DxtServeSession(),
+                                        attempt_timeout_s=0.25,
+                                        breaker_threshold=2,
+                                        sleep=lambda t: None)
+            y0 = server.transform(x)  # warm: compile outside the SLO window
+            with inject_faults(FaultSpec(match="serve.request", kind="delay",
+                                         delay_s=1.0, times=1)):
+                y1 = server.transform(x)
+            assert float(jnp.max(jnp.abs(y1 - y0))) <= ATOL
+            st = server.stats()
+            assert st["timeouts"] == 1 and st["retries"] == 1
+            assert st["completed"] == 2 and st["failed"] == 0
+            assert s.registry.value("serve.timeout") == 1
+            assert s.registry.value("faults.injected.delay") == 1
+
+    def test_scripted_schedule_full_drill(self):
+        """The acceptance drill (single-device half): kernel exception +
+        VMEM pressure + delay in one scripted schedule; every request
+        completes, matches fault-free, and the counters balance."""
+        x = _batch()
+        reqs = [_batch(seed=i) for i in range(6)]
+        with obs.session("drill", enable_tracing=False) as s:
+            server, clock = _server(breaker_threshold=2)
+            baseline = [np.asarray(DxtServeSession().transform(r))
+                        for r in reqs]
+            # the injector stops at the first spec that injects, so the
+            # vmem spec takes over once the exception budget is spent
+            specs = [
+                FaultSpec(match="fused_*", kind="exception", times=2),
+                FaultSpec(match="fused_*", kind="vmem_pressure", times=1),
+            ]
+            with inject_faults(*specs) as inj:
+                out = [server.transform(r) for r in reqs]
+            for got, want in zip(out, baseline):
+                assert float(np.max(np.abs(np.asarray(got) - want))) <= ATOL
+            st = server.stats()
+            reg = s.registry
+            # schedule: req0 attempt1+2 exception (breaker trips at 2 ->
+            # degrade to pair), attempt3 vmem_pressure on the pair kernel
+            # (tighten budget), attempt4 serves; reqs 1..5 clean
+            assert st["completed"] == len(reqs)
+            assert st["failed"] == 0 and st["shed"] == 0
+            assert st["retries"] == 3
+            assert st["degraded"] == 2  # one tier descent + one vmem replan
+            assert reg.value("serve.retry") == 3
+            assert reg.value("serve.degraded") == 2
+            injected = sum(sp.injected for sp in inj.specs)
+            assert injected == 3 == st["retries"]
+
+    def test_device_loss_remesh_replan(self, virtual_devices):
+        """Losing half the virtual devices mid-session: the server rebuilds
+        the mesh on the survivors via remesh_plan semantics, invalidates
+        the dead mesh's plans, replays the request, and keeps serving —
+        results match the fault-free single-device run."""
+        out = virtual_devices("""
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import Mesh
+            from repro import obs
+            from repro.engine import plan_cache_info
+            from repro.runtime.faults import FaultSpec, inject_faults
+            from repro.serve import DxtServeSession, ResilientDxtServer
+
+            devs = jax.devices()
+            assert len(devs) == 8
+            rng = np.random.default_rng(0)
+            x = rng.normal(size=(2, 16, 16, 16)).astype(np.float32)
+            y_ref = DxtServeSession().transform(x)  # fault-free reference
+
+            mesh = Mesh(np.array(devs), ("x",))
+            sess = DxtServeSession(mesh=mesh, axes=("x", None, None))
+            with obs.session("drill", enable_tracing=False) as s:
+                server = ResilientDxtServer(session=sess,
+                                            sleep=lambda t: None)
+                y0 = server.transform(x)  # warm on the 8-device mesh
+                assert float(jnp.max(jnp.abs(y0 - y_ref))) <= 1e-5
+                n_plans = plan_cache_info()["entries"]
+                with inject_faults(FaultSpec(match="execute.sharded",
+                                             kind="device_loss",
+                                             survivors=4, times=1)):
+                    y1 = server.transform(x)
+                assert float(jnp.max(jnp.abs(y1 - y_ref))) <= 1e-5
+                assert server.session.mesh.devices.size == 4
+                st = server.stats()
+                assert st["remeshes"] == 1 and st["retries"] == 1
+                assert st["completed"] == 2 and st["failed"] == 0
+                assert s.registry.value("serve.remesh") == 1
+                assert s.registry.value("faults.injected.device_loss") == 1
+                # keeps serving on the survivors, no faults left
+                y2 = server.transform(x)
+                assert float(jnp.max(jnp.abs(y2 - y_ref))) <= 1e-5
+            print("DRILL_OK")
+        """)
+        assert "DRILL_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# fault-injection layer
+
+
+class TestFaultInjection:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec(match="x", kind="nope")
+
+    def test_budget_and_after(self):
+        inj = FaultInjector(FaultSpec(match="stage:*", kind="exception",
+                                      times=2, after=1))
+        inj("stage:m1:sr_gemm")  # skipped (after=1)
+        with pytest.raises(FaultError):
+            inj("stage:m1:sr_gemm")
+        with pytest.raises(FaultError):
+            inj("stage:m2:sr_gemm")
+        inj("stage:m3:sr_gemm")  # budget spent
+        assert inj.specs[0].hits == 4 and inj.specs[0].injected == 2
+        assert inj.exhausted
+
+    def test_nonmatching_names_pass(self):
+        inj = FaultInjector(FaultSpec(match="collective:*"))
+        inj("stage:m1:einsum")
+        assert inj.specs[0].hits == 0
+
+    def test_delay_uses_injected_sleep(self):
+        slept = []
+        with inject_faults(FaultSpec(match="slow", kind="delay",
+                                     delay_s=2.5),
+                           sleep=slept.append):
+            _trace.span("slow")
+        assert slept == [2.5]
+
+    def test_hook_install_restores_previous(self):
+        hook = lambda name: None
+        prev = _trace.set_fault_hook(hook)
+        try:
+            with inject_faults(FaultSpec(match="nothing")):
+                assert _trace.get_fault_hook() is not hook
+            assert _trace.get_fault_hook() is hook
+        finally:
+            _trace.set_fault_hook(prev)
+
+    def test_enabled_reports_true_with_hook_and_tracing_off(self):
+        assert not _trace.enabled()
+        with inject_faults(FaultSpec(match="nothing")):
+            assert _trace.enabled()  # call sites must reach span()
+        assert not _trace.enabled()
+
+    def test_exceptions_are_injected_failures(self):
+        from repro.runtime import InjectedFailure
+
+        assert issubclass(FaultError, InjectedFailure)
+        assert issubclass(VmemPressure, FaultError)
+        assert issubclass(DeviceLoss, FaultError)
+        assert DeviceLoss("gone", survivors=4).survivors == 4
+
+
+# ---------------------------------------------------------------------------
+# lifecycle units
+
+
+class TestRetryPolicy:
+    def test_deterministic_jitter(self):
+        p = RetryPolicy(base_delay_s=0.1, max_delay_s=1.0, jitter=0.5)
+        assert p.delay(3, token=7) == p.delay(3, token=7)
+        assert p.delay(3, token=7) != p.delay(3, token=8)
+
+    def test_bounded_exponential(self):
+        p = RetryPolicy(base_delay_s=0.1, max_delay_s=0.5, multiplier=2.0,
+                        jitter=0.0)
+        assert p.delay(1) == pytest.approx(0.1)
+        assert p.delay(2) == pytest.approx(0.2)
+        assert p.delay(10) == pytest.approx(0.5)  # capped
+
+    def test_jitter_band(self):
+        p = RetryPolicy(base_delay_s=1.0, max_delay_s=1.0, jitter=0.25)
+        for token in range(20):
+            d = p.delay(1, token)
+            assert 0.75 <= d <= 1.0
+
+
+class TestCircuitBreaker:
+    def test_state_machine(self):
+        clock = FakeClock()
+        b = CircuitBreaker(threshold=2, cooldown_s=10.0, clock=clock)
+        assert b.allow()
+        b.record_failure()
+        assert b.allow()  # one failure below threshold
+        b.record_failure()
+        assert not b.allow()  # open
+        clock.t += 10.0
+        assert b.allow() and b.state == "half_open"
+        assert b.record_success() is True  # recovery
+        assert b.state == "closed"
+        assert b.record_success() is False  # steady state
+
+    def test_half_open_probe_failure_reopens(self):
+        clock = FakeClock()
+        b = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clock)
+        b.record_failure()
+        clock.t += 5.0
+        assert b.allow() and b.state == "half_open"
+        b.record_failure()
+        assert b.state == "open" and not b.allow()
+
+
+class TestAdmission:
+    def test_queue_full_sheds(self):
+        x = _batch(n=8)
+        with obs.session("shed", enable_tracing=False) as s:
+            server, _ = _server(max_queue=1)
+            first = server.submit(x)
+            assert first is not None
+            assert server.submit(x) is None  # shed, not queued
+            with pytest.raises(Overloaded):
+                server.transform(x)
+            st = server.stats()
+            assert st["shed"] == 2 and st["admitted"] == 1
+            assert s.registry.value("serve.shed") == 2
+            done = server.drain()  # the admitted request still completes
+            assert [r.status for r in done] == ["done"]
+
+    def test_deadline_exceeded_fails_visibly(self):
+        x = _batch(n=8)
+        server, _ = _server()
+        server.transform(x)  # warm
+        with inject_faults(FaultSpec(match="serve.request",
+                                     kind="exception", times=0)):
+            with pytest.raises(DeadlineExceeded):
+                server.transform(x, deadline_s=0.0)
+        st = server.stats()
+        assert st["deadline_exceeded"] == 1 and st["failed"] == 1
+
+    def test_retry_budget_exhaustion_raises_last_error(self):
+        x = _batch(n=8)
+        server, _ = _server(retry=RetryPolicy(max_attempts=3))
+        server.transform(x)
+        with inject_faults(FaultSpec(match="serve.request",
+                                     kind="exception", times=0)):
+            with pytest.raises(FaultError):
+                server.transform(x)
+        st = server.stats()
+        assert st["failed"] == 1 and st["retries"] == 2  # 3 attempts
+
+    def test_malformed_request_fails_without_retry(self):
+        server, _ = _server()
+        with pytest.raises(ValueError):
+            server.transform(np.zeros((3, 3)))  # not (B, N1, N2, N3)
+        st = server.stats()
+        assert st["failed"] == 1 and st["retries"] == 0
+
+
+class TestSessionHooks:
+    def test_per_request_overrides_do_not_touch_session(self):
+        x = _batch(n=8)
+        sess = DxtServeSession()
+        y0 = sess.transform(x)
+        y1 = sess.transform(x, fuse=False, backend="einsum",
+                            use_pallas=False, vmem_budget=1 << 19)
+        assert float(jnp.max(jnp.abs(y1 - y0))) <= ATOL
+        assert sess.fuse is None and sess.backend is None
+        assert sess.vmem_budget is None
+        assert not sess.last_info.get("fused")
+
+    def test_rebind_mesh_single_device_noop_invalidation(self):
+        sess = DxtServeSession()
+        sess.transform(_batch(n=8))
+        assert sess.rebind_mesh(None) == 0  # no mesh -> nothing to drop
+        assert sess.mesh is None
+
+
+class TestInvalidatePlans:
+    def test_predicate_and_full_clear(self):
+        from repro.core.transforms import coefficient_matrix
+        from repro.engine import (clear_plan_cache, gemt3_planned,
+                                  invalidate_plans, plan_cache_info)
+
+        clear_plan_cache()
+        cs8 = [coefficient_matrix("dct", 8)] * 3
+        cs4 = [coefficient_matrix("dct", 4)] * 3
+        gemt3_planned(jnp.zeros((4, 8, 8, 8)), *cs8)
+        gemt3_planned(jnp.zeros((4, 4, 4, 4)), *cs4)
+        assert plan_cache_info()["entries"] == 2
+        n = invalidate_plans(lambda key, plan: key[0] == (4, 8, 8, 8))
+        assert n == 1 and plan_cache_info()["entries"] == 1
+        with obs.session("inv", enable_tracing=False) as s:
+            assert invalidate_plans() == 1
+            assert s.registry.value("plan.invalidations") == 1
+        assert plan_cache_info()["entries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SlotManager edge cases (satellite)
+
+
+class TestSlotManager:
+    def test_admit_when_full_returns_none(self):
+        sm = SlotManager(n_slots=2, max_len=8)
+        a, b = sm.admit("r1"), sm.admit("r2")
+        assert {a, b} == {0, 1}
+        assert sm.admit("r3") is None
+        assert sm.utilization == 1.0
+
+    def test_finish_recycles_slot(self):
+        sm = SlotManager(n_slots=1, max_len=8)
+        slot = sm.admit("r1")
+        sm.step(slot)
+        sm.step(slot)
+        sm.finish(slot)
+        again = sm.admit("r2")
+        assert again == slot
+        assert int(sm.pos[again]) == 0  # position reset on re-admit
+        assert sm.active[again] == "r2"
+
+    def test_double_finish_is_idempotent(self):
+        sm = SlotManager(n_slots=2, max_len=8)
+        slot = sm.admit("r1")
+        sm.finish(slot)
+        sm.finish(slot)  # must not double-free
+        assert len(sm.free) == 2
+        assert {sm.admit("a"), sm.admit("b")} == {0, 1}
+        assert sm.admit("c") is None
+
+    def test_utilization_accounting(self):
+        sm = SlotManager(n_slots=4, max_len=8)
+        assert sm.utilization == 0.0
+        slots = [sm.admit(i) for i in range(3)]
+        assert sm.utilization == pytest.approx(0.75)
+        sm.finish(slots[0])
+        assert sm.utilization == pytest.approx(0.5)
