@@ -11,21 +11,29 @@ scores collective bytes and the executor runs the per-shard schedule inside
 pass re-enters the engine — the X-cotangent as the derived adjoint plan
 (transposed coefficients, reversed order; §2.2's orthonormality makes it
 the inverse transform) and the coefficient cotangents as rank-k SR-GEMM
-updates.  See ``docs/engine.md`` and ``docs/distributed.md``; the
+updates.  Fused adjoint since PR 8: the backward walk runs as chain
+kernels — the recompute prefix, the cotangent chain (intermediates
+emitted from the launch that produces them) and the three coefficient
+cotangents collapse from eight launches to as few as three
+(``plan_adjoint_chain`` extends the pair/triple fusion byte model to the
+backward).  See ``docs/engine.md`` and ``docs/distributed.md``; the
 paper-section→module map is in ``docs/architecture.md``.
 """
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FUSE_MODES,
-                   FusedPairPlan, FusedTriplePlan, GemtPlan,
-                   SHARDED_EINSUM_BREAKEVEN_MACS, StagePlan, build_plan,
-                   derive_adjoint_plan, fused3_tile_sizes, fused3_vmem_bytes,
-                   fused_tile_sizes, fused_vmem_bytes, macs_for_order,
-                   mesh_axis_size, normalize_axes, order_costs,
+                   AdjointChainPlan, FusedPairPlan, FusedTriplePlan,
+                   GemtPlan, SHARDED_EINSUM_BREAKEVEN_MACS, StagePlan,
+                   build_plan, chain3_tile_sizes, chain3_vmem_bytes,
+                   chain_tile_sizes, chain_vmem_bytes, derive_adjoint_plan,
+                   fused3_tile_sizes, fused3_vmem_bytes, fused_tile_sizes,
+                   fused_vmem_bytes, macs_for_order, mesh_axis_size,
+                   normalize_axes, order_costs, plan_adjoint_chain,
                    plan_hbm_bytes, refresh_fused_pair, refresh_fused_triple,
                    sparsity_signature, stage_hbm_bytes,
                    staged_pair_hbm_bytes)
-from .lower import (coeff_grad_backend, lower_coeff_grad, lower_fused_pair,
-                    lower_fused_triple, lower_sharded_stage, lower_stage,
-                    mode_fold, mode_unfold)
+from .lower import (coeff_grad_backend, lower_chain_pair, lower_chain_triple,
+                    lower_coeff_grad, lower_coeff_grad_batch,
+                    lower_fused_pair, lower_fused_triple,
+                    lower_sharded_stage, lower_stage, mode_fold, mode_unfold)
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, default_cache_path, make_fused3_key,
                        make_fused_key, make_key)
@@ -36,15 +44,17 @@ from .executor import (clear_plan_cache, default_mode_axes, execute,
 
 __all__ = [
     "DEFAULT_ESOP_THRESHOLD", "DEFAULT_VMEM_BUDGET", "FUSE_MODES",
-    "FusedPairPlan", "FusedTriplePlan", "GemtPlan",
+    "AdjointChainPlan", "FusedPairPlan", "FusedTriplePlan", "GemtPlan",
     "SHARDED_EINSUM_BREAKEVEN_MACS", "StagePlan", "build_plan",
-    "derive_adjoint_plan",
+    "chain3_tile_sizes", "chain3_vmem_bytes", "chain_tile_sizes",
+    "chain_vmem_bytes", "derive_adjoint_plan",
     "fused3_tile_sizes", "fused3_vmem_bytes", "fused_tile_sizes",
     "fused_vmem_bytes", "macs_for_order", "mesh_axis_size", "normalize_axes",
-    "order_costs", "plan_hbm_bytes",
+    "order_costs", "plan_adjoint_chain", "plan_hbm_bytes",
     "refresh_fused_pair", "refresh_fused_triple", "sparsity_signature",
     "stage_hbm_bytes", "staged_pair_hbm_bytes",
-    "coeff_grad_backend", "lower_coeff_grad",
+    "coeff_grad_backend", "lower_chain_pair", "lower_chain_triple",
+    "lower_coeff_grad", "lower_coeff_grad_batch",
     "lower_fused_pair", "lower_fused_triple", "lower_sharded_stage",
     "lower_stage", "mode_fold", "mode_unfold",
     "AutotuneCache", "autotune_fused", "autotune_fused3", "autotune_gemm",

@@ -47,45 +47,51 @@ def default_cache_path() -> str:
                         "autotune.json")
 
 
-def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "") -> str:
-    """Autotune-cache key for a staged GEMM (cache version v2).
+def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "",
+             adjoint: bool = False) -> str:
+    """Autotune-cache key for a staged GEMM (cache version v3).
 
-    Adjoint stages (the differentiable engine's backward pass contracts
-    against ``C_sᵀ``) deliberately hit the **same** cache: the key is pure
-    shape/dtype/kind/structure, so a transposed problem that matches a
-    forward one — e.g. any square orthonormal DXT stage, whose transposed
-    nonzero structure equals the forward one — reuses its tiles for free.
-    The v2 bump orphans pre-differentiable v1 entries: their timings were
-    measured against the unwrapped kernel dispatch, and the VJP-safe
-    wrappers changed the measured object.
+    ``adjoint`` gives the backward pass its own tuning role: earlier
+    versions let adjoint stages hit the forward entries ("a transposed
+    square problem matches a forward one"), but the measured dispatch is
+    not the same — the adjoint contracts against ``C_sᵀ``, whose *column*
+    zero structure drives a different ESOP compaction, and the backward
+    runs the stage inside the chain/recompute walk with different operand
+    residency.  Forward-tuned tiles replaying for the adjoint was a live
+    bug (tile-sharing), so the role is part of the key and the v3 bump
+    orphans every v2 entry that was written without one.
     """
-    return f"v2:{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{sig}"
+    role = "adj" if adjoint else "fwd"
+    return f"v3:{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{role}|{sig}"
 
 
 def make_fused_key(u: int, na: int, ka: int, nb: int, kb: int,
                    dtype, sig: str = "",
-                   vmem_budget: int | None = None) -> str:
-    """Autotune-cache key for the fused pair kernel (cache version v3).
+                   vmem_budget: int | None = None,
+                   adjoint: bool = False) -> str:
+    """Autotune-cache key for the fused pair kernel (cache version v4).
 
     The VMEM budget is part of the problem, exactly as in the plan cache's
     ``vb=`` component: tiles tuned under a roomy budget must never replay
     under a stricter one (the budget filter would not re-run on a cache
-    hit); the v2 bump added it.  v3 orphans pre-differentiable entries for
-    the same reason as :func:`make_key`'s v2: the VJP-safe wrappers
-    changed the measured dispatch.
+    hit).  The v4 bump adds the forward/adjoint role — see
+    :func:`make_key` — and orphans role-less v3 entries.
     """
-    return (f"fused:v3:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
-            f"|{sig}|vb{vmem_budget}")
+    role = "adj" if adjoint else "fwd"
+    return (f"fused:v4:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
+            f"|{role}|{sig}|vb{vmem_budget}")
 
 
 def make_fused3_key(u: int, na: int, ka: int, nb: int, kb: int,
                     nc: int, kc: int, dtype, sig: str = "",
-                    vmem_budget: int | None = None) -> str:
-    """Autotune-cache key for the whole-transform megakernel (budget-keyed
-    from day one; v2 orphans pre-differentiable timings — see
-    :func:`make_fused_key`)."""
-    return (f"fused3:v2:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
-            f"|{jnp.dtype(dtype).name}|{sig}|vb{vmem_budget}")
+                    vmem_budget: int | None = None,
+                    adjoint: bool = False) -> str:
+    """Autotune-cache key for the whole-transform megakernel (v3 adds the
+    forward/adjoint role and orphans role-less v2 entries — see
+    :func:`make_key`)."""
+    role = "adj" if adjoint else "fwd"
+    return (f"fused3:v3:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
+            f"|{jnp.dtype(dtype).name}|{role}|{sig}|vb{vmem_budget}")
 
 
 class AutotuneCache:
@@ -191,15 +197,18 @@ def autotune_gemm(
     max_steps: int = 6,
     reps: int = 2,
     use_pallas: bool | None = None,
+    adjoint: bool = False,
 ) -> tuple[int, int, int]:
     """Hill-climb (bm, bn, bk) for ``x @ c`` under dispatch ``kind``.
 
     Returns the best block sizes; a cache hit skips all measurement.
+    ``adjoint`` selects the backward tuning role (its own cache entries —
+    see :func:`make_key`).
     """
     m, kdim = x.shape
     n = c.shape[1]
     cache = cache if cache is not None else AutotuneCache()
-    key = make_key(m, n, kdim, x.dtype, kind, sig)
+    key = make_key(m, n, kdim, x.dtype, kind, sig, adjoint=adjoint)
     knobs_live = use_pallas is True or ops.on_tpu()
     hit = cache.get(key)
     # An untuned entry (defaults recorded off-TPU) must not suppress real
@@ -275,6 +284,7 @@ def autotune_fused(
     reps: int = 2,
     use_pallas: bool | None = None,
     vmem_budget: int | None = None,
+    adjoint: bool = False,
 ) -> tuple[int, int, int]:
     """Hill-climb the fused kernel's ``(bu, bka, bnb)`` tile triple.
 
@@ -296,7 +306,8 @@ def autotune_fused(
     # bna/kbp are part of the problem too: a hit tuned with a different
     # pinned na tile must not leak mismatched tiles (the budget itself is
     # keyed inside make_fused_key since the v2 bump).
-    key = (make_fused_key(u, na, ka, nb, kb, dtype, sig, vmem_budget=budget)
+    key = (make_fused_key(u, na, ka, nb, kb, dtype, sig, vmem_budget=budget,
+                          adjoint=adjoint)
            + f"|bna{bna}|kbp{kbp}")
     isz = jnp.dtype(dtype).itemsize
     lo, _hi = _BOUNDS
@@ -377,6 +388,7 @@ def autotune_fused3(
     reps: int = 2,
     use_pallas: bool | None = None,
     vmem_budget: int | None = None,
+    adjoint: bool = False,
 ) -> tuple[int, int, int, int]:
     """Hill-climb the megakernel's ``(bu, bka, bnb, bnc)`` tile quadruple.
 
@@ -397,7 +409,7 @@ def autotune_fused3(
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
     cache = cache if cache is not None else AutotuneCache()
     key = (make_fused3_key(u, na, ka, nb, kb, nc, kc, dtype, sig,
-                           vmem_budget=budget)
+                           vmem_budget=budget, adjoint=adjoint)
            + f"|bna{bna}|kbp{kbp}|kcp{kcp}")
     isz = jnp.dtype(dtype).itemsize
     lo, _hi = _BOUNDS

@@ -40,12 +40,13 @@ from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, make_key)
-from .lower import (lower_coeff_grad, lower_fused_pair, lower_fused_triple,
-                    lower_sharded_stage, lower_stage)
-from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, GemtPlan,
-                   _is_traced, build_plan, derive_adjoint_plan,
-                   normalize_axes, plan_hbm_bytes, refresh_fused_pair,
-                   refresh_fused_triple)
+from .lower import (lower_chain_pair, lower_chain_triple, lower_coeff_grad,
+                    lower_coeff_grad_batch, lower_fused_pair,
+                    lower_fused_triple, lower_sharded_stage, lower_stage)
+from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET,
+                   AdjointChainPlan, GemtPlan, _is_traced, build_plan,
+                   derive_adjoint_plan, normalize_axes, plan_adjoint_chain,
+                   plan_hbm_bytes, refresh_fused_pair, refresh_fused_triple)
 
 __all__ = [
     "plan_gemt3",
@@ -62,6 +63,7 @@ __all__ = [
 
 _PLAN_CACHE: dict[tuple, GemtPlan] = {}
 _ADJ_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # forward plan key -> adjoint
+_CHAIN_PLAN_CACHE: dict[tuple, AdjointChainPlan] = {}  # backward walk fusion
 _TUNED_PLAN_CACHE: dict[tuple, GemtPlan] = {}  # post-autotune variants
 _SHARDED_FN_CACHE: dict[tuple, tuple] = {}  # plan+cs -> (jitted shard_map, infos)
 # per-array-identity digests: plan-cache hits stay cheap
@@ -130,6 +132,7 @@ def _fingerprint(c: jnp.ndarray) -> str:
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _ADJ_PLAN_CACHE.clear()
+    _CHAIN_PLAN_CACHE.clear()
     _TUNED_PLAN_CACHE.clear()
     _SHARDED_FN_CACHE.clear()
 
@@ -178,9 +181,15 @@ def invalidate_plans(predicate=None, *, mesh=None) -> int:
             if key[0] in dropped:
                 del _ADJ_PLAN_CACHE[key]
                 dropped.add(adj.key)  # sharded VJP fns key off the adjoint
+        for key in list(_CHAIN_PLAN_CACHE):
+            if key[0] in dropped or key[1] in dropped:
+                del _CHAIN_PLAN_CACHE[key]
+        vjp_prefixes = ("vjp_prefix", "vjp_chain", "vjp_rec_chain",
+                        "vjp_adj_chain", "vjp_adj_tail", "vjp_coeff_batch",
+                        "vjp_coeff", "vjp_fused_walk")
         for cache in (_TUNED_PLAN_CACHE, _SHARDED_FN_CACHE):
             for key in list(cache):
-                pk = key[1] if key[0] in ("vjp_prefix", "vjp_chain") else key[0]
+                pk = key[1] if key[0] in vjp_prefixes else key[0]
                 if pk in dropped:
                     del cache[key]
     _metrics.inc("plan.invalidations", n)
@@ -189,6 +198,7 @@ def invalidate_plans(predicate=None, *, mesh=None) -> int:
 
 def plan_cache_info() -> dict:
     return {"entries": len(_PLAN_CACHE), "adjoint": len(_ADJ_PLAN_CACHE),
+            "chain": len(_CHAIN_PLAN_CACHE),
             "tuned": len(_TUNED_PLAN_CACHE),
             "sharded_fns": len(_SHARDED_FN_CACHE)}
 
@@ -263,7 +273,13 @@ def _autotuned_plan(
     x_dtype=jnp.float32,
 ) -> GemtPlan:
     """Replace each kernel stage's (and the fused pair's/triple's) tiles
-    with tuned ones."""
+    with tuned ones.
+
+    Adjoint plans (``key`` suffix ``|adjoint`` from ``derive_adjoint_plan``)
+    tune under their own autotune role: forward-tuned tiles must never
+    replay for the backward's transposed problems (see ``make_key``).
+    """
+    adjoint = plan.key.endswith("|adjoint")
     fused_idx = (set() if plan.fused is None
                  else {plan.fused.first, plan.fused.first + 1})
     if plan.fused3 is not None:
@@ -277,7 +293,8 @@ def _autotuned_plan(
         rows = st.rows * max(batch, 1)
         c = cs[st.mode]
         sig = _fingerprint(c)
-        key = make_key(rows, st.k, st.n, c.dtype, st.backend, sig)
+        key = make_key(rows, st.k, st.n, c.dtype, st.backend, sig,
+                       adjoint=adjoint)
         hit = cache.get(key)
         knobs_live = use_pallas is True or ops.on_tpu()
         # Warm-cache fast path (no probe allocation) — unless the entry is
@@ -290,7 +307,8 @@ def _autotuned_plan(
             # with a representative slice so shapes match the local GEMM.
             c_arg = c if int(c.shape[0]) == st.n else c[: st.n]
             bm, bn, bk = autotune_gemm(probe, c_arg, st.backend, sig=sig,
-                                       cache=cache, use_pallas=use_pallas)
+                                       cache=cache, use_pallas=use_pallas,
+                                       adjoint=adjoint)
         stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
 
     fused = plan.fused
@@ -303,7 +321,7 @@ def _autotuned_plan(
             start=(fused3.bu, fused3.bka, fused3.bnb, fused3.bnc),
             bna=fused3.bna, kbp=fused3.kbp, kcp=fused3.kcp,
             sig=":".join(_fingerprint(c) for c in (ca, cb, cc)), cache=cache,
-            use_pallas=use_pallas, vmem_budget=vmem_budget)
+            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint)
         if (bu, bka, bnb, bnc) != (fused3.bu, fused3.bka, fused3.bnb,
                                    fused3.bnc):
             fused3 = refresh_fused_triple(
@@ -317,7 +335,7 @@ def _autotuned_plan(
             start=(fused.bu, fused.bka, fused.bnb),
             bna=fused.bna, kbp=fused.kbp,
             sig=f"{_fingerprint(ca)}:{_fingerprint(cb)}", cache=cache,
-            use_pallas=use_pallas, vmem_budget=vmem_budget)
+            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint)
         if (bu, bka, bnb) != (fused.bu, fused.bka, fused.bnb):
             fused = refresh_fused_pair(
                 dataclasses.replace(fused, bu=bu, bka=bka, bnb=bnb),
@@ -624,6 +642,8 @@ def _match_cotangent(t: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
     the real part — the transpose of the real→complex embedding, matching
     jax's ``convert_element_type`` transpose rule.
     """
+    if t.dtype == like.dtype:  # hot path: no-op cast still dispatches
+        return t
     if (jnp.issubdtype(t.dtype, jnp.complexfloating)
             and not jnp.issubdtype(like.dtype, jnp.complexfloating)):
         t = jnp.real(t)
@@ -681,49 +701,330 @@ def _adjoint_plan(plan: GemtPlan, g_shape, g_dtype,
     return adj
 
 
-def _adjoint_fused_dx_wins(adj: GemtPlan, g_shape, g_dtype) -> bool:
-    """Should the backward run dX fused *in addition to* the staged prefix?
+def _chain_plan(plan: GemtPlan, adj: GemtPlan, g_shape, g_dtype, fuse,
+                vmem_budget) -> AdjointChainPlan:
+    """Derive (or fetch) the backward walk's fusion schedule.
 
-    The coefficient cotangents always need the chain intermediates
-    ``g1, g2``, so a fused adjoint launch does not replace the first two
-    staged stages — it adds a whole-transform launch on top of them.  That
-    only pays when the fused launch's modeled traffic undercuts the one
-    staged stage it saves (the chain's last): HBM-dominated serving shapes
-    usually qualify (the fused triple moves ~1/5 of the staged schedule),
-    MAC-bound ones do not.  The byte model decides, exactly as it decides
-    the forward fusion ladder.
+    Shared by the backward executor and the forward-time ``grad_*``
+    accounting, so both see the *same* decision.  Keyed off the **untuned**
+    adjoint plan — the chain tiles come from the chain's own VMEM ladder,
+    not the per-stage autotuner, and the byte-model comparison must not
+    flip between the info prediction and the execution.
     """
-    from .plan import stage_hbm_bytes
+    key = (plan.key, adj.key, tuple(g_shape), jnp.dtype(g_dtype).name,
+           fuse, vmem_budget)
+    chain = _CHAIN_PLAN_CACHE.get(key)
+    if chain is None:
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("plan.adjoint_chain",
+                             {"key": plan.key, "shape": tuple(g_shape)})
+        with sp:
+            chain = plan_adjoint_chain(plan, adj, g_shape, g_dtype,
+                                       fuse=fuse, vmem_budget=vmem_budget)
+        _CHAIN_PLAN_CACHE[key] = chain
+        _metrics.inc("plan.adjoint_chain_builds")
+        if chain.events:
+            _metrics.inc("plan.adjoint_fusion_degradations",
+                         len(chain.events))
+    return chain
 
-    if adj.fused3 is None and adj.fused is None:
-        return False
-    batch = int(g_shape[0]) if len(g_shape) == 4 else 1
-    isz = jnp.dtype(g_dtype).itemsize
-    prefix = sum(stage_hbm_bytes(st, batch, isz) for st in adj.stages[:-1])
-    for st in adj.stages[:-2]:  # inter-stage boundary round trips
-        prefix += 2 * st.rows * batch * st.k_local * isz
-    return adj.hbm_bytes_moved + prefix < adj.hbm_bytes_staged
+
+def _kernels_live(use_pallas, *arrays) -> bool:
+    """Would the chain ops dispatch the Pallas path for these operands?"""
+    return ((use_pallas is True or (use_pallas is None and ops.on_tpu()))
+            and not any(jnp.issubdtype(a.dtype, jnp.complexfloating)
+                        for a in arrays))
 
 
-def _execute_vjp(plan: GemtPlan, adj: GemtPlan, x, cs: dict, cts: dict, g,
-                 use_pallas) -> tuple:
+def _execute_vjp_composed(plan: GemtPlan, adj: GemtPlan,
+                          chain: AdjointChainPlan, x, cs: dict, cts: dict,
+                          g, use_pallas) -> tuple:
+    """The fused walk as ONE cached jit — the span-free hot path.
+
+    Same engine-lowered pieces as :func:`_execute_vjp` (on TPU every
+    ``pallas_call`` inside the program is still its own kernel launch,
+    so ``grad_launches`` accounting is identical), but a single dispatch
+    drops the per-piece Python cost and lets XLA share subexpressions
+    across the recompute / adjoint / coefficient programs.  Runs with
+    tracing enabled take the multi-dispatch walk instead so each span
+    times a real launch — a span inside a jitted body would only fire
+    at trace time.
+
+    The ``stage_infos`` are static per (plan, chain): the staged-stage
+    entries come from ``lower_stage`` at trace time, captured into a
+    cell cached next to the compiled walk.
+    """
+    wkey = ("vjp_fused_walk", plan.key, adj.key, chain.depth,
+            chain.rec_fused, use_pallas, x.ndim,
+            _fingerprint(cs[1]), _fingerprint(cs[2]), _fingerprint(cs[3]))
+    hit = _SHARDED_FN_CACHE.get(wkey)
+    if hit is None:
+        m0, m1, m2 = chain.modes
+        rec_plan = adj_plan = None
+        if chain.rec_fused:
+            ma, mb = chain.rec_modes
+            if _kernels_live(use_pallas, cs[ma], cs[mb]):
+                rt = chain.rec_tiles
+                rec_plan = ops.esop_plan_cached(cs[ma], rt[3], rt[1])
+        if chain.depth == 3:
+            if _kernels_live(use_pallas, cts[m0], cts[m1], cts[m2]):
+                t3 = chain.tiles
+                adj_plan = ops.esop_plan_cached(cts[m0], t3[4], t3[1])
+        elif _kernels_live(use_pallas, cts[m0], cts[m1]):
+            t2 = chain.tiles
+            adj_plan = ops.esop_plan_cached(cts[m0], t2[3], t2[1])
+        infos_cell: list = []
+
+        def walk_body(x_, g_, c1_, c2_, c3_, t1_, t2_, t3_):
+            csd = {1: c1_, 2: c2_, 3: c3_}
+            ctd = {1: t1_, 2: t2_, 3: t3_}
+            infos = []
+            if chain.rec_fused:
+                y2, y1 = lower_chain_pair(
+                    x_, csd[chain.rec_modes[0]], csd[chain.rec_modes[1]],
+                    chain.rec_modes[0], chain.rec_modes[1], chain.rec_tiles,
+                    use_pallas=use_pallas, plan_a=rec_plan)
+                infos.append({"kind": "grad_recompute", "backend": "fused",
+                              "modes": chain.rec_modes,
+                              "vmem_bytes": chain.rec_vmem_bytes})
+                ys = [x_, y1, y2]
+            else:
+                ys, y = [x_], x_
+                for st in plan.stages[:-1]:
+                    y, si = lower_stage(y, csd[st.mode], st,
+                                        use_pallas=use_pallas)
+                    infos.append(dict(si, kind="grad_recompute"))
+                    ys.append(y)
+            if chain.depth == 3:
+                dx, g1, g2 = lower_chain_triple(
+                    g_, ctd[m0], ctd[m1], ctd[m2], m0, m1, m2, chain.tiles,
+                    use_pallas=use_pallas, plan_a=adj_plan)
+                infos.append({"kind": "grad_x", "backend": "fused",
+                              "modes": chain.modes,
+                              "vmem_bytes": chain.vmem_bytes})
+            else:
+                g2, g1 = lower_chain_pair(
+                    g_, ctd[m0], ctd[m1], m0, m1, chain.tiles,
+                    use_pallas=use_pallas, plan_a=adj_plan)
+                infos.append({"kind": "grad_x", "backend": "fused",
+                              "modes": chain.modes[:2],
+                              "vmem_bytes": chain.vmem_bytes})
+                st = adj.stages[2]
+                dx, si = lower_stage(g2, ctd[st.mode], st,
+                                     use_pallas=use_pallas)
+                infos.append(dict(si, kind="grad_chain"))
+            dcl = lower_coeff_grad_batch(ys, [g2, g1, g_], plan.order,
+                                         use_pallas=use_pallas)
+            infos.append({"kind": "coeff_grad", "backend": "fused",
+                          "modes": plan.order})
+            if not infos_cell:
+                infos_cell.extend(infos)
+            return (dx,) + tuple(dcl)
+
+        hit = (jax.jit(walk_body), infos_cell)
+        _SHARDED_FN_CACHE[wkey] = hit
+    fn, infos = hit
+    out = fn(x, g, cs[1], cs[2], cs[3], cts[1], cts[2], cts[3])
+    dcs = {mode: out[1 + i] for i, mode in enumerate(plan.order)}
+    return out[0], dcs, list(infos)
+
+
+def _execute_vjp(plan: GemtPlan, adj: GemtPlan, chain: AdjointChainPlan, x,
+                 cs: dict, cts: dict, g, use_pallas) -> tuple:
     """Single-device backward pass.  Returns ``(dx, dcs, stage_infos)``.
 
-    Three engine-lowered pieces (see docs/engine.md "Differentiation"):
+    Three engine-lowered pieces (see docs/engine.md "Differentiation"),
+    each fused when ``chain`` (:func:`plan_adjoint_chain`) says the byte
+    model wins and the tiles fit VMEM:
 
-    1. *forward recompute* — the first two forward stages re-run staged to
-       rebuild the stage-boundary inputs ``y0=x, y1, y2`` (residuals are
-       just ``(x, C_s)``: memory-light, one extra partial forward);
-    2. *adjoint chain* — the X-cotangent as the planned adjoint GEMT over
-       ``C_sᵀ`` in reversed order.  The staged prefix stages always run
-       (their intermediates ``g1, g2`` feed the coefficient cotangents);
-       dX additionally takes the fused launch only when the byte model
-       says the fused traffic beats the one staged stage it replaces
-       (:func:`_adjoint_fused_dx_wins`), else one staged walk yields
-       everything with no duplicated work;
+    1. *forward recompute* — the first two forward stages rebuild the
+       stage-boundary inputs ``y0=x, y1, y2`` (residuals are just
+       ``(x, C_s)``): one chain-pair launch when ``chain.rec_fused``,
+       else two staged launches;
+    2. *adjoint chain* — ``dX = g ×C₃ᵀ ×C₂ᵀ ×C₁ᵀ`` with the stage-boundary
+       cotangents ``g1, g2`` emitted from the same launch (depth 3: one
+       chain-triple launch; depth 2: a chain-pair launch plus one staged
+       tail stage; depth 0: the legacy staged walk);
     3. *coefficient cotangents* — ``dC_s = unfold(y_{i-1})ᵀ @ unfold(g_i)``
-       rank-k SR-GEMM updates pairing each forward boundary with the
-       matching chain cotangent.
+       as one batched multi-output launch (staged walk: three rank-k
+       launches).
+
+    Tracers (an outer jit differentiating through us) take the staged
+    walk: the fused programs are built host-side around precomputed ESOP
+    schedules, which a traced coefficient cannot provide.
+
+    With tracing disabled the pieces run as ONE composed jit
+    (:func:`_execute_vjp_composed`) — same launches, one dispatch; the
+    multi-dispatch walk below exists so spans time real launches.
+    """
+    if chain.depth < 2 or _is_traced(x, g, *cs.values(), *cts.values()):
+        return _execute_vjp_staged(plan, adj, x, cs, cts, g, use_pallas)
+    if not _trace.enabled():
+        # hot path: the whole walk as one dispatch (identical launches)
+        return _execute_vjp_composed(plan, adj, chain, x, cs, cts, g,
+                                     use_pallas)
+
+    infos = []
+    # --- forward recompute: y1, y2 ---
+    if chain.rec_fused:
+        ma, mb = chain.rec_modes
+        rkey = ("vjp_rec_chain", plan.key, chain.rec_tiles, use_pallas,
+                x.ndim, _fingerprint(cs[ma]), _fingerprint(cs[mb]))
+        fn = _SHARDED_FN_CACHE.get(rkey)
+        if fn is None:
+            rt = chain.rec_tiles
+            plan_a = (ops.esop_plan_cached(cs[ma], rt[3], rt[1])
+                      if _kernels_live(use_pallas, cs[ma], cs[mb]) else None)
+
+            def rec_body(x_, ca, cb, _m=(ma, mb), _t=rt, _p=plan_a):
+                return lower_chain_pair(x_, ca, cb, _m[0], _m[1], _t,
+                                        use_pallas=use_pallas, plan_a=_p)
+
+            fn = jax.jit(rec_body)
+            _SHARDED_FN_CACHE[rkey] = fn
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("grad.recompute:fused",
+                             {"modes": chain.rec_modes,
+                              "vmem_bytes": chain.rec_vmem_bytes})
+        with sp:
+            y2, y1 = fn(x, cs[ma], cs[mb])
+        infos.append({"kind": "grad_recompute", "backend": "fused",
+                      "modes": chain.rec_modes,
+                      "vmem_bytes": chain.rec_vmem_bytes})
+        ys = [x, y1, y2]
+    else:
+        ys = [x]
+        y = x
+        for st in plan.stages[:-1]:
+            sp = _trace.NULL_SPAN
+            if _trace.enabled():
+                sp = _trace.span(f"grad.recompute:m{st.mode}",
+                                 {"mode": st.mode, "backend": st.backend,
+                                  "macs": st.macs})
+            with sp:
+                y, si = lower_stage(y, cs[st.mode], st,
+                                    use_pallas=use_pallas)
+            si["kind"] = "grad_recompute"
+            infos.append(si)
+            ys.append(y)
+
+    # --- adjoint chain: dx (+ emitted cotangents g1, g2) ---
+    m0, m1, m2 = chain.modes
+    if chain.depth == 3:
+        akey = ("vjp_adj_chain", adj.key, chain.tiles, use_pallas, g.ndim,
+                _fingerprint(cts[m0]), _fingerprint(cts[m1]),
+                _fingerprint(cts[m2]))
+        fn = _SHARDED_FN_CACHE.get(akey)
+        if fn is None:
+            t3 = chain.tiles
+            plan_a = (ops.esop_plan_cached(cts[m0], t3[4], t3[1])
+                      if _kernels_live(use_pallas, cts[m0], cts[m1],
+                                       cts[m2]) else None)
+
+            def adj_body(g_, c0, c1, c2, _m=(m0, m1, m2), _t=t3,
+                         _p=plan_a):
+                return lower_chain_triple(g_, c0, c1, c2, _m[0], _m[1],
+                                          _m[2], _t, use_pallas=use_pallas,
+                                          plan_a=_p)
+
+            fn = jax.jit(adj_body)
+            _SHARDED_FN_CACHE[akey] = fn
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("grad.x:fused",
+                             {"modes": chain.modes, "depth": 3,
+                              "vmem_bytes": chain.vmem_bytes})
+        with sp:
+            dx, g1, g2 = fn(g, cts[m0], cts[m1], cts[m2])
+        infos.append({"kind": "grad_x", "backend": "fused",
+                      "modes": chain.modes, "vmem_bytes": chain.vmem_bytes})
+        gs = [g, g1, g2]
+    else:  # depth == 2: chain pair + one staged tail stage
+        akey = ("vjp_adj_chain", adj.key, chain.tiles, use_pallas, g.ndim,
+                _fingerprint(cts[m0]), _fingerprint(cts[m1]))
+        fn = _SHARDED_FN_CACHE.get(akey)
+        if fn is None:
+            t2 = chain.tiles
+            plan_a = (ops.esop_plan_cached(cts[m0], t2[3], t2[1])
+                      if _kernels_live(use_pallas, cts[m0], cts[m1])
+                      else None)
+
+            def adj_body(g_, c0, c1, _m=(m0, m1), _t=t2, _p=plan_a):
+                return lower_chain_pair(g_, c0, c1, _m[0], _m[1], _t,
+                                        use_pallas=use_pallas, plan_a=_p)
+
+            fn = jax.jit(adj_body)
+            _SHARDED_FN_CACHE[akey] = fn
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span("grad.x:fused",
+                             {"modes": chain.modes[:2], "depth": 2,
+                              "vmem_bytes": chain.vmem_bytes})
+        with sp:
+            g2, g1 = fn(g, cts[m0], cts[m1])
+        infos.append({"kind": "grad_x", "backend": "fused",
+                      "modes": chain.modes[:2],
+                      "vmem_bytes": chain.vmem_bytes})
+        st = adj.stages[2]
+        tkey = ("vjp_adj_tail", adj.key, use_pallas, g.ndim,
+                _fingerprint(cts[st.mode]))
+        hit = _SHARDED_FN_CACHE.get(tkey)
+        if hit is None:
+            si_cell: dict = {}
+
+            def tail_body(g2_, _c=cts[st.mode], _st=st):
+                # eager lower_stage pays pad/crop dispatch per call; the
+                # jit replays one cached program.  The stage info is
+                # static metadata — captured at trace time, reused after.
+                y_, si_ = lower_stage(g2_, _c, _st, use_pallas=use_pallas)
+                si_cell.update(si_)
+                return y_
+
+            hit = (jax.jit(tail_body), si_cell)
+            _SHARDED_FN_CACHE[tkey] = hit
+        tail_fn, tail_si = hit
+        sp = _trace.NULL_SPAN
+        if _trace.enabled():
+            sp = _trace.span(f"grad.chain:m{st.mode}",
+                             {"mode": st.mode, "backend": st.backend,
+                              "macs": st.macs})
+        with sp:
+            dx = tail_fn(g2)
+        infos.append(dict(tail_si, kind="grad_chain"))
+        gs = [g, g1, g2]
+
+    # --- coefficient cotangents: one batched multi-output launch ---
+    ckey = ("vjp_coeff_batch", plan.key, use_pallas, x.ndim)
+    fn = _SHARDED_FN_CACHE.get(ckey)
+    if fn is None:
+        order = plan.order
+
+        def coeff_body(y0, y1_, y2_, g0, g1_, g2_, _o=order):
+            # pairing as in the staged walk: dC_{order[i]} couples the
+            # stage-i input ys[i] with the matching cotangent gs[2-i]
+            return tuple(lower_coeff_grad_batch(
+                [y0, y1_, y2_], [g2_, g1_, g0], _o,
+                use_pallas=use_pallas))
+
+        fn = jax.jit(coeff_body)
+        _SHARDED_FN_CACHE[ckey] = fn
+    sp = _trace.NULL_SPAN
+    if _trace.enabled():
+        sp = _trace.span("grad.coeff:batched", {"modes": plan.order})
+    with sp:
+        dcl = fn(ys[0], ys[1], ys[2], gs[0], gs[1], gs[2])
+    infos.append({"kind": "coeff_grad", "backend": "fused",
+                  "modes": plan.order})
+    dcs = {mode: dcl[i] for i, mode in enumerate(plan.order)}
+    return dx, dcs, infos
+
+
+def _execute_vjp_staged(plan: GemtPlan, adj: GemtPlan, x, cs: dict,
+                        cts: dict, g, use_pallas) -> tuple:
+    """The legacy eight-launch staged backward walk (``fuse=False``, traced
+    inputs, or a declined chain plan).  Returns ``(dx, dcs, stage_infos)``.
     """
     infos = []
     ys = [x]
@@ -741,45 +1042,20 @@ def _execute_vjp(plan: GemtPlan, adj: GemtPlan, x, cs: dict, cts: dict, g,
         ys.append(y)
 
     gs = [g]
-    if _adjoint_fused_dx_wins(adj, g.shape, g.dtype):
+    gi = g
+    for st in adj.stages:
         sp = _trace.NULL_SPAN
         if _trace.enabled():
-            sp = _trace.span("grad.x:fused", {"order": adj.order})
+            sp = _trace.span(f"grad.x:m{st.mode}",
+                             {"mode": st.mode, "backend": st.backend,
+                              "macs": st.macs})
         with sp:
-            dx, ainfo = execute_with_info(adj, g, cts[1], cts[2], cts[3],
-                                          use_pallas=use_pallas)
-        for si in ainfo["stages"]:
-            si = dict(si)
-            si["kind"] = "grad_x"
-            infos.append(si)
-        gi = g
-        for st in adj.stages[:-1]:
-            sp = _trace.NULL_SPAN
-            if _trace.enabled():
-                sp = _trace.span(f"grad.chain:m{st.mode}",
-                                 {"mode": st.mode, "backend": st.backend,
-                                  "macs": st.macs})
-            with sp:
-                gi, si = lower_stage(gi, cts[st.mode], st,
-                                     use_pallas=use_pallas)
-            si["kind"] = "grad_chain"
-            infos.append(si)
-            gs.append(gi)
-    else:
-        gi = g
-        for st in adj.stages:
-            sp = _trace.NULL_SPAN
-            if _trace.enabled():
-                sp = _trace.span(f"grad.x:m{st.mode}",
-                                 {"mode": st.mode, "backend": st.backend,
-                                  "macs": st.macs})
-            with sp:
-                gi, si = lower_stage(gi, cts[st.mode], st,
-                                     use_pallas=use_pallas)
-            si["kind"] = "grad_x"
-            infos.append(si)
-            gs.append(gi)
-        dx = gs.pop()  # gs keeps [g, g1, g2]
+            gi, si = lower_stage(gi, cts[st.mode], st,
+                                 use_pallas=use_pallas)
+        si["kind"] = "grad_x"
+        infos.append(si)
+        gs.append(gi)
+    dx = gs.pop()  # gs keeps [g, g1, g2]
 
     dcs = {}
     for i, mode in enumerate(plan.order):
@@ -910,21 +1186,33 @@ def _execute_vjp_sharded(plan: GemtPlan, adj: GemtPlan, mesh, x, cs: dict,
     g1, g2, dx = hit[0](g, cts[1], cts[2], cts[3])
     infos = prefix_infos + [dict(si) for si in hit[1]]
 
-    ys = [x, y1, y2]
-    gs = [g, g1, g2]
-    dcs = {}
-    for i, mode in enumerate(plan.order):
-        # Global-level rank-k update: the chain/recompute arrays are global
-        # (sharded) outputs, so the contraction over their rows is complete
-        # — the cross-device sum GSPMD inserts here is the coefficient
-        # cotangent's psum (coefficients are replicated, their cotangents
-        # must be too).  Backend pinned to einsum: these operands live
-        # *outside* shard_map, where only dot_general is partitionable —
-        # a pallas_call on sharded global arrays has no SPMD rule.
-        dc, ci = lower_coeff_grad(ys[i], gs[2 - i], mode,
-                                  use_pallas=use_pallas, backend="einsum")
-        infos.append(ci)
-        dcs[mode] = dc
+    # Global-level rank-k updates: the chain/recompute arrays are global
+    # (sharded) outputs, so the contraction over their rows is complete —
+    # the cross-device sum GSPMD inserts here is the coefficient
+    # cotangent's psum (coefficients are replicated, their cotangents must
+    # be too).  Backend pinned to einsum: these operands live *outside*
+    # shard_map, where only dot_general is partitionable — a pallas_call
+    # on sharded global arrays has no SPMD rule.  All three run inside one
+    # cached jitted program (one dispatch; GSPMD partitions each einsum).
+    okey = ("vjp_coeff", plan.key, use_pallas, x.ndim)
+    cfn = _SHARDED_FN_CACHE.get(okey)
+    if cfn is None:
+        order = plan.order
+
+        def coeff_body(y0, y1_, y2_, g0, g1_, g2_, _o=order):
+            ys_l = (y0, y1_, y2_)
+            gs_l = (g0, g1_, g2_)
+            return tuple(lower_coeff_grad(ys_l[i], gs_l[2 - i], mode,
+                                          use_pallas=use_pallas,
+                                          backend="einsum")[0]
+                         for i, mode in enumerate(_o))
+
+        cfn = jax.jit(coeff_body)
+        _SHARDED_FN_CACHE[okey] = cfn
+    dcl = cfn(x, y1, y2, g, g1, g2)
+    infos.append({"kind": "coeff_grad", "backend": "einsum",
+                  "modes": plan.order, "batched": True})
+    dcs = {mode: dcl[i] for i, mode in enumerate(plan.order)}
     return dx, dcs, infos
 
 
@@ -959,6 +1247,9 @@ def _vjp_backward(plan: GemtPlan, mesh, x, c1, c2, c3, g, *, use_pallas,
                             esop_threshold=esop_threshold,
                             block_sizes=block_sizes, fuse=fuse,
                             vmem_budget=vmem_budget, mesh=mesh)
+        # The chain plan derives from the untuned adjoint (see _chain_plan)
+        # so the forward-time grad_* prediction and the execution agree.
+        chain = _chain_plan(plan, adj, g.shape, g.dtype, fuse, vmem_budget)
         if autotune and not _is_traced(c1, c2, c3):
             batch = ((int(g.shape[0]) if g.ndim == 4 else 1)
                      // max(adj.batch_shards, 1))
@@ -971,7 +1262,7 @@ def _vjp_backward(plan: GemtPlan, mesh, x, c1, c2, c3, g, *, use_pallas,
             dx, dcs, infos = _execute_vjp_sharded(plan, adj, mesh, x, cs,
                                                   cts, g, use_pallas)
         else:
-            dx, dcs, infos = _execute_vjp(plan, adj, x, cs, cts, g,
+            dx, dcs, infos = _execute_vjp(plan, adj, chain, x, cs, cts, g,
                                           use_pallas)
         _metrics.inc("grad.backward_calls")
         for k, v in _count_grad_dispatch(infos).items():
@@ -982,32 +1273,30 @@ def _vjp_backward(plan: GemtPlan, mesh, x, c1, c2, c3, g, *, use_pallas,
                 _match_cotangent(dcs[3], c3))
 
 
-def _grad_info_fields(plan: GemtPlan, adj: GemtPlan, g_shape, g_dtype) -> dict:
+def _grad_info_fields(plan: GemtPlan, adj: GemtPlan,
+                      chain: AdjointChainPlan, g_shape, g_dtype) -> dict:
     """Forward-time ``grad_*`` accounting: what the backward pass will run.
 
-    Derived from the (cached) adjoint plan, so ``info`` can prove — before
-    any gradient is pulled — that the backward lowers through the engine
-    (nonzero kernel counters, no silent einsum fallback on kernel-capable
-    shapes).  ``grad_stats()`` counts actual backward executions.
+    Derived from the (cached) adjoint + chain plans, so ``info`` can prove
+    — before any gradient is pulled — that the backward lowers through the
+    engine (nonzero kernel counters, no silent einsum fallback on
+    kernel-capable shapes).  The stage counters are computed by building
+    the *predicted* ``stage_infos`` list and feeding it through the same
+    :func:`_count_grad_dispatch` the backward uses — one eager backward
+    call moves the ``grad.*`` counters by exactly these amounts.
+    ``grad_stats()`` counts actual backward executions.  (A backward
+    pulled under an outer jit takes the staged walk instead — see
+    ``_execute_vjp``.)
     """
     from .lower import coeff_grad_backend
 
-    fused_dx = _adjoint_fused_dx_wins(adj, g_shape, g_dtype)
-    if fused_dx and adj.fused3 is not None:
-        executed = (f"fused{(adj.fused3.mode_a, adj.fused3.mode_b, adj.fused3.mode_c)}",)
-    elif fused_dx and adj.fused is not None:
-        fp = adj.fused
-        executed = tuple(
-            f"fused{(fp.mode_a, fp.mode_b)}" if i == fp.first else
-            adj.stages[i].backend
-            for i in range(3) if i not in (fp.first + 1,))
-    else:
-        executed = adj.backends
     batch = int(g_shape[0]) if len(g_shape) == 4 else 1
     dims = dict(zip((1, 2, 3), plan.in_shape))
     out_dims = dict(zip((1, 2, 3), plan.out_shape))
     sharded = (any(a is not None for a in plan.axes)
                or plan.batch_axis is not None)
+    fused_walk = chain.depth >= 2 and not sharded
+
     coeff_backends = []
     coeff_macs = 0
     for mode in (1, 2, 3):
@@ -1018,25 +1307,58 @@ def _grad_info_fields(plan: GemtPlan, adj: GemtPlan, g_shape, g_dtype) -> dict:
             if m != mode:
                 rows *= out_dims[m] if plan.order.index(m) < plan.order.index(mode) else dims[m]
         # Sharded plans pin the coefficient cotangent to einsum (global
-        # arrays outside shard_map — see _execute_vjp_sharded).
+        # arrays outside shard_map — see _execute_vjp_sharded); the fused
+        # walk batches all three into one multi-output launch.
         coeff_backends.append(
-            "einsum" if sharded else
+            "fused" if fused_walk else "einsum" if sharded else
             coeff_grad_backend(rows, dims[mode], out_dims[mode], g_dtype))
         coeff_macs += rows * dims[mode] * out_dims[mode]
-    kernel = (sum(1 for b in executed if b != "einsum")
-              + sum(1 for b in coeff_backends if b != "einsum"))
-    einsum = (sum(1 for b in executed if b == "einsum")
-              + sum(1 for b in coeff_backends if b == "einsum"))
+
+    predicted = []  # mirrors the backward's stage_infos, entry for entry
+    if fused_walk:
+        if chain.rec_fused:
+            predicted.append({"kind": "grad_recompute", "backend": "fused"})
+        else:
+            predicted += [{"kind": "grad_recompute", "backend": st.backend}
+                          for st in plan.stages[:2]]
+        predicted.append({"kind": "grad_x", "backend": "fused"})
+        if chain.depth == 3:
+            executed = (f"fused{chain.modes}",)
+        else:
+            executed = (f"fused{chain.modes[:2]}", adj.stages[2].backend)
+            predicted.append({"kind": "grad_chain",
+                              "backend": adj.stages[2].backend})
+        predicted.append({"kind": "coeff_grad", "backend": "fused"})
+    else:
+        executed = adj.backends
+        predicted += [{"kind": "grad_recompute", "backend": st.backend}
+                      for st in plan.stages[:2]]
+        predicted += [{"kind": "grad_x", "backend": st.backend}
+                      for st in adj.stages]
+        if sharded:
+            predicted.append({"kind": "coeff_grad", "backend": "einsum"})
+        else:
+            predicted += [{"kind": "coeff_grad", "backend": b}
+                          for b in coeff_backends]
+    counts = _count_grad_dispatch(predicted)
     return {
         "grad_order": adj.order,
         "grad_backends": adj.backends,
         "grad_backends_executed": executed,
         "grad_coeff_backends": tuple(coeff_backends),
-        "grad_kernel_stages": kernel,
-        "grad_einsum_stages": einsum,
-        "grad_fused": fused_dx,
+        "grad_kernel_stages": counts["kernel_stages"],
+        "grad_einsum_stages": counts["einsum_stages"],
+        "grad_coeff_kernel": counts["coeff_kernel"],
+        "grad_coeff_einsum": counts["coeff_einsum"],
+        "grad_fused_launches": counts["fused_launches"],
+        "grad_launches": chain.launches if fused_walk else len(predicted),
+        "grad_chain_depth": chain.depth if fused_walk else 0,
+        "grad_rec_fused": fused_walk and chain.rec_fused,
+        "grad_fused": fused_walk,
+        "grad_events": list(chain.events),
         "grad_macs": adj.macs + coeff_macs,
-        "grad_hbm_bytes_moved": adj.hbm_bytes_moved,
+        "grad_hbm_bytes_moved": (chain.hbm_bytes_fused if fused_walk
+                                 else adj.hbm_bytes_staged),
         "grad_collective_bytes": adj.collective_bytes,
     }
 
@@ -1086,7 +1408,9 @@ def _execute_differentiable(plan: GemtPlan, mesh, x, c1, c2, c3, *,
                         block_sizes=grad_opts["block_sizes"],
                         fuse=grad_opts["fuse"],
                         vmem_budget=grad_opts["vmem_budget"], mesh=mesh)
-    info.update(_grad_info_fields(plan, adj, g_shape, g_dtype))
+    chain = _chain_plan(plan, adj, g_shape, g_dtype, grad_opts["fuse"],
+                        grad_opts["vmem_budget"])
+    info.update(_grad_info_fields(plan, adj, chain, g_shape, g_dtype))
     return y, info
 
 

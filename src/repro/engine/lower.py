@@ -26,8 +26,9 @@ from ..obs import trace as _trace
 from .plan import FusedPairPlan, FusedTriplePlan, StagePlan
 
 __all__ = ["mode_unfold", "mode_fold", "lower_stage", "lower_fused_pair",
-           "lower_fused_triple", "lower_sharded_stage", "lower_coeff_grad",
-           "coeff_grad_backend"]
+           "lower_fused_triple", "lower_chain_pair", "lower_chain_triple",
+           "lower_sharded_stage", "lower_coeff_grad",
+           "lower_coeff_grad_batch", "coeff_grad_backend"]
 
 # The einsum backend contracts in place (XLA folds the relayout into one
 # dot_general) instead of the unfold→matmul→fold chain, whose
@@ -297,6 +298,136 @@ def lower_fused_pair(
                   "hbm_savings": fp.hbm_savings}
     info.update(kinfo)
     return y, info
+
+
+def lower_chain_pair(
+    x: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    mode_a: int,
+    mode_b: int,
+    tiles: tuple,
+    *,
+    use_pallas: bool | None = None,
+    plan_a: tuple | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two consecutive stages as one chain launch, the inter-stage
+    intermediate emitted.  Returns ``(y, y1)`` folded back into tensor
+    modes (``y1`` has mode ``a`` at its new extent K_a, mode ``b``
+    untouched).
+
+    Deliberately span/info-free: the backward walk traces this into a
+    cached jitted program, where a span would fire once at trace time and
+    then lie — the executor wraps the *call* instead.  ``tiles`` is the
+    chain plan's ``(bu, bka, bnb, bna, kbp)``; ``plan_a`` the precomputed
+    a-side ESOP schedule (required when ``ca`` is a tracer).
+    """
+    if x.ndim not in (3, 4):
+        raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
+    axa = x.ndim - 3 + (mode_a - 1)
+    axb = x.ndim - 3 + (mode_b - 1)
+    ka, kb = ca.shape[1], cb.shape[1]
+    xm = jnp.moveaxis(x, (axb, axa), (-2, -1))
+    lead = xm.shape[:-2]
+    nb = xm.shape[-2]
+    x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
+    bu, bka, bnb, bna = tiles[0], tiles[1], tiles[2], tiles[3]
+    y3, y13, _ = ops.chain_gemt(x3, ca, cb, bu=bu, bka=bka, bnb=bnb,
+                                bna=bna, use_pallas=use_pallas,
+                                plan_a=plan_a)
+    y = jnp.moveaxis(y3.reshape(*lead, ka, kb), (-2, -1), (axa, axb))
+    y1 = jnp.moveaxis(y13.reshape(*lead, nb, ka), (-2, -1), (axb, axa))
+    return y, y1
+
+
+def lower_chain_triple(
+    x: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    cc: jnp.ndarray,
+    mode_a: int,
+    mode_b: int,
+    mode_c: int,
+    tiles: tuple,
+    *,
+    use_pallas: bool | None = None,
+    plan_a: tuple | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """All three stages as one chain launch with both intermediates
+    emitted.  Returns ``(y, y1, y2)`` folded back into tensor modes
+    (``y1``: mode ``a`` contracted; ``y2``: modes ``a`` and ``b``).
+
+    Span/info-free for the same reason as :func:`lower_chain_pair`.
+    ``tiles`` is the chain plan's ``(bu, bka, bnb, bnc, bna, kbp, kcp)``.
+    """
+    if x.ndim not in (3, 4):
+        raise ValueError(f"x must be 3D or 4D-batched, got ndim={x.ndim}")
+    off = x.ndim - 3
+    axa = off + mode_a - 1
+    axb = off + mode_b - 1
+    axc = off + mode_c - 1
+    ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    xm = jnp.moveaxis(x, (axc, axb, axa), (-3, -2, -1))
+    lead = xm.shape[:-3]
+    nc, nb = xm.shape[-3], xm.shape[-2]
+    x4 = xm.reshape(-1, *xm.shape[-3:])
+    bu, bka, bnb, bnc, bna = (tiles[0], tiles[1], tiles[2], tiles[3],
+                              tiles[4])
+    y4, y14, y24, _ = ops.chain3_gemt(x4, ca, cb, cc, bu=bu, bka=bka,
+                                      bnb=bnb, bnc=bnc, bna=bna,
+                                      use_pallas=use_pallas, plan_a=plan_a)
+    y = jnp.moveaxis(y4.reshape(*lead, ka, kb, kc), (-3, -2, -1),
+                     (axa, axb, axc))
+    y1 = jnp.moveaxis(y14.reshape(*lead, nc, nb, ka), (-3, -2, -1),
+                      (axc, axb, axa))
+    y2 = jnp.moveaxis(y24.reshape(*lead, nc, ka, kb), (-3, -2, -1),
+                      (axc, axa, axb))
+    return y, y1, y2
+
+
+def lower_coeff_grad_batch(
+    as_: list,
+    gs: list,
+    modes: tuple,
+    *,
+    use_pallas: bool | None = None,
+) -> list:
+    """All three coefficient cotangents in one batched launch.
+
+    ``as_[i]`` / ``gs[i]`` / ``modes[i]`` pair the stage-input tensor and
+    stage-output cotangent of one forward stage (same operand contract as
+    :func:`lower_coeff_grad`); the mode-unfolded rank-k products run as a
+    single stacked kernel (``ops.coeff_grad_batch``).  Span/info-free for
+    the same reason as :func:`lower_chain_pair` — the executor owns the
+    accounting.
+
+    Off-TPU (and for complex operands) the three products lower as direct
+    full-tensor contractions instead: the operand pair shares every axis
+    except the contracted mode, so one einsum per mode contracts in place
+    — no unfold/pad/stack copies of batch-sized tensors (~1.2x on CPU).
+    """
+    live = use_pallas if use_pallas is not None else ops.on_tpu()
+    if any(jnp.iscomplexobj(t) for t in (*as_, *gs)):
+        live = False
+    if live:
+        a2ds = [mode_unfold(a, m)[0] for a, m in zip(as_, modes)]
+        g2ds = [mode_unfold(g, m)[0] for g, m in zip(gs, modes)]
+        return ops.coeff_grad_batch(a2ds, g2ds, use_pallas=use_pallas)
+    out = []
+    for a, g, m in zip(as_, gs, modes):
+        ax = a.ndim - 3 + m - 1
+        shared = [chr(ord("a") + i) for i in range(a.ndim)]
+        la, lg = shared.copy(), shared.copy()
+        la[ax], lg[ax] = "n", "k"
+        spec = f"{''.join(la)},{''.join(lg)}->nk"
+        dt = jnp.result_type(a.dtype, g.dtype)
+        if jnp.issubdtype(dt, jnp.complexfloating):
+            out.append(jnp.einsum(spec, a, g).astype(dt))
+        else:
+            out.append(jnp.einsum(
+                spec, a, g,
+                preferred_element_type=jnp.float32).astype(dt))
+    return out
 
 
 def lower_fused_triple(

@@ -62,6 +62,8 @@ __all__ = [
     "GemtPlan",
     "build_plan",
     "derive_adjoint_plan",
+    "AdjointChainPlan",
+    "plan_adjoint_chain",
     "order_costs",
     "macs_for_order",
     "sparsity_signature",
@@ -69,6 +71,10 @@ __all__ = [
     "fused_vmem_bytes",
     "fused3_tile_sizes",
     "fused3_vmem_bytes",
+    "chain_tile_sizes",
+    "chain_vmem_bytes",
+    "chain3_tile_sizes",
+    "chain3_vmem_bytes",
     "refresh_fused_pair",
     "refresh_fused_triple",
     "stage_hbm_bytes",
@@ -1081,6 +1087,306 @@ def derive_adjoint_plan(
         axes=plan.axes if mesh is not None else None,
         batch_axis=plan.batch_axis if mesh is not None else None)
     return dataclasses.replace(adj, key=plan.key + "|adjoint")
+
+
+def chain_vmem_bytes(bu: int, bka: int, bnb: int, bna: int, kbp: int,
+                     itemsize: int) -> int:
+    """Modeled VMEM footprint of the chain-pair kernel at these tiles.
+
+    The fused-pair footprint plus the double-buffered ``y1`` output tile:
+    emitting the intermediate costs one extra ``(bu, bnb, bka)`` output
+    window, nothing else — the partial it is copied from already exists.
+    """
+    return (fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize)
+            + 2 * bu * bnb * bka * itemsize)
+
+
+def chain_tile_sizes(
+    rows_total: int, na: int, ka: int, nb: int, kb: int,
+    itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> tuple[int, int, int, int, int] | None:
+    """Pick ``(bu, bka, bnb, bna, kbp)`` for the chain-pair kernel, or None.
+
+    Same shrink ladder as :func:`fused_tile_sizes` under the chain
+    footprint (:func:`chain_vmem_bytes`).  No ESOP seeds: the chain's b
+    stream is dense by construction (every emitted ``y1`` block must be
+    written), so only the a-side compaction applies and the default
+    lattice is the right one.
+    """
+    kbp = kb_padded(kb)
+    tiles = {
+        "bu": _pow2_clamp(rows_total),
+        "bka": _pow2_ceil_clamp(ka),
+        "bnb": _pow2_ceil_clamp(nb, hi=32),
+        "bna": _pow2_ceil_clamp(na),
+    }
+
+    def footprint():
+        return chain_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
+                                tiles["bna"], kbp, itemsize)
+
+    while footprint() > vmem_budget:
+        shrinkable = [k for k in ("bu", "bka", "bnb", "bna") if tiles[k] > 8]
+        if not shrinkable:
+            return None
+        k = max(shrinkable, key=lambda k: tiles[k])
+        tiles[k] = 1 << ((tiles[k] - 1).bit_length() - 1)
+    return tiles["bu"], tiles["bka"], tiles["bnb"], tiles["bna"], kbp
+
+
+def chain3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
+                      kbp: int, kcp: int, itemsize: int) -> int:
+    """Modeled VMEM footprint of the chain-triple kernel at these tiles.
+
+    The megakernel footprint plus the double-buffered ``y1`` and ``y2``
+    output tiles — the price of emitting both intermediates, and what
+    makes the chain triple degrade to the pair earlier than the forward
+    triple does (the documented N=64 boundary).
+    """
+    return (fused3_vmem_bytes(bu, bka, bnb, bnc, bna, kbp, kcp, itemsize)
+            + 2 * bu * bnc * bnb * bka * itemsize
+            + 2 * bu * bnc * bka * kbp * itemsize)
+
+
+def chain3_tile_sizes(
+    rows_total: int, na: int, ka: int, nb: int, kb: int, nc: int, kc: int,
+    itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> tuple[int, int, int, int, int, int, int] | None:
+    """Pick ``(bu, bka, bnb, bnc, bna, kbp, kcp)`` for the chain triple,
+    or None — the :func:`fused3_tile_sizes` ladder under the chain
+    footprint (:func:`chain3_vmem_bytes`)."""
+    kbp, kcp = kb_padded(kb), kb_padded(kc)
+    tiles = {
+        "bu": _pow2_clamp(rows_total),
+        "bka": _pow2_ceil_clamp(ka),
+        "bnb": _pow2_ceil_clamp(nb, hi=16),
+        "bnc": _pow2_ceil_clamp(nc, hi=16),
+        "bna": _pow2_ceil_clamp(na),
+    }
+
+    def footprint():
+        return chain3_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
+                                 tiles["bnc"], tiles["bna"], kbp, kcp,
+                                 itemsize)
+
+    while footprint() > vmem_budget:
+        shrinkable = [k for k in ("bu", "bka", "bnb", "bnc", "bna")
+                      if tiles[k] > 8]
+        if not shrinkable:
+            return None
+        k = max(shrinkable, key=lambda k: tiles[k])
+        tiles[k] = 1 << ((tiles[k] - 1).bit_length() - 1)
+    return (tiles["bu"], tiles["bka"], tiles["bnb"], tiles["bnc"],
+            tiles["bna"], kbp, kcp)
+
+
+def _chain_hbm_bytes(rows_total: int, ka: int, nb: int,
+                     tiles: tuple[int, int, int, int, int],
+                     live_a: int, itemsize: int) -> int:
+    """Modeled HBM traffic of the chain-pair kernel.
+
+    The fused-pair traffic at a **dense** b stream (every slab is live —
+    the emitted intermediate forbids slab skipping) plus the single write
+    of ``y1``: the intermediate crosses HBM once as a result, against the
+    staged pair's write+transpose-read round-trip.
+    """
+    bu, bka, bnb, bna, kbp = tiles
+    t_b = _pad_up(nb, bnb) // bnb
+    u_p = _pad_up(rows_total, bu)
+    ka_p = _pad_up(ka, bka)
+    y1_bytes = u_p * t_b * bnb * ka_p * itemsize
+    return (_fused_hbm_bytes(rows_total, ka, tiles, live_a, t_b, itemsize)
+            + y1_bytes)
+
+
+def _chain3_hbm_bytes(rows_total: int, ka: int, nb: int, nc: int,
+                      tiles: tuple[int, int, int, int, int, int, int],
+                      live_a: int, itemsize: int) -> int:
+    """Modeled HBM traffic of the chain-triple kernel: megakernel traffic
+    at dense b/c streams plus the single writes of ``y1`` and ``y2``."""
+    bu, bka, bnb, bnc, bna, kbp, kcp = tiles
+    t_b = _pad_up(nb, bnb) // bnb
+    t_c = _pad_up(nc, bnc) // bnc
+    u_p = _pad_up(rows_total, bu)
+    ka_p = _pad_up(ka, bka)
+    y1_bytes = u_p * t_c * bnc * t_b * bnb * ka_p
+    y2_bytes = u_p * t_c * bnc * ka_p * kbp
+    return (_fused3_hbm_bytes(rows_total, ka, tiles, live_a, t_b, t_c,
+                              itemsize)
+            + (y1_bytes + y2_bytes) * itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdjointChainPlan:
+    """The backward walk's fusion schedule, derived from a forward plan and
+    its adjoint plan (``plan_adjoint_chain``).
+
+    ``depth`` is how many of the three adjoint stages run inside one chain
+    launch: 3 (chain triple — ``dX`` plus both cotangent intermediates in
+    one ``pallas_call``), 2 (chain pair plus one staged tail stage), or 0
+    (the walk stays on the legacy staged schedule).  ``rec_fused`` says
+    whether the forward-prefix recompute (``y1``, ``y2``) runs as one
+    chain-pair launch instead of two staged ones.  ``launches`` is the
+    predicted backward kernel-launch count including the batched
+    coefficient-cotangent launch — the number the G1 bench gates.
+    """
+
+    depth: int  # 3 | 2 fused adjoint stages, 0 = staged backward walk
+    rec_fused: bool  # recompute prefix fused into one chain-pair launch
+    launches: int  # predicted backward launches (recompute + chain + coeff)
+    modes: tuple  # adjoint stage order (= forward order reversed)
+    rec_modes: tuple  # recompute chain modes (forward order[:2])
+    tiles: tuple | None  # chain kernel tiles (None when depth == 0)
+    rec_tiles: tuple | None  # recompute chain-pair tiles
+    vmem_bytes: int  # chain kernel footprint at those tiles
+    rec_vmem_bytes: int
+    hbm_bytes_staged: int  # adjoint plan's modeled all-staged traffic
+    hbm_bytes_fused: int  # modeled chain traffic (+ staged tail at depth 2)
+    events: tuple = ()  # adjoint_fusion_degradation records
+
+
+def plan_adjoint_chain(
+    plan: GemtPlan,
+    adj: GemtPlan,
+    g_shape: tuple[int, ...],
+    g_dtype,
+    *,
+    fuse: bool | str | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> AdjointChainPlan:
+    """Extend the pair/triple fusion decision to the backward walk.
+
+    Scores fusing the adjoint chain ``dX = g ×C₃ᵀ ×C₂ᵀ ×C₁ᵀ`` into one
+    chain-triple launch (emitting the cotangent intermediates ``g1, g2``
+    for the coefficient cotangents) or a chain-pair launch plus a staged
+    tail, and fusing the forward-prefix recompute ``y1, y2`` into one
+    chain-pair launch.  The same VMEM ladder and HBM byte model as the
+    forward fusion tiers decide (``_chain_hbm_bytes`` vs the adjoint
+    plan's staged traffic), honoring the ``fuse`` knob (``False`` pins the
+    legacy staged walk; ``"pair"``/``"triple"``/``True`` force tiers).
+
+    The chain's mode assignment is **pinned to the adjoint stage order**
+    (not permutation-searched like the forward triple): the emitted
+    intermediates must be the stage-boundary cotangents, and only the
+    stage-order assignment produces them.  Sharded plans decline — the
+    chain has no collective inside, and each sharded adjoint stage needs
+    its psum_scatter (the sharded walk keeps its one-program schedule).
+    Einsum-pinned adjoint stages (complex DFT factors, tiny extents)
+    decline too: the planner already judged those modes kernel-hostile.
+    """
+    itemsize = jnp.dtype(g_dtype).itemsize
+    batch = g_shape[0] if len(g_shape) == 4 else 1
+    rows_total = max(batch, 1)
+    events: list = []
+    modes = tuple(adj.order)
+    rec_modes = (plan.order[0], plan.order[1])
+    sharded = (any(a is not None for a in plan.axes)
+               or plan.batch_axis is not None)
+
+    def declined(reason_events=()):
+        return AdjointChainPlan(
+            depth=0, rec_fused=False, launches=2 + 3 + 3, modes=modes,
+            rec_modes=rec_modes, tiles=None, rec_tiles=None, vmem_bytes=0,
+            rec_vmem_bytes=0, hbm_bytes_staged=adj.hbm_bytes_staged,
+            hbm_bytes_fused=0, events=tuple(reason_events))
+
+    if fuse is False or sharded:
+        return declined()
+    a0, a1, a2 = adj.stages
+    if a0.backend == "einsum" or a1.backend == "einsum":
+        return declined()
+
+    # Recompute-prefix feasibility is independent of the adjoint depth.
+    s0, s1 = plan.stages[0], plan.stages[1]
+    rec_rows = rows_total * plan.stages[2].n
+    rec_fused, rec_tiles, rec_vmem = False, None, 0
+    if (s0.backend != "einsum" and s1.backend != "einsum"
+            and min(rec_rows, s0.n, s0.k, s1.n, s1.k) >= MIN_KERNEL_DIM):
+        rt = chain_tile_sizes(rec_rows, s0.n, s0.k, s1.n, s1.k, itemsize,
+                              vmem_budget)
+        if rt is not None:
+            # One launch, no inter-stage round-trip: always fewer bytes
+            # than the staged recompute pair — no byte compare needed.
+            rec_fused, rec_tiles = True, rt
+            rec_vmem = chain_vmem_bytes(*rt, itemsize)
+
+    def live_a_blocks(stage, bna, bka):
+        dense = ((_pad_up(stage.n, bna) // bna)
+                 * (_pad_up(stage.k, bka) // bka))
+        return max(1, round(dense * (1.0 - stage.zero_block_frac)))
+
+    # Depth 3: the whole adjoint chain in one chain-triple launch.
+    if (fuse in (None, True, "triple") and a2.backend != "einsum"
+            and min(a0.n, a0.k, a1.n, a1.k, a2.n, a2.k) >= MIN_KERNEL_DIM):
+        t3 = chain3_tile_sizes(rows_total, a0.n, a0.k, a1.n, a1.k,
+                               a2.n, a2.k, itemsize, vmem_budget)
+        if t3 is None:
+            events.append({
+                "kind": "adjoint_fusion_degradation", "from": "triple",
+                "reason": "vmem_budget",
+                "vmem_bytes_min": chain3_vmem_bytes(
+                    8, 8, 8, 8, 8, kb_padded(a1.k), kb_padded(a2.k),
+                    itemsize),
+                "vmem_budget": vmem_budget,
+            })
+        else:
+            fused_bytes = _chain3_hbm_bytes(
+                rows_total, a0.k, a1.n, a2.n, t3,
+                live_a_blocks(a0, t3[4], t3[1]), itemsize)
+            if fuse in (True, "triple") or fused_bytes < adj.hbm_bytes_staged:
+                return AdjointChainPlan(
+                    depth=3, rec_fused=rec_fused,
+                    launches=(1 if rec_fused else 2) + 1 + 1,
+                    modes=modes, rec_modes=rec_modes, tiles=t3,
+                    rec_tiles=rec_tiles,
+                    vmem_bytes=chain3_vmem_bytes(*t3, itemsize),
+                    rec_vmem_bytes=rec_vmem,
+                    hbm_bytes_staged=adj.hbm_bytes_staged,
+                    hbm_bytes_fused=fused_bytes, events=tuple(events))
+            events.append({
+                "kind": "adjoint_fusion_degradation", "from": "triple",
+                "reason": "byte_model", "hbm_bytes_fused": fused_bytes,
+                "hbm_bytes_staged": adj.hbm_bytes_staged,
+                "vmem_budget": vmem_budget,
+            })
+    if fuse == "triple":
+        return declined(events)
+
+    # Depth 2: chain pair over the first two adjoint stages + staged tail.
+    rows2 = rows_total * a2.n
+    if min(rows2, a0.n, a0.k, a1.n, a1.k) >= MIN_KERNEL_DIM:
+        t2 = chain_tile_sizes(rows2, a0.n, a0.k, a1.n, a1.k, itemsize,
+                              vmem_budget)
+        if t2 is None:
+            events.append({
+                "kind": "adjoint_fusion_degradation", "from": "pair",
+                "reason": "vmem_budget",
+                "vmem_bytes_min": chain_vmem_bytes(
+                    8, 8, 8, 8, kb_padded(a1.k), itemsize),
+                "vmem_budget": vmem_budget,
+            })
+            return declined(events)
+        fused_bytes = (_chain_hbm_bytes(rows2, a0.k, a1.n, t2,
+                                        live_a_blocks(a0, t2[3], t2[1]),
+                                        itemsize)
+                       + stage_hbm_bytes(a2, batch, itemsize))
+        if fuse in (True, "pair") or fused_bytes < adj.hbm_bytes_staged:
+            return AdjointChainPlan(
+                depth=2, rec_fused=rec_fused,
+                launches=(1 if rec_fused else 2) + 2 + 1,
+                modes=modes, rec_modes=rec_modes, tiles=t2,
+                rec_tiles=rec_tiles,
+                vmem_bytes=chain_vmem_bytes(*t2, itemsize),
+                rec_vmem_bytes=rec_vmem,
+                hbm_bytes_staged=adj.hbm_bytes_staged,
+                hbm_bytes_fused=fused_bytes, events=tuple(events))
+        events.append({
+            "kind": "adjoint_fusion_degradation", "from": "pair",
+            "reason": "byte_model", "hbm_bytes_fused": fused_bytes,
+            "hbm_bytes_staged": adj.hbm_bytes_staged,
+            "vmem_budget": vmem_budget,
+        })
+    return declined(events)
 
 
 def build_plan(

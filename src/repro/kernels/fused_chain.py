@@ -1,0 +1,457 @@
+"""Fused adjoint-chain kernels — intermediates *emitted*, not discarded.
+
+The forward fused kernels (``fused_gemt.py`` / ``fused3_gemt.py``) keep the
+inter-stage partials in VMEM scratch and throw them away once consumed —
+exactly right for inference, exactly wrong for the backward pass: the VJP
+needs ``y1 = X ×_a C_a`` (and ``y2`` for the triple) as the left operands
+of the coefficient cotangents ``dC_s = unfold(y)ᵀ @ unfold(g)``.  The
+staged backward therefore recomputes the chain prefix with separate
+launches and full HBM round-trips, which is where the 3x backward gap
+lives.
+
+These kernels run the same fused dataflow but *also* write each completed
+VMEM partial to an extra output the moment it is finalized, so one launch
+yields the contraction result **and** every intermediate the adjoint will
+contract against — the intermediate crosses HBM exactly once, as a result,
+never as a round-trip.
+
+Two structural differences from the forward kernels:
+
+* the b (and c) coefficient streams must be **dense**: every streamed slab
+  owns a block of the emitted intermediate, and an ESOP-skipped slab would
+  leave its ``y1``/``y2`` block unwritten (``y1`` does not involve ``C_b``,
+  so a dead ``C_b`` slab still carries nonzero ``y1``).  The a-side ESOP
+  compaction stays: dead ``C_a`` blocks contribute exactly zero to every
+  partial, so skipping them changes nothing that is emitted.
+* ``pallas_call`` is multi-output: each intermediate gets its own
+  BlockSpec whose index map revisits a block only while it is still being
+  accumulated, and the write is guarded to the step that completes it.
+
+``coeff_grad_batch_kernel`` is the companion: the three rank-k coefficient
+cotangents ``dC_s = A_sᵀ G_s`` stacked on a leading s-axis and reduced in
+one launch — grid ``(3, T_r)`` with a shared f32 accumulator, replacing
+three separate SR-GEMM dispatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .esop_gemm import esop_plan
+
+__all__ = [
+    "chain_gemt_kernel", "chain_gemt_pallas",
+    "chain3_gemt_kernel", "chain3_gemt_pallas",
+    "coeff_grad_batch_kernel", "coeff_grad_batch_pallas",
+]
+
+
+def dense_slab_plan(n: int, bn: int):
+    """Identity streaming schedule: every slab live, in natural order."""
+    t = n // bn
+    idx = jnp.arange(t, dtype=jnp.int32).reshape(1, t)
+    return idx, t
+
+
+def chain_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
+                      cb_ref, o_ref, o1_ref, p_ref, acc_ref, *,
+                      t_a: int, t_b: int):
+    """Fused pair with the stage-a partial emitted as a second output."""
+    j = pl.program_id(1)
+    tb = pl.program_id(2)
+    ta = pl.program_id(3)
+
+    @pl.when((tb == 0) & (ta == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    @pl.when(ta == 0)
+    def _init_partial():
+        p_ref[...] = jnp.zeros(p_ref.shape, p_ref.dtype)
+
+    @pl.when(ta < counts_a_ref[j])
+    def _stage_a():
+        x = x_ref[...]  # (bu, bnb, bna)
+        bu, bnb, bna = x.shape
+        p = jnp.dot(x.reshape(bu * bnb, bna), ca_ref[...],
+                    preferred_element_type=jnp.float32)
+        p_ref[...] += p.reshape(bu, bnb, p.shape[-1])
+
+    @pl.when(ta == t_a - 1)
+    def _stage_b():
+        acc_ref[...] += jax.lax.dot_general(
+            p_ref[...], cb_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # The completed partial IS y1 for this (i, tb, j) block — emit it.
+    @pl.when(ta == t_a - 1)
+    def _emit_y1():
+        o1_ref[...] = p_ref[...].astype(o1_ref.dtype)
+
+    @pl.when((tb == t_b - 1) & (ta == t_a - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bna",
+                                             "t_a", "t_b", "interpret"))
+def _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
+                bu, bka, bnb, bna, t_a, t_b, interpret):
+    u, nb, na = x3.shape
+    ka = ca.shape[1]
+    kb = cb.shape[1]
+    grid = (u // bu, ka // bka, t_b, t_a)
+
+    def x_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (i, idx_b_ref[0, tb], idx_a_ref[j, ta])
+
+    def ca_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (idx_a_ref[j, ta], j)
+
+    def cb_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (idx_b_ref[0, tb], 0)
+
+    def o_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (i, j, 0)
+
+    def o1_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
+        return (i, idx_b_ref[0, tb], j)
+
+    return pl.pallas_call(
+        functools.partial(chain_gemt_kernel, t_a=t_a, t_b=t_b),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bu, bnb, bna), x_map),  # streamed X slab
+                pl.BlockSpec((bna, bka), ca_map),     # streamed C_a block
+                pl.BlockSpec((bnb, kb), cb_map),      # resident C_b slab
+            ],
+            out_specs=[
+                pl.BlockSpec((bu, bka, kb), o_map),
+                pl.BlockSpec((bu, bnb, bka), o1_map),  # emitted y1 block
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
+                pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((u, ka, kb), x3.dtype),
+            jax.ShapeDtypeStruct((u, nb, ka), x3.dtype),
+        ),
+        interpret=interpret,
+    )(counts_a, idx_a, idx_b, x3, ca, cb)
+
+
+def chain_gemt_pallas(
+    x3: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    bu: int = 128,
+    bka: int = 128,
+    bnb: int = 32,
+    bna: int = 128,
+    interpret: bool = False,
+    plan_a: tuple | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, dict | None]:
+    """``y, y1 = (X3 ×_a C_a) ×_b C_b`` with the intermediate emitted.
+
+    Returns ``(y, y1)`` in layouts ``(U, Ka, Kb)`` / ``(U, Nb, Ka)``.
+    ``plan_a`` optionally carries the a-side ESOP schedule
+    ``(counts_a, idx_a, t_a)``; the b stream is always dense (see module
+    docstring).  With a supplied plan ``info`` is None.
+    """
+    u, nb, na = x3.shape
+    na2, ka = ca.shape
+    nb2, kb = cb.shape
+    assert na == na2 and nb == nb2, (x3.shape, ca.shape, cb.shape)
+    assert u % bu == 0 and ka % bka == 0, ((u, ka), (bu, bka))
+    assert nb % bnb == 0 and na % bna == 0, ((nb, na), (bnb, bna))
+
+    if plan_a is None:
+        counts_a, idx_a, t_a = esop_plan(ca, bna, bka)
+        live_a = int(counts_a.sum())
+        counts_a, idx_a = jnp.asarray(counts_a), jnp.asarray(idx_a)
+    else:
+        counts_a, idx_a, t_a = plan_a
+        live_a = None
+    idx_b, t_b = dense_slab_plan(nb, bnb)
+
+    y, y1 = _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
+                        bu, bka, bnb, bna, t_a, t_b, interpret)
+    if live_a is None:
+        return y, y1, None
+    dense_a = (na // bna) * (ka // bka)
+    info = {
+        "blocks_dense_a": dense_a,
+        "blocks_live_a": live_a,
+        "t_steps": (t_a, t_b),
+        "t_steps_dense": (na // bna, t_b),
+    }
+    return y, y1, info
+
+
+def chain3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
+                       x_ref, ca_ref, cb_ref, cc_ref, o_ref, o1_ref, o2_ref,
+                       p1_ref, p2_ref, acc_ref, *,
+                       t_a: int, t_b: int, t_c: int):
+    """Fused triple with both partials emitted as extra outputs."""
+    j = pl.program_id(1)
+    tc = pl.program_id(2)
+    tb = pl.program_id(3)
+    ta = pl.program_id(4)
+
+    @pl.when((tc == 0) & (tb == 0) & (ta == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    @pl.when((tb == 0) & (ta == 0))
+    def _init_p2():
+        p2_ref[...] = jnp.zeros(p2_ref.shape, p2_ref.dtype)
+
+    @pl.when(ta == 0)
+    def _init_p1():
+        p1_ref[...] = jnp.zeros(p1_ref.shape, p1_ref.dtype)
+
+    @pl.when(ta < counts_a_ref[j])
+    def _stage_1():
+        x = x_ref[...]  # (bu, bnc, bnb, bna)
+        bu, bnc, bnb, bna = x.shape
+        p = jnp.dot(x.reshape(bu * bnc * bnb, bna), ca_ref[...],
+                    preferred_element_type=jnp.float32)
+        p1_ref[...] += p.reshape(bu, bnc, bnb, p.shape[-1])
+
+    @pl.when(ta == t_a - 1)
+    def _stage_2():
+        p2_ref[...] += jax.lax.dot_general(
+            p1_ref[...], cb_ref[...].astype(jnp.float32),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # The completed stage-1 partial IS y1 for this (i, tc, tb, j) block.
+    @pl.when(ta == t_a - 1)
+    def _emit_y1():
+        o1_ref[...] = p1_ref[...].astype(o1_ref.dtype)
+
+    @pl.when((tb == t_b - 1) & (ta == t_a - 1))
+    def _stage_3():
+        acc_ref[...] += jax.lax.dot_general(
+            p2_ref[...], cc_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # The completed stage-2 partial IS y2 for this (i, tc, j) block.
+    @pl.when((tb == t_b - 1) & (ta == t_a - 1))
+    def _emit_y2():
+        o2_ref[...] = p2_ref[...].astype(o2_ref.dtype)
+
+    @pl.when((tc == t_c - 1) & (tb == t_b - 1) & (ta == t_a - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bnc",
+                                             "bna", "t_a", "t_b", "t_c",
+                                             "interpret"))
+def _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
+                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret):
+    u, nc, nb, na = x4.shape
+    ka = ca.shape[1]
+    kb = cb.shape[1]
+    kc = cc.shape[1]
+    grid = (u // bu, ka // bka, t_c, t_b, t_a)
+
+    def x_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+              idx_c_ref):
+        return (i, idx_c_ref[0, tc], idx_b_ref[0, tb], idx_a_ref[j, ta])
+
+    def ca_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_a_ref[j, ta], j)
+
+    def cb_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_b_ref[0, tb], 0)
+
+    def cc_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (idx_c_ref[0, tc], 0)
+
+    def o_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+              idx_c_ref):
+        return (i, j, 0, 0)
+
+    def o1_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (i, idx_c_ref[0, tc], idx_b_ref[0, tb], j)
+
+    def o2_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
+               idx_c_ref):
+        return (i, idx_c_ref[0, tc], j, 0)
+
+    return pl.pallas_call(
+        functools.partial(chain3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bu, bnc, bnb, bna), x_map),  # streamed X slab
+                pl.BlockSpec((bna, bka), ca_map),          # streamed C_a
+                pl.BlockSpec((bnb, kb), cb_map),           # resident C_b slab
+                pl.BlockSpec((bnc, kc), cc_map),           # resident C_c slab
+            ],
+            out_specs=[
+                pl.BlockSpec((bu, bka, kb, kc), o_map),
+                pl.BlockSpec((bu, bnc, bnb, bka), o1_map),  # emitted y1
+                pl.BlockSpec((bu, bnc, bka, kb), o2_map),   # emitted y2
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
+                pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
+                pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((u, ka, kb, kc), x4.dtype),
+            jax.ShapeDtypeStruct((u, nc, nb, ka), x4.dtype),
+            jax.ShapeDtypeStruct((u, nc, ka, kb), x4.dtype),
+        ),
+        interpret=interpret,
+    )(counts_a, idx_a, idx_b, idx_c, x4, ca, cb, cc)
+
+
+def chain3_gemt_pallas(
+    x4: jnp.ndarray,
+    ca: jnp.ndarray,
+    cb: jnp.ndarray,
+    cc: jnp.ndarray,
+    bu: int = 8,
+    bka: int = 128,
+    bnb: int = 16,
+    bnc: int = 16,
+    bna: int = 128,
+    interpret: bool = False,
+    plan_a: tuple | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict | None]:
+    """``y, y1, y2 = ((X4 ×_a C_a) ×_b C_b) ×_c C_c`` with both
+    intermediates emitted.
+
+    Layouts: ``y (U, Ka, Kb, Kc)``, ``y1 (U, Nc, Nb, Ka)``,
+    ``y2 (U, Nc, Ka, Kb)``.  ``plan_a`` optionally carries the a-side ESOP
+    schedule ``(counts_a, idx_a, t_a)``; the b and c streams are always
+    dense (see module docstring).  With a supplied plan ``info`` is None.
+    """
+    u, nc, nb, na = x4.shape
+    na2, ka = ca.shape
+    nb2, kb = cb.shape
+    nc2, kc = cc.shape
+    assert na == na2 and nb == nb2 and nc == nc2, (
+        x4.shape, ca.shape, cb.shape, cc.shape)
+    assert u % bu == 0 and ka % bka == 0, ((u, ka), (bu, bka))
+    assert nb % bnb == 0 and nc % bnc == 0 and na % bna == 0, (
+        (nc, nb, na), (bnc, bnb, bna))
+
+    if plan_a is None:
+        counts_a, idx_a, t_a = esop_plan(ca, bna, bka)
+        live_a = int(counts_a.sum())
+        counts_a, idx_a = jnp.asarray(counts_a), jnp.asarray(idx_a)
+    else:
+        counts_a, idx_a, t_a = plan_a
+        live_a = None
+    idx_b, t_b = dense_slab_plan(nb, bnb)
+    idx_c, t_c = dense_slab_plan(nc, bnc)
+
+    y, y1, y2 = _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
+                             bu, bka, bnb, bnc, bna, t_a, t_b, t_c,
+                             interpret)
+    if live_a is None:
+        return y, y1, y2, None
+    dense_a = (na // bna) * (ka // bka)
+    info = {
+        "blocks_dense_a": dense_a,
+        "blocks_live_a": live_a,
+        "t_steps": (t_a, t_b, t_c),
+        "t_steps_dense": (na // bna, t_b, t_c),
+    }
+    return y, y1, y2, info
+
+
+def coeff_grad_batch_kernel(a_ref, g_ref, o_ref, acc_ref, *, t_r: int):
+    """One stacked coefficient cotangent ``dC_s = A_sᵀ G_s``; r streams
+    row blocks of the shared reduction axis."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0].astype(jnp.float32), g_ref[0].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(r == t_r - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "t_r", "interpret",
+                                             "out_dtype"))
+def _coeff_batch_call(a, g, br, t_r, interpret, out_dtype):
+    s, rp, np_ = a.shape
+    kp = g.shape[2]
+
+    def a_map(si, r):
+        return (si, r, 0)
+
+    def g_map(si, r):
+        return (si, r, 0)
+
+    def o_map(si, r):
+        return (si, 0, 0)
+
+    return pl.pallas_call(
+        functools.partial(coeff_grad_batch_kernel, t_r=t_r),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(s, t_r),
+            in_specs=[
+                pl.BlockSpec((1, br, np_), a_map),
+                pl.BlockSpec((1, br, kp), g_map),
+            ],
+            out_specs=pl.BlockSpec((1, np_, kp), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((np_, kp), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, np_, kp), out_dtype),
+        interpret=interpret,
+    )(a, g)
+
+
+def coeff_grad_batch_pallas(
+    a: jnp.ndarray,
+    g: jnp.ndarray,
+    br: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """``dC[s] = A[s]ᵀ @ G[s]`` for the stacked ``(S, R, N)`` / ``(S, R, K)``
+    operands in one launch; R must be a multiple of ``br``.
+
+    Zero-padded rows contribute nothing to the products, so callers pad the
+    per-mode operands to a common ``(R, N, K)`` envelope and crop after.
+    """
+    s, rp, n = a.shape
+    s2, rp2, k = g.shape
+    assert s == s2 and rp == rp2, (a.shape, g.shape)
+    assert rp % br == 0, (rp, br)
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, g.dtype)
+    return _coeff_batch_call(a, g, br, rp // br, interpret, out_dtype)

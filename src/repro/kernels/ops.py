@@ -23,10 +23,13 @@ from . import ref
 from .attention import flash_attention_pallas
 from .esop_gemm import esop_gemm_pallas, esop_plan
 from .fused3_gemt import fused3_gemt_pallas
+from .fused_chain import (chain3_gemt_pallas, chain_gemt_pallas,
+                          coeff_grad_batch_pallas)
 from .fused_gemt import fused_gemt_pallas, kb_padded
 from .sr_gemm import sr_gemm_pallas
 
 __all__ = ["sr_gemm", "esop_gemm", "fused_gemt", "fused3_gemt",
+           "chain_gemt", "chain3_gemt", "coeff_grad_batch",
            "flash_attention", "esop_plan_cached", "esop_memo_stats",
            "set_esop_memo_size", "transposed_cached", "on_tpu"]
 
@@ -485,6 +488,144 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     f.defvjp(lambda x4, ca, cb, cc: (prim(x4, ca, cb, cc), (x4, ca, cb, cc)),
              bwd)
     return f(x4, ca, cb, cc), info
+
+
+def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+               bu: int = 128, bka: int = 128, bnb: int = 32, bna: int = 128,
+               use_pallas: bool | None = None, plan_a: tuple | None = None):
+    """Chain pair ``y, y1 = (X3 ×_a C_a) ×_b C_b`` with the intermediate
+    emitted.  Returns ``(y, y1, info)``; layouts ``(U, Ka, Kb)`` /
+    ``(U, Nb, Ka)``.
+
+    The backward-walk workhorse: the recompute prefix and the contraction
+    that consumes it share one launch, so ``y1`` crosses HBM once as a
+    result instead of round-tripping (``kernels/fused_chain.py``).  The b
+    stream is dense by construction; a-side ESOP compaction applies.
+    ``plan_a`` optionally supplies the precomputed ``esop_plan_cached``
+    tuple for a tracer ``ca`` (inside a jitted backward program).  Not
+    VJP-wrapped: this op *is* a VJP building block.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if jnp.iscomplexobj(x3) or jnp.iscomplexobj(ca) or jnp.iscomplexobj(cb):
+        use_pallas = False
+    u, nb, na = x3.shape
+    if ca.shape[0] != na or cb.shape[0] != nb:
+        raise ValueError(
+            f"x3 {x3.shape} incompatible with C_a {ca.shape} (na) / "
+            f"C_b {cb.shape} (nb)")
+    if use_pallas and plan_a is None and _is_traced(ca):
+        use_pallas = False  # no host-readable ESOP schedule for a tracer
+    if not use_pallas:
+        y, y1 = ref.ref_chain_gemt(x3, ca, cb)
+        return y, y1, {"t_steps_dense": (-(-na // bna), nb // bnb)}
+    ka, kb = ca.shape[1], cb.shape[1]
+    kbp = kb_padded(kb)
+    counts_a, idx_a, t_a, stats_a = (plan_a if plan_a is not None
+                                     else esop_plan_cached(ca, bna, bka))
+    xp = _pad_to(x3, (bu, bnb, bna))
+    cap = _pad_to(ca, (bna, bka))
+    cbp = _pad_to(cb, (bnb, kbp))
+    yk, y1k, _ = chain_gemt_pallas(
+        xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna,
+        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a))
+    info = {
+        "blocks_dense_a": stats_a["blocks_dense"],
+        "blocks_live_a": stats_a["blocks_live"],
+        "t_steps": (t_a, xp.shape[1] // bnb),
+        "t_steps_dense": (stats_a["t_steps_dense"], xp.shape[1] // bnb),
+    }
+    return yk[:u, :ka, :kb], y1k[:u, :nb, :ka], info
+
+
+def chain3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+                cc: jnp.ndarray, bu: int = 8, bka: int = 128, bnb: int = 16,
+                bnc: int = 16, bna: int = 128,
+                use_pallas: bool | None = None, plan_a: tuple | None = None):
+    """Chain triple ``y, y1, y2 = ((X4 ×_a C_a) ×_b C_b) ×_c C_c`` with both
+    intermediates emitted.  Returns ``(y, y1, y2, info)``; layouts
+    ``(U, Ka, Kb, Kc)`` / ``(U, Nc, Nb, Ka)`` / ``(U, Nc, Ka, Kb)``.
+
+    One launch replaces the staged backward's two recompute launches and
+    the cotangent chain's intermediate round-trips.  The b and c streams
+    are dense by construction; a-side ESOP compaction applies.  ``plan_a``
+    as in :func:`chain_gemt`.  Not VJP-wrapped.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if any(jnp.iscomplexobj(t) for t in (x4, ca, cb, cc)):
+        use_pallas = False
+    u, nc, nb, na = x4.shape
+    if ca.shape[0] != na or cb.shape[0] != nb or cc.shape[0] != nc:
+        raise ValueError(
+            f"x4 {x4.shape} incompatible with C_a {ca.shape} (na) / "
+            f"C_b {cb.shape} (nb) / C_c {cc.shape} (nc)")
+    if use_pallas and plan_a is None and _is_traced(ca):
+        use_pallas = False
+    if not use_pallas:
+        y, y1, y2 = ref.ref_chain3_gemt(x4, ca, cb, cc)
+        return y, y1, y2, {"t_steps_dense": (-(-na // bna), nb // bnb,
+                                             nc // bnc)}
+    ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    kbp, kcp = kb_padded(kb), kb_padded(kc)
+    counts_a, idx_a, t_a, stats_a = (plan_a if plan_a is not None
+                                     else esop_plan_cached(ca, bna, bka))
+    xp = _pad_to(x4, (bu, bnc, bnb, bna))
+    cap = _pad_to(ca, (bna, bka))
+    cbp = _pad_to(cb, (bnb, kbp))
+    ccp = _pad_to(cc, (bnc, kcp))
+    yk, y1k, y2k, _ = chain3_gemt_pallas(
+        xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
+        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a))
+    info = {
+        "blocks_dense_a": stats_a["blocks_dense"],
+        "blocks_live_a": stats_a["blocks_live"],
+        "t_steps": (t_a, xp.shape[2] // bnb, xp.shape[1] // bnc),
+        "t_steps_dense": (stats_a["t_steps_dense"], xp.shape[2] // bnb,
+                          xp.shape[1] // bnc),
+    }
+    return (yk[:u, :ka, :kb, :kc], y1k[:u, :nc, :nb, :ka],
+            y2k[:u, :nc, :ka, :kb], info)
+
+
+def coeff_grad_batch(as_list, gs_list, br: int = 128,
+                     use_pallas: bool | None = None):
+    """The three coefficient cotangents ``dC_s = A_sᵀ @ G_s`` in one
+    multi-output launch.  ``as_list`` / ``gs_list`` are the per-mode
+    unfolded operands ``(R_s, N_s)`` / ``(R_s, K_s)``; returns the list of
+    three ``(N_s, K_s)`` cotangents.
+
+    The operands are zero-padded to a common ``(R, N, K)`` envelope and
+    stacked on a leading s-axis (zero rows contribute nothing to the
+    products), replacing three rank-k SR-GEMM dispatches with a single
+    grid ``(3, T_r)`` kernel.  Complex operands route to the einsum
+    reference.  Not VJP-wrapped.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if any(jnp.iscomplexobj(t) for t in (*as_list, *gs_list)):
+        use_pallas = False
+    rmax = max(a.shape[0] for a in as_list)
+    nmax = max(a.shape[1] for a in as_list)
+    kmax = max(g.shape[1] for g in gs_list)
+    br_eff = min(br, kb_padded(rmax))
+    rp = -(-rmax // br_eff) * br_eff
+    np_, kp = kb_padded(nmax), kb_padded(kmax)
+
+    def pad2(t, rows, cols):
+        return jnp.pad(t, ((0, rows - t.shape[0]), (0, cols - t.shape[1])))
+
+    a = jnp.stack([pad2(t, rp, np_) for t in as_list])
+    g = jnp.stack([pad2(t, rp, kp) for t in gs_list])
+    if use_pallas:
+        out_dtype = jnp.result_type(*(t.dtype for t in (*as_list, *gs_list)))
+        dc = coeff_grad_batch_pallas(a, g, br=br_eff,
+                                     interpret=not on_tpu(),
+                                     out_dtype=out_dtype)
+    else:
+        dc = ref.ref_coeff_grad_batch(a, g)
+    return [dc[i, :as_list[i].shape[1], :gs_list[i].shape[1]]
+            for i in range(len(as_list))]
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

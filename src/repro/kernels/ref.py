@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_fused_gemt",
-           "ref_fused3_gemt", "ref_attention"]
+           "ref_fused3_gemt", "ref_chain_gemt", "ref_chain3_gemt",
+           "ref_coeff_grad_batch", "ref_attention"]
 
 
 def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
@@ -71,6 +72,46 @@ def ref_fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
           @ cb).reshape(u, nc, ka, kb)
     return (jnp.moveaxis(p2, 1, 3).reshape(u * ka * kb, nc)
             @ cc).reshape(u, ka, kb, kc)
+
+
+@jax.jit
+def ref_chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
+                   cb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the chain pair: fused result *plus* the emitted
+    intermediate ``y1 = X ×_a C_a`` in its ``(U, Nb, Ka)`` layout."""
+    u, nb, na = x3.shape
+    ka, kb = ca.shape[1], cb.shape[1]
+    p = (x3.reshape(u * nb, na) @ ca).reshape(u, nb, ka)
+    y = (jnp.swapaxes(p, 1, 2).reshape(u * ka, nb) @ cb).reshape(u, ka, kb)
+    return y, p
+
+
+@jax.jit
+def ref_chain3_gemt(
+        x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+        cc: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for the chain triple: fused result plus both emitted
+    intermediates ``y1 (U, Nc, Nb, Ka)`` and ``y2 (U, Nc, Ka, Kb)``."""
+    u, nc, nb, na = x4.shape
+    ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    p1 = (x4.reshape(u * nc * nb, na) @ ca).reshape(u, nc, nb, ka)
+    p2 = (jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb)
+          @ cb).reshape(u, nc, ka, kb)
+    y = (jnp.moveaxis(p2, 1, 3).reshape(u * ka * kb, nc)
+         @ cc).reshape(u, ka, kb, kc)
+    return y, p1, p2
+
+
+@jax.jit
+def ref_coeff_grad_batch(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the batched coefficient cotangent:
+    ``dC[s] = A[s]ᵀ @ G[s]`` over the stacked ``(S, R, N)``/``(S, R, K)``
+    operands, f32 accumulation.  Handles complex dtypes."""
+    out_dtype = jnp.result_type(a.dtype, g.dtype)
+    if jnp.issubdtype(out_dtype, jnp.complexfloating):
+        return jnp.einsum("srn,srk->snk", a, g).astype(out_dtype)
+    return jnp.einsum("srn,srk->snk", a.astype(jnp.float32),
+                      g.astype(jnp.float32)).astype(out_dtype)
 
 
 def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -182,14 +182,25 @@ def test_grad_artifact_has_no_model_regression():
 def test_grad_artifact_meets_acceptance_bar():
     """The committed artifact carries the differentiable-engine acceptance
     bar: gradients match the einsum reference to 1e-5 (relative), the
-    backward ran through the engine (nonzero kernel launches) and no
-    einsum stage leaked onto these kernel-capable shapes."""
+    backward ran through the engine (nonzero kernel launches, no einsum
+    stage on these kernel-capable shapes), the fused-adjoint walk held
+    its launch budget (<= 4, was 8 staged) and beat the einsum-reference
+    backward pull (speedup_vs_ref >= 1.0) on every committed shape."""
     with open(_artifact("BENCH_grad_engine.json")) as f:
         rows = json.load(f)
     assert rows, "empty artifact"
+    depths = set()
     for row in rows:
         kv = _parse_derived(row["derived"])
         assert float(kv["max_abs_err"]) <= 1e-5, row["name"]
         assert int(kv["bwd_kernel_launches"]) > 0, row["name"]
+        assert int(kv["bwd_kernel_launches"]) <= 4, row["name"]
         assert int(kv["bwd_einsum_stages"]) == 0, row["name"]
         assert kv["engine_backward"] == "True", row["name"]
+        assert kv["grad_fused"] == "True", row["name"]
+        assert float(kv["speedup_vs_ref"].rstrip("x")) >= 1.0, row["name"]
+        assert int(kv["grad_launches"]) == int(kv["bwd_kernel_launches"]), \
+            row["name"]
+        depths.add(int(kv["grad_chain_depth"]))
+    # one shape exercises the chain triple, one the degraded chain pair
+    assert depths == {2, 3}

@@ -16,6 +16,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _hypothesis_compat import given, settings, st
 from repro.core import (apply_dxt3d_layer, coefficient_matrix, dxt3d, gemt3,
                         init_dxt3d_layer)
 from repro.engine import (AutotuneCache, derive_adjoint_plan, gemt3_planned,
@@ -54,7 +55,7 @@ def _ref(x, c1, c2, c3, out=None):
     return y if out is None else out + y
 
 
-def _vjp_pair(x, cs, g, out=None, **kwargs):
+def _vjp_pair(x, cs, g, out=None, primal_tol=1e-4, **kwargs):
     """Engine and reference cotangent tuples for the same cotangent g."""
     args = (x,) + cs + ((out,) if out is not None else ())
     if out is not None:
@@ -67,8 +68,12 @@ def _vjp_pair(x, cs, g, out=None, **kwargs):
         ref = _ref
     y_e, pull_e = jax.vjp(eng, *args)
     y_r, pull_r = jax.vjp(ref, *args)
-    np.testing.assert_allclose(np.asarray(y_e), np.asarray(y_r),
-                               rtol=1e-4, atol=1e-4)
+    wide = jnp.complex64 if jnp.iscomplexobj(y_r) else jnp.float32
+    y_en = np.asarray(jnp.asarray(y_e, wide))
+    y_rn = np.asarray(jnp.asarray(y_r, wide))
+    scale = max(float(np.max(np.abs(y_rn))), 1.0)
+    np.testing.assert_allclose(y_en, y_rn, rtol=10 * primal_tol,
+                               atol=primal_tol * scale)
     return pull_e(g), pull_r(g)
 
 
@@ -172,6 +177,94 @@ class TestGradMatchesReference:
         got, want = _vjp_pair(x, cs, g, fuse=False, use_pallas=True)
         assert_grads_close(got, want, tol=1e-4)
 
+    @pytest.mark.grad_smoke
+    def test_interpret_mode_fused_adjoint_drill(self):
+        """CPU-only CI drives the TPU backward walk: use_pallas=True off
+        TPU runs the chain kernels in interpret mode, so the fused walk —
+        chain-pair recompute, chain-triple dX (g1, g2 emitted), batched
+        dC — executes as real pallas_calls, with the launch accounting
+        matching the forward-time prediction."""
+        x, cs = _problem((16, 16, 16), batch=4)
+        g = _rand(4, 16, 16, 16)
+        _, info = gemt3_planned(x, *cs, with_info=True, differentiable=True,
+                                use_pallas=True)
+        assert info["grad_fused"] and info["grad_chain_depth"] == 3
+        assert info["grad_rec_fused"]
+        reset_grad_stats()
+        got, want = _vjp_pair(x, cs, g, use_pallas=True)
+        assert_grads_close(got, want, tol=1e-4)
+        gs = grad_stats()
+        assert gs["fused_launches"] == 2  # rec chain-pair + chain-triple
+        total = (gs["kernel_stages"] + gs["einsum_stages"]
+                 + gs["coeff_kernel"] + gs["coeff_einsum"])
+        assert total == info["grad_launches"] == 3
+
+
+_PROP_TOL = {"f32": 1e-5, "bf16": 2e-2, "c64": 1e-4}
+
+
+class TestPropertyGradcheck:
+    """Property-based differential gradcheck: real ``hypothesis`` when
+    installed, the deterministic ``_hypothesis_compat`` example grid
+    otherwise.  Every sampled combination of dims, rank compression,
+    dtype, fusion knob, ESOP sparsity and batching must produce engine
+    cotangents matching ``jax.vjp`` of the einsum reference within the
+    per-dtype tolerance — exercising the fused-adjoint chain walks
+    (depth 3/2), the staged walk (``fuse=False``), the einsum-pinned
+    complex path, and the bf16 kernels."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.sampled_from([16, 32, 48]),
+           st.sampled_from([16, 24, 32]),
+           st.sampled_from([8, 16, 32]),
+           st.sampled_from([1.0, 0.5]),     # rank compression per mode
+           st.sampled_from(["f32", "bf16", "c64"]),
+           st.sampled_from([None, False, "pair", "triple"]),
+           st.sampled_from([False, True]),  # 50% block-zero mode-1 factor
+           st.sampled_from([None, 2]))      # leading batch axis
+    def test_vjp_matches_reference(self, n1, n2, n3, rank_ratio, dt, fuse,
+                                   sparse, batch):
+        dims = (n1, n2, n3)
+        # planted block-zeros need blk-8-aligned factors: pin ranks=dims
+        ranks = (dims if sparse
+                 else tuple(max(8, int(n * rank_ratio)) for n in dims))
+        np_dt = np.complex64 if dt == "c64" else np.float32
+        x, cs = _problem(dims, ranks, dtype=np_dt, batch=batch,
+                         sparse=(1,) if sparse else ())
+        g = _rand(*(((batch,) if batch else ()) + ranks), dtype=np_dt)
+        if dt == "bf16":
+            x, g = x.astype(jnp.bfloat16), g.astype(jnp.bfloat16)
+            cs = tuple(c.astype(jnp.bfloat16) for c in cs)
+        got, want = _vjp_pair(x, cs, g, fuse=fuse,
+                              primal_tol=_PROP_TOL[dt])
+        wide = jnp.complex64 if dt == "c64" else jnp.float32
+        got = tuple(jnp.asarray(a, wide) for a in got)
+        want = tuple(jnp.asarray(w, wide) for w in want)
+        assert_grads_close(got, want, tol=_PROP_TOL[dt])
+
+    def test_triple_to_pair_degradation_boundary(self):
+        """N=64: the chain triple fits the default VMEM budget (depth 3,
+        3 launches); a tightened budget degrades the walk to the chain
+        pair + staged tail (depth 2, 4 launches), records the
+        ``vmem_budget`` event, and still backprops exactly at the
+        degraded depth."""
+        x, cs = _problem((64, 64, 64), batch=8)
+        _, info = gemt3_planned(x, *cs, with_info=True, differentiable=True)
+        assert info["grad_chain_depth"] == 3 and info["grad_launches"] == 3
+        tight = 2_000_000  # chain3 wants ~4.4 MB at N=64; the pair fits
+        _, info_d = gemt3_planned(x, *cs, with_info=True,
+                                  differentiable=True, vmem_budget=tight)
+        assert info_d["grad_chain_depth"] == 2
+        assert info_d["grad_launches"] == 4
+        degr = [e for e in info_d["grad_events"]
+                if e["kind"] == "adjoint_fusion_degradation"]
+        assert degr and degr[0]["from"] == "triple"
+        assert degr[0]["reason"] == "vmem_budget"
+        assert degr[0]["vmem_bytes_min"] > tight == degr[0]["vmem_budget"]
+        g = _rand(8, 64, 64, 64)
+        got, want = _vjp_pair(x, cs, g, vmem_budget=tight)
+        assert_grads_close(got, want)
+
 
 class TestGradInfoAndCounters:
     def test_info_gains_grad_fields(self):
@@ -210,19 +303,30 @@ class TestGradInfoAndCounters:
         reset_grad_stats()
         assert grad_stats()["backward_calls"] == 0
 
-    def test_fused_dx_decided_by_byte_model(self):
-        """The backward adds a fused dX launch on top of the (always
-        needed) staged chain prefix only when the fused traffic undercuts
-        the staged stage it replaces: HBM-dominated serving shapes take
-        it, the MAC-bound Tucker shape declines and runs one staged walk."""
+    def test_adjoint_chain_depth_decided_by_byte_model(self):
+        """The fused-adjoint chain depth follows the HBM byte model: the
+        HBM-dominated square serving shape runs the full chain-triple
+        walk (3 backward launches), while the compressive Tucker shape —
+        whose emitted intermediates would *expand* HBM traffic — degrades
+        to the chain pair + staged tail (4 launches) and records why."""
         x, cs = _problem((32, 32, 32), batch=8)
         _, info = gemt3_planned(x, *cs, with_info=True, differentiable=True)
-        assert info["grad_fused"]  # fused triple ≈ 1/5 of staged bytes
+        assert info["grad_fused"]  # chain triple ≈ 1/5 of staged bytes
+        assert info["grad_chain_depth"] == 3
+        assert info["grad_launches"] == 3
+        assert len(info["grad_backends_executed"]) == 1
+        assert info["grad_backends_executed"][0].startswith("fused(")
         xt, cst = _problem((64, 48, 32), (8, 24, 24))
         _, info_t = gemt3_planned(xt, *cst, with_info=True,
                                   differentiable=True)
-        assert not info_t["grad_fused"]
-        assert info_t["grad_backends_executed"] == info_t["grad_backends"]
+        assert info_t["grad_fused"]
+        assert info_t["grad_chain_depth"] == 2
+        assert info_t["grad_launches"] == 4
+        degr = [e for e in info_t["grad_events"]
+                if e["kind"] == "adjoint_fusion_degradation"]
+        assert degr and degr[0]["from"] == "triple"
+        assert degr[0]["reason"] == "byte_model"
+        assert degr[0]["hbm_bytes_fused"] > degr[0]["hbm_bytes_staged"]
 
     def test_triple_fusion_reused_by_adjoint(self):
         """A square DCT problem whose forward fuses the whole transform
@@ -264,21 +368,27 @@ class TestAdjointPlan:
         f(x)
         assert len(_ADJ_PLAN_CACHE) == n  # second backward reuses the plan
 
-    def test_adjoint_shares_autotune_cache_on_square_problems(self, tmp_path):
-        """Square same-structure stages: the adjoint GEMMs land on the
-        *same* autotune keys as the forward ones (shape+structure keying),
-        so backward tuning costs zero extra cache entries."""
+    def test_adjoint_never_replays_forward_tuned_tiles(self, tmp_path):
+        """Tile-sharing regression: on square problems the adjoint GEMMs
+        have the same shape+structure fingerprint as the forward ones, so
+        shape-only keying silently replayed forward-tuned tiles for the
+        adjoint (whose operand-transposed access pattern wants different
+        tiles).  The cache key now carries an adj/fwd role: a
+        forward-warmed cache must *miss* on every adjoint lookup and
+        backward tuning must add its own role-separated entries."""
         cache = AutotuneCache(str(tmp_path / "autotune.json"))
         x, cs = _problem((32, 32, 32), batch=4)
-        y = gemt3_planned(x, *cs, fuse=False, autotune=True,
-                          autotune_cache=cache)
+        gemt3_planned(x, *cs, fuse=False, autotune=True,
+                      autotune_cache=cache)
         n_fwd = len(cache)
         assert n_fwd > 0
+        assert all("|fwd|" in k for k in cache._entries)
         jax.grad(lambda x: jnp.sum(gemt3_planned(
             x, *cs, fuse=False, autotune=True, autotune_cache=cache,
             differentiable=True) ** 2))(x)
-        assert len(cache) == n_fwd
-        assert all(k.startswith("v2:") for k in cache._entries)
+        assert len(cache) > n_fwd  # adjoint missed the forward entries
+        assert any("|adj|" in k for k in cache._entries)
+        assert all(k.startswith("v3:") for k in cache._entries)
 
 
 class TestEsopMemoLRU:
@@ -355,11 +465,15 @@ class TestTrainingConsumers:
         dims = (8, 8, 8)
         with pytest.raises(ValueError):
             init_dxt3d_layer(dims, kind="dft", dtype=jnp.float32)
+        # init far enough from the optimum that the gradient signal beats
+        # AdamW's weight decay; a 0.05 perturbation left an 8-step loss
+        # decrease data-marginal (flipped with the suite's RNG history)
         state = init_dxt_fit_state(dims, OptConfig(lr=1e-3, warmup_steps=1),
                                    kind="dft", key=jax.random.PRNGKey(0),
-                                   init_scale=0.05)
+                                   init_scale=0.3)
         assert jnp.iscomplexobj(state["params"]["c1"])
-        x = _rand(2, *dims).astype(jnp.complex64)
+        x = jnp.asarray(np.random.default_rng(23)
+                        .normal(size=(2, *dims)).astype(np.complex64))
         y = jnp.stack([dxt3d(xi, "dft") for xi in jnp.real(x)])
         step = build_dxt_fit_step(OptConfig(lr=1e-3, warmup_steps=1))
         losses = []

@@ -268,6 +268,8 @@ def test_counter_parity_backward():
     x, c1, c2, c3 = _problem(16)
     clear_plan_cache()
     with obs.session() as s:
+        _, info = gemt3_planned(x, c1, c2, c3, with_info=True,
+                                differentiable=True)
         loss = lambda *a: jnp.sum(jnp.abs(
             gemt3_planned(*a, differentiable=True)))
         jax.grad(loss, argnums=(0, 1, 2, 3))(x, c1, c2, c3)
@@ -276,9 +278,14 @@ def test_counter_parity_backward():
         # shim parity: grad_stats() IS the grad.* namespace
         for k, v in gs.items():
             assert s.registry.value("grad." + k) == v
+        # executed counters in exact parity with the predicted info
+        # fields — the fused-adjoint walk dispatches what it planned
+        for k in ("kernel_stages", "einsum_stages", "coeff_kernel",
+                  "coeff_einsum", "fused_launches"):
+            assert gs[k] == info["grad_" + k], k
         total = (gs["kernel_stages"] + gs["einsum_stages"]
                  + gs["coeff_kernel"] + gs["coeff_einsum"])
-        assert total >= 8  # 2 recompute + >=3 chain + 3 coeff
+        assert total == info["grad_launches"] <= 4  # fused walk, was 8
         reset_grad_stats()
         assert grad_stats()["backward_calls"] == 0
         assert s.registry.value("grad.backward_calls") == 0
@@ -324,6 +331,33 @@ def test_traced_backward_exports_eight_attributed_launches(tmp_path):
     assert sum(1 for e in stage_like
                if e["args"]["parent_id"] in bwd_ids) >= 8
     assert loaded["counters"]["grad.backward_calls"] == 1
+
+
+def test_fused_backward_spans_attributed_like_forward():
+    """The fused-adjoint walk's launches carry the same span-attribution
+    contract as the staged one: every grad.* wrapper nests under
+    vjp.backward and the span count equals the planned launch count."""
+    x, c1, c2, c3 = _problem(16)
+    clear_plan_cache()
+    with obs.session() as s:
+        _, info = gemt3_planned(x, c1, c2, c3, with_info=True,
+                                differentiable=True)
+        assert info["grad_fused"] and info["grad_chain_depth"] >= 2
+        loss = lambda *a: jnp.sum(jnp.abs(
+            gemt3_planned(*a, differentiable=True)))
+        jax.grad(loss, argnums=(0, 1, 2, 3))(x, c1, c2, c3)
+        spans = s.tracer.spans()
+    bwd = [sp for sp in spans if sp.name.startswith("grad.")]
+    assert len(bwd) == info["grad_launches"]
+    names = sorted(sp.name for sp in bwd)
+    assert "grad.recompute:fused" in names
+    assert "grad.x:fused" in names
+    assert "grad.coeff:batched" in names
+    if info["grad_chain_depth"] == 2:  # staged tail stage of the pair walk
+        assert sum(1 for n in names if n.startswith("grad.chain:m")) == 1
+    (vjp,) = [sp for sp in spans if sp.name == "vjp.backward"]
+    for sp in bwd:
+        assert sp.parent_id == vjp.span_id
 
 
 # ---------------------------------------------------------------------------
