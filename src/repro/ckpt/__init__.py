@@ -4,4 +4,5 @@ Not a paper subsystem — production scaffolding for the north-star training
 path; re-meshed restores are exercised by the elastic runtime.  See
 ``docs/architecture.md`` ("Production substrate").
 """
-from .checkpoint import SaveHandle, latest_step, restore, save
+from .checkpoint import (CorruptCheckpoint, SaveHandle, latest_step,
+                         restore, save)

@@ -1,6 +1,14 @@
 """Sharded checkpointing: per-leaf .npy files + JSON manifest, atomic step
 directories, async save thread, retention policy.
 
+Integrity: every leaf file's on-disk bytes are SHA-256'd at save time and
+the digest stored in the manifest; :func:`restore` re-hashes before
+loading, so a torn write, bit rot, or external truncation surfaces as
+:class:`CorruptCheckpoint` instead of silently restoring garbage weights.
+When restoring "latest", a corrupt step falls back to the next older one
+(counted in ``ckpt.restore.corrupt_recovered``); an explicitly requested
+step raises.
+
 Multi-host note: each host would write only its addressable shards (the
 leaf loop uses ``jax.experimental.multihost_utils`` hooks in a real pod);
 on this single-host container the full array is written.  Restore reshards
@@ -9,6 +17,7 @@ runtime/elastic.py).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -23,6 +32,11 @@ import jax.numpy as jnp
 from ..obs import metrics as _metrics
 
 _SEP = "."
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A step directory failed integrity verification (bad manifest,
+    checksum mismatch, or unreadable leaf file)."""
 
 
 class SaveHandle:
@@ -108,9 +122,11 @@ def save(ckpt_dir: str, step: int, state, keep: int = 3,
                 # ml_dtypes (bf16/fp8): persist as raw uint bits
                 dtype_name = "bfloat16" if v.dtype.itemsize == 2 else dtype_name
                 v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
-            np.save(os.path.join(tmp, fname), v)
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, v)
             manifest[k] = {"file": fname, "shape": list(v.shape),
-                           "dtype": dtype_name}
+                           "dtype": dtype_name,
+                           "sha256": _file_sha256(fpath)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "leaves": manifest}, f)
         if os.path.exists(final):
@@ -138,6 +154,14 @@ def save(ckpt_dir: str, step: int, state, keep: int = 3,
     return handle
 
 
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def _prune(ckpt_dir: str, keep: int):
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
                    and not d.endswith(".tmp"))
@@ -153,26 +177,76 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int | None = None, shardings=None,
-            dtypes=None):
-    """Load a checkpoint; optionally device_put onto ``shardings`` (a pytree
-    of NamedSharding matching the saved structure) for elastic re-meshing."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+def _load_verified(d: str) -> tuple[dict, int]:
+    """Load one step directory with integrity verification.
+
+    Raises :class:`CorruptCheckpoint` on a missing/unparsable manifest, a
+    leaf whose on-disk bytes no longer hash to the manifest's digest (torn
+    write, truncation, bit rot), or an unloadable ``.npy``.  Manifests
+    predating the checksum field load unverified (back-compat).
+    """
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpoint(f"unreadable manifest in {d}: {e}") from e
     flat = {}
-    for k, meta in manifest["leaves"].items():
-        arr = np.load(os.path.join(d, meta["file"]))
+    for k, meta in manifest.get("leaves", {}).items():
+        path = os.path.join(d, meta["file"])
+        want = meta.get("sha256")
+        if want is not None:
+            try:
+                got = _file_sha256(path)
+            except OSError as e:
+                raise CorruptCheckpoint(
+                    f"missing leaf {meta['file']} in {d}: {e}") from e
+            if got != want:
+                raise CorruptCheckpoint(
+                    f"checksum mismatch for {meta['file']} in {d}: "
+                    f"stored {want[:12]}…, found {got[:12]}…")
+        try:
+            arr = np.load(path)
+        except (OSError, ValueError) as e:
+            raise CorruptCheckpoint(
+                f"unloadable leaf {meta['file']} in {d}: {e}") from e
         if meta["dtype"] not in (str(arr.dtype),):
             import ml_dtypes
             target = getattr(ml_dtypes, meta["dtype"], None)
             if target is not None:
                 arr = arr.view(target)
         flat[k] = arr
+    return flat, manifest["step"]
+
+
+def restore(ckpt_dir: str, step: int | None = None, shardings=None,
+            dtypes=None):
+    """Load a checkpoint; optionally device_put onto ``shardings`` (a pytree
+    of NamedSharding matching the saved structure) for elastic re-meshing.
+
+    Every leaf is checksum-verified against the manifest before use.  With
+    ``step=None`` a corrupt latest step falls back to the next older one
+    (each fallback counts ``ckpt.restore.corrupt_recovered``); naming a
+    ``step`` explicitly raises :class:`CorruptCheckpoint` instead — the
+    caller asked for *those* bytes.
+    """
+    if not os.path.isdir(ckpt_dir):
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    candidates = [step] if step is not None else steps
+    flat = None
+    for i, s in enumerate(candidates):
+        d = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            flat, step = _load_verified(d)
+            break
+        except CorruptCheckpoint:
+            if step is not None or i == len(candidates) - 1:
+                raise
+            _metrics.inc("ckpt.restore.corrupt_recovered")
     tree = _unflatten(flat)
     if shardings is not None:
         flat_sh = _flatten(shardings)
@@ -180,4 +254,4 @@ def restore(ckpt_dir: str, step: int | None = None, shardings=None,
             k: jax.device_put(jnp.asarray(v), flat_sh[k]) if k in flat_sh
             else jnp.asarray(v)
             for k, v in _flatten(tree).items()})
-    return tree, manifest["step"]
+    return tree, step

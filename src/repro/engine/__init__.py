@@ -16,7 +16,12 @@ kernels — the recompute prefix, the cotangent chain (intermediates
 emitted from the launch that produces them) and the three coefficient
 cotangents collapse from eight launches to as few as three
 (``plan_adjoint_chain`` extends the pair/triple fusion byte model to the
-backward).  See ``docs/engine.md`` and ``docs/distributed.md``; the
+backward).  Numerics-guarded since PR 9: ``accum=`` selects plain / f32 /
+Neumaier-compensated accumulation, ``error_budget=`` holds the planner's
+a-priori rounding bound to a ceiling (escalating the accumulation mode and
+demoting fusion depth as needed), and the ``numerics`` module's
+finite-guard classifies NaN/Inf outputs as retryable (``docs/numerics.md``).
+See ``docs/engine.md`` and ``docs/distributed.md``; the
 paper-section→module map is in ``docs/architecture.md``.
 """
 from .plan import (DEFAULT_ESOP_THRESHOLD, DEFAULT_VMEM_BUDGET, FUSE_MODES,
@@ -37,6 +42,9 @@ from .lower import (coeff_grad_backend, lower_chain_pair, lower_chain_triple,
 from .autotune import (AutotuneCache, autotune_fused, autotune_fused3,
                        autotune_gemm, default_cache_path, make_fused3_key,
                        make_fused_key, make_key)
+from .numerics import (ACCUM_MODES, NonfiniteOutput, accum_out_dtype,
+                       enforce_error_budget, finite_guard, normalize_accum,
+                       plan_error_bound, stage_error_bound, unit_roundoff)
 from .executor import (clear_plan_cache, default_mode_axes, execute,
                        execute_sharded_with_info, execute_with_info,
                        gemt3_planned, grad_stats, invalidate_plans,
@@ -59,6 +67,9 @@ __all__ = [
     "lower_stage", "mode_fold", "mode_unfold",
     "AutotuneCache", "autotune_fused", "autotune_fused3", "autotune_gemm",
     "default_cache_path", "make_fused3_key", "make_fused_key", "make_key",
+    "ACCUM_MODES", "NonfiniteOutput", "accum_out_dtype",
+    "enforce_error_budget", "finite_guard", "normalize_accum",
+    "plan_error_bound", "stage_error_bound", "unit_roundoff",
     "clear_plan_cache", "default_mode_axes", "execute",
     "execute_sharded_with_info", "execute_with_info", "gemt3_planned",
     "grad_stats", "invalidate_plans", "plan_cache_info", "plan_gemt3",

@@ -48,8 +48,8 @@ def default_cache_path() -> str:
 
 
 def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "",
-             adjoint: bool = False) -> str:
-    """Autotune-cache key for a staged GEMM (cache version v3).
+             adjoint: bool = False, accum: str = "plain") -> str:
+    """Autotune-cache key for a staged GEMM (cache version v4).
 
     ``adjoint`` gives the backward pass its own tuning role: earlier
     versions let adjoint stages hit the forward entries ("a transposed
@@ -60,38 +60,45 @@ def make_key(m: int, n: int, k: int, dtype, kind: str, sig: str = "",
     residency.  Forward-tuned tiles replaying for the adjoint was a live
     bug (tile-sharing), so the role is part of the key and the v3 bump
     orphans every v2 entry that was written without one.
+
+    ``accum`` (v4) keys the guarded-numerics accumulation mode: a
+    compensated dispatch carries an extra comp scratch and per-step adds,
+    so its best tiles are not the plain dispatch's best tiles.
     """
     role = "adj" if adjoint else "fwd"
-    return f"v3:{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{role}|{sig}"
+    return (f"v4:{m}x{n}x{k}|{jnp.dtype(dtype).name}|{kind}|{role}"
+            f"|{accum}|{sig}")
 
 
 def make_fused_key(u: int, na: int, ka: int, nb: int, kb: int,
                    dtype, sig: str = "",
                    vmem_budget: int | None = None,
-                   adjoint: bool = False) -> str:
-    """Autotune-cache key for the fused pair kernel (cache version v4).
+                   adjoint: bool = False, accum: str = "plain") -> str:
+    """Autotune-cache key for the fused pair kernel (cache version v5).
 
     The VMEM budget is part of the problem, exactly as in the plan cache's
     ``vb=`` component: tiles tuned under a roomy budget must never replay
     under a stricter one (the budget filter would not re-run on a cache
     hit).  The v4 bump adds the forward/adjoint role — see
-    :func:`make_key` — and orphans role-less v3 entries.
+    :func:`make_key` — and orphans role-less v3 entries; v5 adds the
+    accumulation mode (the comp scratch changes the footprint the budget
+    filter sees).
     """
     role = "adj" if adjoint else "fwd"
-    return (f"fused:v4:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
-            f"|{role}|{sig}|vb{vmem_budget}")
+    return (f"fused:v5:{u}x{na}x{ka}x{nb}x{kb}|{jnp.dtype(dtype).name}"
+            f"|{role}|{accum}|{sig}|vb{vmem_budget}")
 
 
 def make_fused3_key(u: int, na: int, ka: int, nb: int, kb: int,
                     nc: int, kc: int, dtype, sig: str = "",
                     vmem_budget: int | None = None,
-                    adjoint: bool = False) -> str:
+                    adjoint: bool = False, accum: str = "plain") -> str:
     """Autotune-cache key for the whole-transform megakernel (v3 adds the
-    forward/adjoint role and orphans role-less v2 entries — see
-    :func:`make_key`)."""
+    forward/adjoint role and orphans role-less v2 entries, v4 the
+    accumulation mode — see :func:`make_key`)."""
     role = "adj" if adjoint else "fwd"
-    return (f"fused3:v3:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
-            f"|{jnp.dtype(dtype).name}|{role}|{sig}|vb{vmem_budget}")
+    return (f"fused3:v4:{u}x{na}x{ka}x{nb}x{kb}x{nc}x{kc}"
+            f"|{jnp.dtype(dtype).name}|{role}|{accum}|{sig}|vb{vmem_budget}")
 
 
 class AutotuneCache:
@@ -198,17 +205,20 @@ def autotune_gemm(
     reps: int = 2,
     use_pallas: bool | None = None,
     adjoint: bool = False,
+    accum: str = "plain",
 ) -> tuple[int, int, int]:
     """Hill-climb (bm, bn, bk) for ``x @ c`` under dispatch ``kind``.
 
     Returns the best block sizes; a cache hit skips all measurement.
     ``adjoint`` selects the backward tuning role (its own cache entries —
-    see :func:`make_key`).
+    see :func:`make_key`); ``accum`` keys and measures the guarded
+    accumulation mode's dispatch.
     """
     m, kdim = x.shape
     n = c.shape[1]
     cache = cache if cache is not None else AutotuneCache()
-    key = make_key(m, n, kdim, x.dtype, kind, sig, adjoint=adjoint)
+    key = make_key(m, n, kdim, x.dtype, kind, sig, adjoint=adjoint,
+                   accum=accum)
     knobs_live = use_pallas is True or ops.on_tpu()
     hit = cache.get(key)
     # An untuned entry (defaults recorded off-TPU) must not suppress real
@@ -240,7 +250,8 @@ def autotune_gemm(
         bm, bn, bk = cfg
 
         def call():
-            y = dispatch(x, c, bm=bm, bn=bn, bk=bk, use_pallas=use_pallas)
+            y = dispatch(x, c, bm=bm, bn=bn, bk=bk, use_pallas=use_pallas,
+                         accum=accum)
             return y[0] if isinstance(y, tuple) else y
 
         sp = _trace.NULL_SPAN
@@ -285,6 +296,7 @@ def autotune_fused(
     use_pallas: bool | None = None,
     vmem_budget: int | None = None,
     adjoint: bool = False,
+    accum: str = "plain",
 ) -> tuple[int, int, int]:
     """Hill-climb the fused kernel's ``(bu, bka, bnb)`` tile triple.
 
@@ -307,7 +319,7 @@ def autotune_fused(
     # pinned na tile must not leak mismatched tiles (the budget itself is
     # keyed inside make_fused_key since the v2 bump).
     key = (make_fused_key(u, na, ka, nb, kb, dtype, sig, vmem_budget=budget,
-                          adjoint=adjoint)
+                          adjoint=adjoint, accum=accum)
            + f"|bna{bna}|kbp{kbp}")
     isz = jnp.dtype(dtype).itemsize
     lo, _hi = _BOUNDS
@@ -315,7 +327,7 @@ def autotune_fused(
 
     def fits(cfg):
         return fused_vmem_bytes(cfg[0], cfg[1], cfg[2], bna, kbp,
-                                isz) <= budget
+                                isz, accum) <= budget
 
     knobs_live = use_pallas is True or ops.on_tpu()
     hit = cache.get(key)
@@ -341,7 +353,8 @@ def autotune_fused(
 
         def call():
             y, _ = ops.fused_gemt(x3, ca, cb, bu=bu, bka=bka, bnb=bnb,
-                                  bna=bna, use_pallas=use_pallas)
+                                  bna=bna, use_pallas=use_pallas,
+                                  accum=accum)
             return y
 
         sp = _trace.NULL_SPAN
@@ -389,6 +402,7 @@ def autotune_fused3(
     use_pallas: bool | None = None,
     vmem_budget: int | None = None,
     adjoint: bool = False,
+    accum: str = "plain",
 ) -> tuple[int, int, int, int]:
     """Hill-climb the megakernel's ``(bu, bka, bnb, bnc)`` tile quadruple.
 
@@ -409,7 +423,7 @@ def autotune_fused3(
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
     cache = cache if cache is not None else AutotuneCache()
     key = (make_fused3_key(u, na, ka, nb, kb, nc, kc, dtype, sig,
-                           vmem_budget=budget, adjoint=adjoint)
+                           vmem_budget=budget, adjoint=adjoint, accum=accum)
            + f"|bna{bna}|kbp{kbp}|kcp{kcp}")
     isz = jnp.dtype(dtype).itemsize
     lo, _hi = _BOUNDS
@@ -417,7 +431,7 @@ def autotune_fused3(
 
     def fits(cfg):
         return fused3_vmem_bytes(cfg[0], cfg[1], cfg[2], cfg[3], bna, kbp,
-                                 kcp, isz) <= budget
+                                 kcp, isz, accum) <= budget
 
     knobs_live = use_pallas is True or ops.on_tpu()
     hit = cache.get(key)
@@ -445,7 +459,8 @@ def autotune_fused3(
 
         def call():
             y, _ = ops.fused3_gemt(x4, ca, cb, cc, bu=bu, bka=bka, bnb=bnb,
-                                   bnc=bnc_, bna=bna, use_pallas=use_pallas)
+                                   bnc=bnc_, bna=bna, use_pallas=use_pallas,
+                                   accum=accum)
             return y
 
         sp = _trace.NULL_SPAN

@@ -229,6 +229,8 @@ def plan_gemt3(
     fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     backend: str | None = None,  # pin every stage ("einsum"); None = auto
+    accum: str | None = None,  # accumulation mode; see engine.numerics
+    error_budget: float | None = None,  # max a-priori relative error bound
     mesh=None,
     axes=None,
     batch_axis=None,
@@ -238,6 +240,7 @@ def plan_gemt3(
         tuple(x_shape), jnp.dtype(x_dtype).name,
         tuple(order) if order is not None else None,
         esop_threshold, block_sizes, fuse, vmem_budget, backend,
+        accum, error_budget,
         _fingerprint(c1), _fingerprint(c2), _fingerprint(c3),
         _mesh_desc(mesh, axes, batch_axis),
     )
@@ -252,12 +255,19 @@ def plan_gemt3(
                               esop_threshold=esop_threshold,
                               block_sizes=block_sizes, fuse=fuse,
                               vmem_budget=vmem_budget, backend=backend,
+                              accum=accum, error_budget=error_budget,
                               mesh=mesh, axes=axes,
                               batch_axis=batch_axis)
         _PLAN_CACHE[key] = plan
         _metrics.inc("plan.builds")
-        if plan.events:
-            _metrics.inc("plan.fusion_degradations", len(plan.events))
+        fusion_events = [e for e in plan.events
+                         if e.get("kind") != "numerics_degradation"]
+        if fusion_events:
+            _metrics.inc("plan.fusion_degradations", len(fusion_events))
+        numerics_events = [e for e in plan.events
+                           if e.get("kind") == "numerics_degradation"]
+        if numerics_events:
+            _metrics.inc("plan.numerics_degradations", len(numerics_events))
     else:
         _metrics.inc("plan.cache_hits")
     return plan
@@ -294,7 +304,7 @@ def _autotuned_plan(
         c = cs[st.mode]
         sig = _fingerprint(c)
         key = make_key(rows, st.k, st.n, c.dtype, st.backend, sig,
-                       adjoint=adjoint)
+                       adjoint=adjoint, accum=st.accum)
         hit = cache.get(key)
         knobs_live = use_pallas is True or ops.on_tpu()
         # Warm-cache fast path (no probe allocation) — unless the entry is
@@ -308,7 +318,7 @@ def _autotuned_plan(
             c_arg = c if int(c.shape[0]) == st.n else c[: st.n]
             bm, bn, bk = autotune_gemm(probe, c_arg, st.backend, sig=sig,
                                        cache=cache, use_pallas=use_pallas,
-                                       adjoint=adjoint)
+                                       adjoint=adjoint, accum=st.accum)
         stages.append(dataclasses.replace(st, bm=bm, bn=bn, bk=bk))
 
     fused = plan.fused
@@ -321,7 +331,8 @@ def _autotuned_plan(
             start=(fused3.bu, fused3.bka, fused3.bnb, fused3.bnc),
             bna=fused3.bna, kbp=fused3.kbp, kcp=fused3.kcp,
             sig=":".join(_fingerprint(c) for c in (ca, cb, cc)), cache=cache,
-            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint)
+            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint,
+            accum=fused3.accum)
         if (bu, bka, bnb, bnc) != (fused3.bu, fused3.bka, fused3.bnb,
                                    fused3.bnc):
             fused3 = refresh_fused_triple(
@@ -335,7 +346,8 @@ def _autotuned_plan(
             start=(fused.bu, fused.bka, fused.bnb),
             bna=fused.bna, kbp=fused.kbp,
             sig=f"{_fingerprint(ca)}:{_fingerprint(cb)}", cache=cache,
-            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint)
+            use_pallas=use_pallas, vmem_budget=vmem_budget, adjoint=adjoint,
+            accum=fused.accum)
         if (bu, bka, bnb) != (fused.bu, fused.bka, fused.bnb):
             fused = refresh_fused_pair(
                 dataclasses.replace(fused, bu=bu, bka=bka, bnb=bnb),
@@ -474,6 +486,16 @@ def _assemble_info(plan: GemtPlan, stage_infos: list[dict]) -> dict:
         # Planner events (fusion degradations) replayed from the plan —
         # present on cache hits too, so serving sees why a tier demoted.
         "events": list(plan.events),
+        # Guarded-numerics accounting: the resolved accumulation mode, the
+        # a-priori staged rounding bound it was held to, and any budget
+        # escalations/demotions (docs/numerics.md).
+        "numerics": {
+            "accum": plan.accum,
+            "error_bound": plan.error_bound,
+            "error_budget": plan.error_budget,
+            "events": [e for e in plan.events
+                       if e.get("kind") == "numerics_degradation"],
+        },
     }
 
 
@@ -1427,6 +1449,8 @@ def gemt3_planned(
     fuse: bool | str | None = None,  # see FUSE_MODES
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     backend: str | None = None,  # pin every stage ("einsum"); None = auto
+    accum: str | None = None,  # "plain" | "f32" | "compensated"
+    error_budget: float | None = None,  # max a-priori relative error bound
     autotune: bool = False,
     autotune_cache: AutotuneCache | str | None = None,
     use_pallas: bool | None = None,
@@ -1452,6 +1476,16 @@ def gemt3_planned(
     serving runtime's last-resort degradation tier (``docs/serving.md``);
     the pin applies to the forward plan (the adjoint keeps its own backend
     choice).  ``x`` may carry a leading batch axis.
+
+    ``accum`` selects the guarded-numerics accumulation mode
+    (``"plain"``/``"f32"``/``"compensated"`` — docs/numerics.md): ``"f32"``
+    keeps float32 partials through every stage boundary, ``"compensated"``
+    adds a Neumaier-compensated reduction in the kernels.  ``error_budget``
+    holds the plan's a-priori staged rounding bound to a ceiling — the
+    planner escalates the accumulation mode (and, through the VMEM
+    footprint, may demote fusion depth) until the bound fits, recording
+    ``numerics_degradation`` events; ``info["numerics"]`` reports the
+    resolved mode and bound.
 
     ``mesh`` switches to the TriADA distributed schedule: ``x`` (global)
     is sharded per ``axes`` (default: mesh axes in order, e.g.
@@ -1479,6 +1513,7 @@ def gemt3_planned(
     plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
                       esop_threshold=esop_threshold, block_sizes=block_sizes,
                       fuse=fuse, vmem_budget=vmem_budget, backend=backend,
+                      accum=accum, error_budget=error_budget,
                       mesh=mesh, axes=axes, batch_axis=batch_axis)
     if autotune and not _is_traced(c1, c2, c3):
         # Per-shard batch: the tuned tiles must see the local GEMM rows.

@@ -47,8 +47,15 @@ def _batched_spec(spec: str) -> str:
 _EINSUM4 = {m: _batched_spec(s) for m, s in _EINSUM3.items()}
 
 
-def _einsum_stage(x: jnp.ndarray, c: jnp.ndarray, mode: int) -> jnp.ndarray:
+def _einsum_stage(x: jnp.ndarray, c: jnp.ndarray, mode: int,
+                  accum: str = "plain") -> jnp.ndarray:
     spec = (_EINSUM4 if x.ndim == 4 else _EINSUM3)[mode]
+    if accum != "plain" and not jnp.iscomplexobj(x):
+        # Promoted accumulation on the einsum fallback: contract in f32 and
+        # keep the f32 result (no Neumaier variant here — einsum stages are
+        # the planner's tiny/complex fallback; see docs/numerics.md).
+        return jnp.einsum(spec, x.astype(jnp.float32),
+                          c.astype(jnp.float32))
     return jnp.einsum(spec, x, c)
 
 
@@ -101,18 +108,19 @@ def lower_stage(
             rows = x.size // max(x.shape[x.ndim - 3 + stage.mode - 1], 1)
             info = {"mode": stage.mode, "backend": "einsum",
                     "rows": int(rows), "macs": stage.macs}
-            return _einsum_stage(x, c, stage.mode), info
+            return _einsum_stage(x, c, stage.mode, stage.accum), info
         x2d, lead = mode_unfold(x, stage.mode)
         info: dict = {"mode": stage.mode, "backend": stage.backend,
                       "rows": int(x2d.shape[0]), "macs": stage.macs}
         if stage.backend == "esop":
             y2d, esop_info = ops.esop_gemm(x2d, c, bm=stage.bm, bn=stage.bn,
                                            bk=stage.bk, use_pallas=use_pallas,
-                                           plan=esop_plan)
+                                           plan=esop_plan,
+                                           accum=stage.accum)
             info.update(esop_info)
         elif stage.backend == "sr_gemm":
             y2d = ops.sr_gemm(x2d, c, bm=stage.bm, bn=stage.bn, bk=stage.bk,
-                              use_pallas=use_pallas)
+                              use_pallas=use_pallas, accum=stage.accum)
         else:
             raise ValueError(f"unknown backend {stage.backend!r}")
         return mode_fold(y2d, lead, stage.mode), info
@@ -157,11 +165,12 @@ def lower_sharded_stage(
                       "axis": stage.axis, "shards": stage.shards,
                       "collective_bytes": stage.collective_bytes}
         if stage.backend == "einsum":
-            partial = _einsum_stage(x, c_rows, stage.mode)
+            partial = _einsum_stage(x, c_rows, stage.mode, stage.accum)
         elif stage.backend == "sr_gemm":
             x2d, lead = mode_unfold(x, stage.mode)
             y2d = ops.sr_gemm(x2d, c_rows, bm=stage.bm, bn=stage.bn,
-                              bk=stage.bk, use_pallas=use_pallas)
+                              bk=stage.bk, use_pallas=use_pallas,
+                              accum=stage.accum)
             partial = mode_fold(y2d, lead, stage.mode)
         else:
             # The planner never assigns esop here: the row slice is selected
@@ -287,7 +296,8 @@ def lower_fused_pair(
         x3 = xm.reshape(-1, xm.shape[-2], xm.shape[-1])
         y3, kinfo = ops.fused_gemt(x3, ca, cb, bu=fp.bu, bka=fp.bka,
                                    bnb=fp.bnb, bna=fp.bna,
-                                   use_pallas=use_pallas, plans=plans)
+                                   use_pallas=use_pallas, plans=plans,
+                                   accum=fp.accum)
         y = jnp.moveaxis(y3.reshape(*lead, fp.ka, fp.kb), (-2, -1),
                          (axa, axb))
     info: dict = {"modes": (fp.mode_a, fp.mode_b), "backend": "fused",
@@ -310,6 +320,7 @@ def lower_chain_pair(
     *,
     use_pallas: bool | None = None,
     plan_a: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Two consecutive stages as one chain launch, the inter-stage
     intermediate emitted.  Returns ``(y, y1)`` folded back into tensor
@@ -334,7 +345,7 @@ def lower_chain_pair(
     bu, bka, bnb, bna = tiles[0], tiles[1], tiles[2], tiles[3]
     y3, y13, _ = ops.chain_gemt(x3, ca, cb, bu=bu, bka=bka, bnb=bnb,
                                 bna=bna, use_pallas=use_pallas,
-                                plan_a=plan_a)
+                                plan_a=plan_a, accum=accum)
     y = jnp.moveaxis(y3.reshape(*lead, ka, kb), (-2, -1), (axa, axb))
     y1 = jnp.moveaxis(y13.reshape(*lead, nb, ka), (-2, -1), (axb, axa))
     return y, y1
@@ -352,6 +363,7 @@ def lower_chain_triple(
     *,
     use_pallas: bool | None = None,
     plan_a: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """All three stages as one chain launch with both intermediates
     emitted.  Returns ``(y, y1, y2)`` folded back into tensor modes
@@ -375,7 +387,8 @@ def lower_chain_triple(
                               tiles[4])
     y4, y14, y24, _ = ops.chain3_gemt(x4, ca, cb, cc, bu=bu, bka=bka,
                                       bnb=bnb, bnc=bnc, bna=bna,
-                                      use_pallas=use_pallas, plan_a=plan_a)
+                                      use_pallas=use_pallas, plan_a=plan_a,
+                                      accum=accum)
     y = jnp.moveaxis(y4.reshape(*lead, ka, kb, kc), (-3, -2, -1),
                      (axa, axb, axc))
     y1 = jnp.moveaxis(y14.reshape(*lead, nc, nb, ka), (-3, -2, -1),
@@ -470,7 +483,8 @@ def lower_fused_triple(
         x4 = xm.reshape(-1, *xm.shape[-3:])
         y4, kinfo = ops.fused3_gemt(x4, ca, cb, cc, bu=ft.bu, bka=ft.bka,
                                     bnb=ft.bnb, bnc=ft.bnc, bna=ft.bna,
-                                    use_pallas=use_pallas, plans=plans)
+                                    use_pallas=use_pallas, plans=plans,
+                                    accum=ft.accum)
         y = jnp.moveaxis(y4.reshape(*lead, ft.ka, ft.kb, ft.kc),
                          (-3, -2, -1), (axa, axb, axc))
     info: dict = {"modes": (ft.mode_a, ft.mode_b, ft.mode_c),

@@ -1,0 +1,191 @@
+"""Guarded numerics: accumulation modes, an a-priori error model, and the
+nonfinite-output fault class.
+
+TriADA pitches the ESOP method as "enhancing computational accuracy and
+stability"; this module is the repro's numerics layer — the correctness
+prerequisite for the quantized-coefficient roadmap item (narrow datatypes
+only pay off when error is budgeted per accumulation).
+
+Three pieces:
+
+* **Accumulation modes** (:data:`ACCUM_MODES`) — how a kernel folds its
+  contraction stream into the output:
+
+  ========== ============================================================
+  ``plain``        fp32 accumulator scratch, result rounded back to the
+                   operand dtype (the PR 1–8 behavior).
+  ``f32``          fp32 accumulator, result **kept** in float32 — sub-fp32
+                   operands (bf16/fp16) skip the output downcast, the
+                   dominant error term at serving precisions.
+  ``compensated``  ``f32`` plus a Neumaier-compensated reduction across
+                   the streamed K chunks: the accumulated rounding error
+                   is carried in a second register and folded back at the
+                   flush, making the bound independent of contraction
+                   depth K.
+  ========== ============================================================
+
+  Complex operands (DFT factors) always run ``plain`` — the planner pins
+  those stages to einsum anyway and the compensation algebra is specified
+  for reals.
+
+* **Error model** — a first-order a-priori rounding bound per stage
+  (:func:`stage_error_bound`) and per plan (:func:`plan_error_bound`):
+
+  .. math::
+
+      \\beta_{stage} \\approx K\\,u_{acc} + u_{out}
+      \\qquad\\text{(plain / f32)}
+
+      \\beta_{stage} \\approx 2\\,u_{acc} + u_{out}
+      \\qquad\\text{(compensated)}
+
+  where ``u_acc`` is the fp32 accumulator's unit roundoff, ``u_out`` the
+  output dtype's (the operand dtype under ``plain``, fp32 otherwise) and
+  K the stage's contraction depth.  The plan bound sums the three stage
+  bounds — a conservative staged-schedule bound (fused schedules skip the
+  intermediate downcasts, so they only do better).  ``build_plan``
+  evaluates it against the ``error_budget`` knob and escalates the
+  accumulation mode (``plain`` → ``f32`` → ``compensated``) until the
+  bound fits, recording ``numerics_degradation`` events
+  (:func:`enforce_error_budget`) next to the ``fusion_degradation``
+  stream.  The compensated scratch is folded into the ``*_vmem_bytes``
+  ladders, so forcing compensation can itself demote triple → pair.
+
+* **Nonfinite recovery** — :class:`NonfiniteOutput` classifies a NaN/Inf
+  result as a *retryable* fault; :func:`finite_guard` is the cheap
+  post-launch verdict (one ``jnp.isfinite`` reduction + host sync, off
+  the hot path by default, sampled every N requests in serve — see
+  ``ResilientDxtServer(finite_check_every=...)`` and the ``nan`` fault
+  kind in :mod:`repro.runtime.faults`).
+
+See ``docs/numerics.md`` for the worked examples.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "ACCUM_MODES",
+    "NonfiniteOutput",
+    "normalize_accum",
+    "accum_out_dtype",
+    "unit_roundoff",
+    "stage_error_bound",
+    "plan_error_bound",
+    "enforce_error_budget",
+    "finite_guard",
+]
+
+# Accumulation modes, cheapest first — the escalation order
+# enforce_error_budget walks when a bound blows its budget.
+ACCUM_MODES = ("plain", "f32", "compensated")
+
+
+class NonfiniteOutput(RuntimeError):
+    """A kernel/plan produced NaN/Inf output — retryable: the serving
+    runtime retries one ladder rung down with compensation forced, the
+    training step skips the update (``docs/numerics.md``)."""
+
+
+def normalize_accum(accum) -> str:
+    """Validate and default an ``accum`` knob (None -> ``"plain"``)."""
+    if accum is None:
+        return "plain"
+    if accum not in ACCUM_MODES:
+        raise ValueError(
+            f"accum must be one of {ACCUM_MODES} (or None), got {accum!r}")
+    return accum
+
+
+def accum_out_dtype(dtype, accum: str):
+    """Output dtype under ``accum``: the operand dtype for ``plain``,
+    float32 for the promoted modes (complex dtypes never promote — see
+    module docstring)."""
+    dtype = jnp.dtype(dtype)
+    if accum == "plain" or jnp.issubdtype(dtype, jnp.complexfloating):
+        return dtype
+    if jnp.issubdtype(dtype, jnp.floating) and dtype.itemsize < 4:
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def unit_roundoff(dtype) -> float:
+    """Unit roundoff u = eps/2 of a float dtype (complex uses its real
+    component's)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        dtype = jnp.dtype(jnp.float32 if dtype.itemsize == 8 else jnp.float64)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        raise ValueError(f"unit_roundoff needs a float dtype, got {dtype}")
+    return float(jnp.finfo(dtype).eps) / 2.0
+
+
+def stage_error_bound(depth: int, x_dtype, accum: str = "plain") -> float:
+    """First-order relative rounding bound of one K-deep contraction stage.
+
+    ``depth`` is the contraction extent K (a stage contracts N_s terms —
+    ``StagePlan.n``).  The kernels always accumulate in fp32 scratch, so
+    ``u_acc`` is fp32's roundoff; ``u_out`` is the flush rounding — the
+    operand dtype under ``plain`` (the bf16 downcast that dominates at
+    serving precisions), fp32 under the promoted modes.  Compensated
+    summation replaces the K-proportional term with a depth-independent
+    ``2 u_acc`` (Neumaier's bound, to first order).
+    """
+    accum = normalize_accum(accum)
+    u_acc = unit_roundoff(jnp.float32)
+    u_out = unit_roundoff(accum_out_dtype(x_dtype, accum))
+    k_term = 2.0 * u_acc if accum == "compensated" else depth * u_acc
+    return k_term + u_out
+
+
+def plan_error_bound(stages, x_dtype, accum: str = "plain") -> float:
+    """Composed bound of a 3-stage plan: the sum of its stage bounds.
+
+    ``stages`` is any iterable of objects with an ``n`` attribute (the
+    stage's contraction depth — ``GemtPlan.stages`` works directly).
+    This is the **staged** schedule's bound, the conservative envelope:
+    fused schedules keep intermediates in fp32 VMEM and skip the
+    inter-stage downcasts, so their true error is never worse.
+    """
+    return float(sum(stage_error_bound(int(s.n), x_dtype, accum)
+                     for s in stages))
+
+
+def enforce_error_budget(stages, x_dtype, accum: str,
+                         error_budget: float) -> tuple[str, float, list]:
+    """Escalate ``accum`` until the plan bound fits ``error_budget``.
+
+    Returns ``(accum, bound, events)``: the (possibly escalated)
+    accumulation mode, its bound, and one ``numerics_degradation`` event
+    per escalation step carrying the bound numbers — the planner surfaces
+    these next to the ``fusion_degradation`` stream.  Complex operands
+    never escalate (see module docstring); if even ``compensated`` blows
+    the budget the last mode is kept and the final event says so
+    (``"budget_met": False``) — the planner has no cheaper lever left.
+    """
+    accum = normalize_accum(accum)
+    bound = plan_error_bound(stages, x_dtype, accum)
+    events: list[dict] = []
+    if jnp.issubdtype(jnp.dtype(x_dtype), jnp.complexfloating):
+        return accum, bound, events
+    idx = ACCUM_MODES.index(accum)
+    while bound > error_budget and idx + 1 < len(ACCUM_MODES):
+        nxt = ACCUM_MODES[idx + 1]
+        nbound = plan_error_bound(stages, x_dtype, nxt)
+        events.append({
+            "kind": "numerics_degradation", "reason": "error_budget",
+            "accum_from": ACCUM_MODES[idx], "accum_to": nxt,
+            "bound_before": bound, "bound_after": nbound,
+            "error_budget": float(error_budget),
+            "budget_met": nbound <= error_budget,
+        })
+        accum, bound, idx = nxt, nbound, idx + 1
+    return accum, bound, events
+
+
+def finite_guard(y) -> bool:
+    """Post-launch finiteness verdict: True when every element of ``y``
+    is finite.  One ``jnp.isfinite`` reduction plus a scalar host sync —
+    cheap, but a sync, which is why serve samples it
+    (``finite_check_every``) instead of running it per request."""
+    return bool(jnp.isfinite(y).all())

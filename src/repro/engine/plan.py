@@ -52,6 +52,7 @@ import numpy as np
 
 from ..core.esop import block_nonzero_mask
 from ..kernels.fused_gemt import kb_padded
+from .numerics import enforce_error_budget, normalize_accum, plan_error_bound
 
 AxisName = str | tuple[str, ...] | None
 
@@ -157,6 +158,7 @@ class StagePlan:
     axis: AxisName = None  # mesh axis sharding this mode (None = local stage)
     shards: int = 1  # size of that axis (1 = unsharded)
     collective_bytes: int = 0  # modeled per-device psum_scatter ICI bytes
+    accum: str = "plain"  # accumulation mode (engine/numerics.py)
 
     @property
     def k_local(self) -> int:
@@ -192,6 +194,7 @@ class FusedPairPlan:
     macs: int  # dense MACs of the two covered stages
     zero_block_frac_a: float
     zero_block_frac_b: float
+    accum: str = "plain"  # accumulation mode (folds comp scratch into VMEM)
 
     @property
     def hbm_savings(self) -> float:
@@ -237,6 +240,7 @@ class FusedTriplePlan:
     zero_block_frac_a: float
     zero_block_frac_b: float
     zero_block_frac_c: float
+    accum: str = "plain"  # accumulation mode (folds comp scratch into VMEM)
 
     @property
     def hbm_savings(self) -> float:
@@ -269,9 +273,14 @@ class GemtPlan:
     collective_bytes: int = 0  # modeled per-device ICI bytes (psum_scatters)
     # Plan-time degradation record: fusion demotions (triple→pair→staged)
     # forced by the VMEM budget or the byte model, each with the numbers
-    # that forced it.  Replayed as info["events"] on every execution of
-    # this (cached) plan — see docs/observability.md.
+    # that forced it, plus numerics_degradation accumulation escalations
+    # (engine/numerics.py).  Replayed as info["events"] on every execution
+    # of this (cached) plan — see docs/observability.md.
     events: tuple = ()
+    # --- guarded numerics (engine/numerics.py, docs/numerics.md) ---
+    accum: str = "plain"  # resolved accumulation mode (after budget walk)
+    error_bound: float = 0.0  # a-priori staged-schedule rounding bound
+    error_budget: float | None = None  # the knob the bound was held to
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -529,17 +538,22 @@ def order_costs(
 
 
 def fused_vmem_bytes(bu: int, bka: int, bnb: int, bna: int, kbp: int,
-                     itemsize: int) -> int:
+                     itemsize: int, accum: str = "plain") -> int:
     """Modeled VMEM footprint of the fused kernel at these tile sizes.
 
     Streamed operands are double-buffered by the Pallas pipeline (×2); the
     stage-a partial and the output accumulator are fp32 scratch.
+    ``accum="compensated"`` adds the Neumaier comp register mirroring the
+    output accumulator (engine/numerics.py) — the footprint the budget
+    ladder sees, so forcing compensation can itself demote fusion depth.
     """
+    comp = 4 * bu * bka * kbp if accum == "compensated" else 0
     return (2 * bu * bnb * bna * itemsize   # streamed X slab
             + 2 * bna * bka * itemsize      # streamed C_a block
             + 2 * bnb * kbp * itemsize      # resident C_b slab
             + 4 * bu * bnb * bka            # stage-a partial (f32)
             + 4 * bu * bka * kbp            # output accumulator (f32)
+            + comp                          # Neumaier comp (f32, optional)
             + 2 * bu * bka * kbp * itemsize)  # output tile
 
 
@@ -547,6 +561,7 @@ def fused_tile_sizes(
     rows_total: int, na: int, ka: int, nb: int, kb: int,
     itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
     start: tuple[int, int, int] | None = None,
+    accum: str = "plain",
 ) -> tuple[int, int, int, int, int] | None:
     """Pick ``(bu, bka, bnb, bna, kbp)`` fitting the VMEM budget, or None.
 
@@ -570,7 +585,7 @@ def fused_tile_sizes(
 
     def footprint():
         return fused_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
-                                tiles["bna"], kbp, itemsize)
+                                tiles["bna"], kbp, itemsize, accum)
 
     while footprint() > vmem_budget:
         shrinkable = [k for k in ("bu", "bka", "bnb", "bna") if tiles[k] > 8]
@@ -585,14 +600,18 @@ def fused_tile_sizes(
 
 
 def fused3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
-                      kbp: int, kcp: int, itemsize: int) -> int:
+                      kbp: int, kcp: int, itemsize: int,
+                      accum: str = "plain") -> int:
     """Modeled VMEM footprint of the whole-transform megakernel.
 
     Streamed operands are double-buffered by the Pallas pipeline (×2); the
     two inter-stage partials and the output accumulator are fp32 scratch.
     The ``bu·bka·Kbp·Kcp`` accumulator term dominates and is what bounds
-    triple fusability as the transform extents grow.
+    triple fusability as the transform extents grow —
+    ``accum="compensated"`` doubles it (the Neumaier comp register), the
+    numerics lever that demotes triple → pair under a tight budget.
     """
+    comp = 4 * bu * bka * kbp * kcp if accum == "compensated" else 0
     return (2 * bu * bnc * bnb * bna * itemsize  # streamed X slab
             + 2 * bna * bka * itemsize           # streamed C_a block
             + 2 * bnb * kbp * itemsize           # resident C_b slab
@@ -600,6 +619,7 @@ def fused3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
             + 4 * bu * bnc * bnb * bka           # stage-1 partial (f32)
             + 4 * bu * bnc * bka * kbp           # stage-2 partial (f32)
             + 4 * bu * bka * kbp * kcp           # output accumulator (f32)
+            + comp                               # Neumaier comp (optional)
             + 2 * bu * bka * kbp * kcp * itemsize)  # output tile
 
 
@@ -607,6 +627,7 @@ def fused3_tile_sizes(
     rows_total: int, na: int, ka: int, nb: int, kb: int, nc: int, kc: int,
     itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
     start: tuple[int, int, int, int] | None = None,
+    accum: str = "plain",
 ) -> tuple[int, int, int, int, int, int, int] | None:
     """Pick ``(bu, bka, bnb, bnc, bna, kbp, kcp)`` fitting the VMEM budget,
     or None.
@@ -634,7 +655,7 @@ def fused3_tile_sizes(
     def footprint():
         return fused3_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
                                  tiles["bnc"], tiles["bna"], kbp, kcp,
-                                 itemsize)
+                                 itemsize, accum)
 
     while footprint() > vmem_budget:
         shrinkable = [k for k in ("bu", "bka", "bnb", "bnc", "bna")
@@ -781,7 +802,7 @@ def refresh_fused_pair(fp: FusedPairPlan, ca: jnp.ndarray, cb: jnp.ndarray,
     tiles = (fp.bu, fp.bka, fp.bnb, fp.bna, fp.kbp)
     return dataclasses.replace(
         fp,
-        vmem_bytes=fused_vmem_bytes(*tiles, itemsize),
+        vmem_bytes=fused_vmem_bytes(*tiles, itemsize, fp.accum),
         hbm_bytes_fused=_fused_hbm_bytes(rows_total, fp.ka, tiles, live_a,
                                          live_b, itemsize),
         zero_block_frac_a=1.0 - live_a / dense_a,
@@ -808,7 +829,7 @@ def refresh_fused_triple(ft: FusedTriplePlan, ca: jnp.ndarray,
     tiles = (ft.bu, ft.bka, ft.bnb, ft.bnc, ft.bna, ft.kbp, ft.kcp)
     return dataclasses.replace(
         ft,
-        vmem_bytes=fused3_vmem_bytes(*tiles, itemsize),
+        vmem_bytes=fused3_vmem_bytes(*tiles, itemsize, ft.accum),
         hbm_bytes_fused=_fused3_hbm_bytes(rows_total, ft.ka, tiles, live_a,
                                           live_b, live_c, itemsize),
         zero_block_frac_a=1.0 - live_a / dense_a,
@@ -828,6 +849,7 @@ def _plan_fusion3(
     force: bool,
     axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
     events: list | None = None,
+    accum: str = "plain",
 ) -> FusedTriplePlan | None:
     """Evaluate fusing the whole three-stage transform into the megakernel.
 
@@ -871,13 +893,15 @@ def _plan_fusion3(
             rows_total, na, ka, nb, kb, nc, kc, itemsize, vmem_budget,
             start=(st_a.bn if st_a.zero_block_frac > 0 else None,
                    st_a.bk if st_a.zero_block_frac > 0 else None,
-                   None, None))
+                   None, None),
+            accum=accum)
         if tiles is None:
             # no tiling keeps both partials on-chip: record the footprint
             # at the floor tiles (8 everywhere) — the smallest this
             # assignment could ever need vs what the budget allows
             vmem_floors.append(fused3_vmem_bytes(
-                8, 8, 8, 8, 8, kb_padded(kb), kb_padded(kc), itemsize))
+                8, 8, 8, 8, 8, kb_padded(kb), kb_padded(kc), itemsize,
+                accum))
             continue
         bu, bka, bnb, bnc, bna, kbp, kcp = tiles
         mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
@@ -893,11 +917,12 @@ def _plan_fusion3(
             mode_a=mode_a, mode_b=mode_b, mode_c=mode_c, rows=1,
             na=na, ka=ka, nb=nb, kb=kb, nc=nc, kc=kc,
             bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna, kbp=kbp, kcp=kcp,
-            vmem_bytes=fused3_vmem_bytes(*tiles, itemsize),
+            vmem_bytes=fused3_vmem_bytes(*tiles, itemsize, accum),
             hbm_bytes_staged=staged, hbm_bytes_fused=fused, macs=macs,
             zero_block_frac_a=1.0 - live_a / dense_a,
             zero_block_frac_b=1.0 - live_b / dense_b,
             zero_block_frac_c=1.0 - live_c / dense_c,
+            accum=accum,
         )
         if best is None or ((cand.hbm_bytes_fused, cand.macs)
                             < (best.hbm_bytes_fused, best.macs)):
@@ -939,6 +964,7 @@ def _plan_fusion(
     axes: tuple[AxisName, AxisName, AxisName] = (None, None, None),
     shards: tuple[int, int, int] = (1, 1, 1),
     events: list | None = None,
+    accum: str = "plain",
 ) -> FusedPairPlan | None:
     """Evaluate fusing the consecutive pair starting at stage ``first``.
 
@@ -993,12 +1019,13 @@ def _plan_fusion(
             rows_total, na, ka, nb, kb, itemsize, vmem_budget,
             start=(st_a.bn if sparse_a else None,
                    st_a.bk if sparse_a else None,
-                   st_b.bk if st_b.zero_block_frac > 0 else None))
+                   st_b.bk if st_b.zero_block_frac > 0 else None),
+            accum=accum)
         if tiles is None:
             # no tiling keeps the resident slab on-chip: record the floor
             # footprint (8-everywhere tiles) vs the budget
             vmem_floors.append(
-                fused_vmem_bytes(8, 8, 8, 8, kb_padded(kb), itemsize))
+                fused_vmem_bytes(8, 8, 8, 8, kb_padded(kb), itemsize, accum))
             continue
         bu, bka, bnb, bna, kbp = tiles
         mask_a = np.asarray(_padded_block_mask(ca, bna, bka))
@@ -1011,11 +1038,13 @@ def _plan_fusion(
             first=first, mode_a=mode_a, mode_b=mode_b, rows=rows,
             na=na, ka=ka, nb=nb, kb=kb,
             bu=bu, bka=bka, bnb=bnb, bna=bna, kbp=kbp,
-            vmem_bytes=fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize),
+            vmem_bytes=fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize,
+                                        accum),
             hbm_bytes_staged=staged, hbm_bytes_fused=fused,
             macs=rows * (nb * na * ka + nb * ka * kb),
             zero_block_frac_a=1.0 - live_a / dense_a,
             zero_block_frac_b=1.0 - live_b / dense_b,
+            accum=accum,
         )
         if best is None or cand.hbm_bytes_fused < best.hbm_bytes_fused:
             best = cand
@@ -1085,25 +1114,27 @@ def derive_adjoint_plan(
         esop_threshold=esop_threshold, block_sizes=block_sizes, fuse=fuse,
         vmem_budget=vmem_budget, mesh=mesh,
         axes=plan.axes if mesh is not None else None,
-        batch_axis=plan.batch_axis if mesh is not None else None)
+        batch_axis=plan.batch_axis if mesh is not None else None,
+        accum=plan.accum, error_budget=plan.error_budget)
     return dataclasses.replace(adj, key=plan.key + "|adjoint")
 
 
 def chain_vmem_bytes(bu: int, bka: int, bnb: int, bna: int, kbp: int,
-                     itemsize: int) -> int:
+                     itemsize: int, accum: str = "plain") -> int:
     """Modeled VMEM footprint of the chain-pair kernel at these tiles.
 
     The fused-pair footprint plus the double-buffered ``y1`` output tile:
     emitting the intermediate costs one extra ``(bu, bnb, bka)`` output
     window, nothing else — the partial it is copied from already exists.
     """
-    return (fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize)
+    return (fused_vmem_bytes(bu, bka, bnb, bna, kbp, itemsize, accum)
             + 2 * bu * bnb * bka * itemsize)
 
 
 def chain_tile_sizes(
     rows_total: int, na: int, ka: int, nb: int, kb: int,
     itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    accum: str = "plain",
 ) -> tuple[int, int, int, int, int] | None:
     """Pick ``(bu, bka, bnb, bna, kbp)`` for the chain-pair kernel, or None.
 
@@ -1123,7 +1154,7 @@ def chain_tile_sizes(
 
     def footprint():
         return chain_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
-                                tiles["bna"], kbp, itemsize)
+                                tiles["bna"], kbp, itemsize, accum)
 
     while footprint() > vmem_budget:
         shrinkable = [k for k in ("bu", "bka", "bnb", "bna") if tiles[k] > 8]
@@ -1135,7 +1166,8 @@ def chain_tile_sizes(
 
 
 def chain3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
-                      kbp: int, kcp: int, itemsize: int) -> int:
+                      kbp: int, kcp: int, itemsize: int,
+                      accum: str = "plain") -> int:
     """Modeled VMEM footprint of the chain-triple kernel at these tiles.
 
     The megakernel footprint plus the double-buffered ``y1`` and ``y2``
@@ -1143,7 +1175,8 @@ def chain3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
     makes the chain triple degrade to the pair earlier than the forward
     triple does (the documented N=64 boundary).
     """
-    return (fused3_vmem_bytes(bu, bka, bnb, bnc, bna, kbp, kcp, itemsize)
+    return (fused3_vmem_bytes(bu, bka, bnb, bnc, bna, kbp, kcp, itemsize,
+                              accum)
             + 2 * bu * bnc * bnb * bka * itemsize
             + 2 * bu * bnc * bka * kbp * itemsize)
 
@@ -1151,6 +1184,7 @@ def chain3_vmem_bytes(bu: int, bka: int, bnb: int, bnc: int, bna: int,
 def chain3_tile_sizes(
     rows_total: int, na: int, ka: int, nb: int, kb: int, nc: int, kc: int,
     itemsize: int, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    accum: str = "plain",
 ) -> tuple[int, int, int, int, int, int, int] | None:
     """Pick ``(bu, bka, bnb, bnc, bna, kbp, kcp)`` for the chain triple,
     or None — the :func:`fused3_tile_sizes` ladder under the chain
@@ -1167,7 +1201,7 @@ def chain3_tile_sizes(
     def footprint():
         return chain3_vmem_bytes(tiles["bu"], tiles["bka"], tiles["bnb"],
                                  tiles["bnc"], tiles["bna"], kbp, kcp,
-                                 itemsize)
+                                 itemsize, accum)
 
     while footprint() > vmem_budget:
         shrinkable = [k for k in ("bu", "bka", "bnb", "bnc", "bna")
@@ -1280,6 +1314,10 @@ def plan_adjoint_chain(
     events: list = []
     modes = tuple(adj.order)
     rec_modes = (plan.order[0], plan.order[1])
+    # Chain footprints inherit the plans' accumulation modes: the comp
+    # scratch of a compensated walk is real VMEM the ladder must budget.
+    accum = adj.accum
+    rec_accum = plan.accum
     sharded = (any(a is not None for a in plan.axes)
                or plan.batch_axis is not None)
 
@@ -1303,12 +1341,12 @@ def plan_adjoint_chain(
     if (s0.backend != "einsum" and s1.backend != "einsum"
             and min(rec_rows, s0.n, s0.k, s1.n, s1.k) >= MIN_KERNEL_DIM):
         rt = chain_tile_sizes(rec_rows, s0.n, s0.k, s1.n, s1.k, itemsize,
-                              vmem_budget)
+                              vmem_budget, accum=rec_accum)
         if rt is not None:
             # One launch, no inter-stage round-trip: always fewer bytes
             # than the staged recompute pair — no byte compare needed.
             rec_fused, rec_tiles = True, rt
-            rec_vmem = chain_vmem_bytes(*rt, itemsize)
+            rec_vmem = chain_vmem_bytes(*rt, itemsize, rec_accum)
 
     def live_a_blocks(stage, bna, bka):
         dense = ((_pad_up(stage.n, bna) // bna)
@@ -1319,14 +1357,15 @@ def plan_adjoint_chain(
     if (fuse in (None, True, "triple") and a2.backend != "einsum"
             and min(a0.n, a0.k, a1.n, a1.k, a2.n, a2.k) >= MIN_KERNEL_DIM):
         t3 = chain3_tile_sizes(rows_total, a0.n, a0.k, a1.n, a1.k,
-                               a2.n, a2.k, itemsize, vmem_budget)
+                               a2.n, a2.k, itemsize, vmem_budget,
+                               accum=accum)
         if t3 is None:
             events.append({
                 "kind": "adjoint_fusion_degradation", "from": "triple",
                 "reason": "vmem_budget",
                 "vmem_bytes_min": chain3_vmem_bytes(
                     8, 8, 8, 8, 8, kb_padded(a1.k), kb_padded(a2.k),
-                    itemsize),
+                    itemsize, accum),
                 "vmem_budget": vmem_budget,
             })
         else:
@@ -1339,7 +1378,7 @@ def plan_adjoint_chain(
                     launches=(1 if rec_fused else 2) + 1 + 1,
                     modes=modes, rec_modes=rec_modes, tiles=t3,
                     rec_tiles=rec_tiles,
-                    vmem_bytes=chain3_vmem_bytes(*t3, itemsize),
+                    vmem_bytes=chain3_vmem_bytes(*t3, itemsize, accum),
                     rec_vmem_bytes=rec_vmem,
                     hbm_bytes_staged=adj.hbm_bytes_staged,
                     hbm_bytes_fused=fused_bytes, events=tuple(events))
@@ -1356,13 +1395,13 @@ def plan_adjoint_chain(
     rows2 = rows_total * a2.n
     if min(rows2, a0.n, a0.k, a1.n, a1.k) >= MIN_KERNEL_DIM:
         t2 = chain_tile_sizes(rows2, a0.n, a0.k, a1.n, a1.k, itemsize,
-                              vmem_budget)
+                              vmem_budget, accum=accum)
         if t2 is None:
             events.append({
                 "kind": "adjoint_fusion_degradation", "from": "pair",
                 "reason": "vmem_budget",
                 "vmem_bytes_min": chain_vmem_bytes(
-                    8, 8, 8, 8, kb_padded(a1.k), itemsize),
+                    8, 8, 8, 8, kb_padded(a1.k), itemsize, accum),
                 "vmem_budget": vmem_budget,
             })
             return declined(events)
@@ -1376,7 +1415,7 @@ def plan_adjoint_chain(
                 launches=(1 if rec_fused else 2) + 2 + 1,
                 modes=modes, rec_modes=rec_modes, tiles=t2,
                 rec_tiles=rec_tiles,
-                vmem_bytes=chain_vmem_bytes(*t2, itemsize),
+                vmem_bytes=chain_vmem_bytes(*t2, itemsize, accum),
                 rec_vmem_bytes=rec_vmem,
                 hbm_bytes_staged=adj.hbm_bytes_staged,
                 hbm_bytes_fused=fused_bytes, events=tuple(events))
@@ -1405,6 +1444,8 @@ def build_plan(
     mesh=None,
     axes=None,
     batch_axis: AxisName = None,
+    accum: str | None = None,  # accumulation mode (engine/numerics.py)
+    error_budget: float | None = None,  # max a-priori plan rounding bound
 ) -> GemtPlan:
     """Plan a 3-stage GEMT for a tensor of ``x_shape`` (3D, or 4D batched).
 
@@ -1436,6 +1477,17 @@ def build_plan(
     every mode extent — and the matching ``K_s``, for the psum_scatter —
     must divide its axis size.  ``batch_axis`` optionally shards a leading
     batch dim (data parallelism; no collective, the rows just split).
+
+    ``accum`` selects the accumulation mode every stage (and any fused
+    kernel) runs under — see ``engine/numerics.py`` and
+    ``docs/numerics.md``.  ``error_budget`` caps the plan's a-priori
+    rounding bound (:func:`repro.engine.numerics.plan_error_bound`): when
+    the bound at the requested mode blows the budget, the mode escalates
+    ``plain`` → ``f32`` → ``compensated`` and each step is recorded as a
+    ``numerics_degradation`` event.  The escalation runs *before* fusion
+    planning — compensation's comp scratch inflates every fused VMEM
+    footprint, so a tight ``(error_budget, vmem_budget)`` pair can
+    legitimately demote triple → pair → staged.
     """
     if backend not in (None, "einsum"):
         raise ValueError(
@@ -1504,6 +1556,23 @@ def build_plan(
             best = (score, cand, stages, macs, eff, peak, coll)
     _, chosen, stages, macs, eff, peak, coll = best
 
+    # Guarded numerics: resolve the accumulation mode against the a-priori
+    # error model BEFORE fusion planning — the comp scratch of a forced
+    # compensation inflates every fused footprint below, so the budget can
+    # demote fusion depth (docs/numerics.md).
+    accum_requested = accum
+    accum = normalize_accum(accum)
+    if jnp.issubdtype(jnp.dtype(x_dtype), jnp.complexfloating):
+        accum = "plain"  # DFT stages stay plain — kernels are real-valued
+    if error_budget is not None:
+        accum, error_bound, numerics_events = enforce_error_budget(
+            stages, x_dtype, accum, error_budget)
+    else:
+        error_bound = plan_error_bound(stages, x_dtype, accum)
+        numerics_events = []
+    if accum != "plain":
+        stages = tuple(dataclasses.replace(s, accum=accum) for s in stages)
+
     isz_raw = jnp.dtype(x_dtype).itemsize
     fused = None
     fused3 = None
@@ -1522,14 +1591,14 @@ def build_plan(
         fused3 = _plan_fusion3(chosen, stages, cs, batch=batch,
                                itemsize=isz_raw, vmem_budget=vmem_budget,
                                force=fuse in (True, "triple"), axes=axes,
-                               events=fusion_events)
+                               events=fusion_events, accum=accum)
     if fuse in (None, True, "pair") and not (fused3 and fuse is True):
         cands = []
         for first in (0, 1):
             fp = _plan_fusion(first, chosen, stages, local, cs, batch=batch,
                               itemsize=isz_raw, vmem_budget=vmem_budget,
                               force=(fuse is True), axes=axes, shards=shards,
-                              events=fusion_events)
+                              events=fusion_events, accum=accum)
             if fp is not None:
                 cands.append(fp)
         if cands:  # fuse the pair that saves the most modeled bytes
@@ -1565,6 +1634,9 @@ def build_plan(
     events = tuple(
         dict(ev, to=final_tier) for ev in fusion_events
         if tier_rank[final_tier] < tier_rank[ev["from"]])
+    # Numerics events bypass the tier filter: they record accumulation
+    # escalations, not fusion demotions, and carry no "from" tier.
+    events = tuple(numerics_events) + events
 
     out_shape = tuple(cs[m].shape[1] for m in (1, 2, 3))
     blocks = {s.mode: (s.bk, s.bn) for s in stages}
@@ -1576,6 +1648,11 @@ def build_plan(
     ]
     if backend is not None:  # unpinned keys stay byte-identical to PR 1–6
         key_parts.append(f"be={backend}")
+    # default-numerics keys stay byte-identical to PR 1–8
+    if accum_requested not in (None, "plain"):
+        key_parts.append(f"ac={accum_requested}")
+    if error_budget is not None:
+        key_parts.append(f"eb={error_budget}")
     if mesh is not None:  # single-device keys stay byte-identical to PR 1–2
         key_parts.append(
             f"mesh={tuple(mesh.shape.items())};ax={axes};ba={batch_axis}")
@@ -1589,4 +1666,5 @@ def build_plan(
                                                    isz_raw, fused3=fused3),
                     axes=axes, shards=shards, batch_axis=batch_axis,
                     batch_shards=batch_shards, collective_bytes=coll,
-                    events=events)
+                    events=events, accum=accum, error_bound=error_bound,
+                    error_budget=error_budget)

@@ -55,7 +55,10 @@ def esop_plan(c: jnp.ndarray, bk: int, bn: int) -> tuple[np.ndarray, np.ndarray,
     return counts, idx, t_steps
 
 
-def _esop_kernel(*refs, t_steps: int, affine: bool):
+def _esop_kernel(*refs, t_steps: int, affine: bool, accum: str = "plain"):
+    compensated = accum == "compensated"
+    if compensated:
+        *refs, comp_ref = refs
     if affine:
         counts_ref, idx_ref, o_init_ref, x_ref, c_ref, o_ref, acc_ref = refs
     else:
@@ -69,26 +72,44 @@ def _esop_kernel(*refs, t_steps: int, affine: bool):
         # accumulator starts at zero in-kernel — no HBM seed buffer.
         acc_ref[...] = (o_init_ref[...].astype(acc_ref.dtype) if affine
                         else jnp.zeros(acc_ref.shape, acc_ref.dtype))
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     # Live step: this (j, t) names a nonzero streamed block — do the rank-bk
-    # update.  Dead steps (t >= counts[j]) leave every cell waiting (§6).
+    # update.  Dead steps (t >= counts[j]) leave every cell waiting (§6);
+    # skipping their (exactly zero) Neumaier update is equally exact.
     @pl.when(t < counts_ref[j])
     def _update():
-        acc_ref[...] += jnp.dot(
-            x_ref[...], c_ref[...], preferred_element_type=jnp.float32
-        )
+        p = jnp.dot(x_ref[...], c_ref[...],
+                    preferred_element_type=jnp.float32)
+        if compensated:
+            acc = acc_ref[...]
+            tot = acc + p
+            comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                       (acc - tot) + p, (p - tot) + acc)
+            acc_ref[...] = tot
+        else:
+            acc_ref[...] += p
 
     @pl.when(t == t_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "t_steps", "interpret"))
-def _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret):
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "t_steps",
+                                             "interpret", "accum"))
+def _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret,
+               accum="plain"):
     m, kdim = x.shape
     n = c.shape[1]
     grid = (m // bm, n // bn, t_steps)
     affine = out is not None
+    out_dtype = (jnp.float32 if accum != "plain"
+                 else (out.dtype if affine else x.dtype))
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))  # Neumaier comp
 
     def x_map(i, j, t, counts_ref, idx_ref):
         return (i, idx_ref[j, t])
@@ -109,17 +130,20 @@ def _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret):
         operands.insert(0, out)
 
     return pl.pallas_call(
-        functools.partial(_esop_kernel, t_steps=t_steps, affine=affine),
+        functools.partial(_esop_kernel, t_steps=t_steps, affine=affine,
+                          accum=accum),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # counts, idx drive the dataflow
             grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), o_map),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype if affine else x.dtype),
-        # (after the 2 scalar-prefetch operands) — affine path only
-        input_output_aliases={2: 0} if affine else {},
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # (after the 2 scalar-prefetch operands) — affine path only, and
+        # only when the promoted flush dtype still matches the seed's
+        input_output_aliases=(
+            {2: 0} if affine and out_dtype == out.dtype else {}),
         interpret=interpret,
     )(counts, idx, *operands)
 
@@ -133,6 +157,7 @@ def esop_gemm_pallas(
     bk: int = 128,
     interpret: bool = False,
     plan: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, dict]:
     """Y = (out +) X @ C, skipping zero blocks of C.  Returns (y, esop_info).
 
@@ -155,7 +180,8 @@ def esop_gemm_pallas(
     else:
         counts, idx, t_steps = plan
         live_blocks = None
-    y = _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret)
+    y = _esop_call(x, c, out, counts, idx, bm, bn, bk, t_steps, interpret,
+                   accum=accum)
     if live_blocks is None:
         return y, None
     dense_blocks = (kdim // bk) * (n // bn)

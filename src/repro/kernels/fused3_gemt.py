@@ -58,9 +58,17 @@ __all__ = ["fused3_gemt_kernel", "fused3_gemt_pallas"]
 
 def fused3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
                        x_ref, ca_ref, cb_ref, cc_ref, o_ref,
-                       p1_ref, p2_ref, acc_ref, *,
-                       t_a: int, t_b: int, t_c: int):
-    """One (i, j) output tile; dims 2/3/4 stream C_c/C_b slabs, C_a blocks."""
+                       p1_ref, p2_ref, acc_ref, *scratch,
+                       t_a: int, t_b: int, t_c: int, accum: str = "plain"):
+    """One (i, j) output tile; dims 2/3/4 stream C_c/C_b slabs, C_a blocks.
+
+    ``accum="compensated"`` Neumaier-compensates the outermost (t_c)
+    reduction into the output accumulator — the only one whose depth the
+    inner sweeps reset — banking the bits each ``acc + p`` drops in a comp
+    scratch folded back at the flush (``docs/numerics.md``).
+    """
+    compensated = accum == "compensated"
+    comp_ref = scratch[0] if compensated else None
     j = pl.program_id(1)
     tc = pl.program_id(2)
     tb = pl.program_id(3)
@@ -69,6 +77,8 @@ def fused3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
     @pl.when((tc == 0) & (tb == 0) & (ta == 0))
     def _init_acc():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     @pl.when((tb == 0) & (ta == 0))
     def _init_p2():
@@ -102,26 +112,44 @@ def fused3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
     # either, which is what this kernel exists for.
     @pl.when((tb == t_b - 1) & (ta == t_a - 1))
     def _stage_3():
-        acc_ref[...] += jax.lax.dot_general(
+        p = jax.lax.dot_general(
             p2_ref[...], cc_ref[...].astype(jnp.float32),
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if compensated:
+            acc = acc_ref[...]
+            tot = acc + p
+            comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                       (acc - tot) + p, (p - tot) + acc)
+            acc_ref[...] = tot
+        else:
+            acc_ref[...] += p
 
     @pl.when((tc == t_c - 1) & (tb == t_b - 1) & (ta == t_a - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bnc",
                                              "bna", "t_a", "t_b", "t_c",
-                                             "interpret"))
+                                             "interpret", "accum"))
 def _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
-                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret):
+                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret,
+                 accum="plain"):
     u, nc, nb, na = x4.shape
     ka = ca.shape[1]
     kb = cb.shape[1]
     kc = cc.shape[1]
     grid = (u // bu, ka // bka, t_c, t_b, t_a)
+    out_dtype = jnp.float32 if accum != "plain" else x4.dtype
+    scratch = [
+        pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
+        pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
+        pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
+    ]
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bu, bka, kb, kc), jnp.float32))  # comp
 
     def x_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
               idx_c_ref):
@@ -144,7 +172,8 @@ def _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
         return (i, j, 0, 0)
 
     return pl.pallas_call(
-        functools.partial(fused3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c),
+        functools.partial(fused3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c,
+                          accum=accum),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,  # counts_a, idx_a/b/c drive the dataflow
             grid=grid,
@@ -155,13 +184,9 @@ def _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
                 pl.BlockSpec((bnc, kc), cc_map),           # resident C_c slab
             ],
             out_specs=pl.BlockSpec((bu, bka, kb, kc), o_map),
-            scratch_shapes=[
-                pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
-                pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
-                pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
-            ],
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((u, ka, kb, kc), x4.dtype),
+        out_shape=jax.ShapeDtypeStruct((u, ka, kb, kc), out_dtype),
         interpret=interpret,
     )(counts_a, idx_a, idx_b, idx_c, x4, ca, cb, cc)
 
@@ -178,6 +203,7 @@ def fused3_gemt_pallas(
     bna: int = 128,
     interpret: bool = False,
     plan: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, dict | None]:
     """Y = ((X4 ×_a C_a) ×_b C_b) ×_c C_c fused; shapes must be block
     multiples.
@@ -215,7 +241,8 @@ def fused3_gemt_pallas(
         live = None
 
     y = _fused3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
-                     bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret)
+                     bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret,
+                     accum=accum)
     if live is None:
         return y, None
     live_a, live_b, live_c = live

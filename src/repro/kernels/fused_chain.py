@@ -58,9 +58,16 @@ def dense_slab_plan(n: int, bn: int):
 
 
 def chain_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
-                      cb_ref, o_ref, o1_ref, p_ref, acc_ref, *,
-                      t_a: int, t_b: int):
-    """Fused pair with the stage-a partial emitted as a second output."""
+                      cb_ref, o_ref, o1_ref, p_ref, acc_ref, *scratch,
+                      t_a: int, t_b: int, accum: str = "plain"):
+    """Fused pair with the stage-a partial emitted as a second output.
+
+    ``accum="compensated"`` Neumaier-compensates the t_b reduction into
+    the output accumulator, like ``fused_gemt_kernel``; the emitted
+    intermediate needs none (its accumulation restarts every slab).
+    """
+    compensated = accum == "compensated"
+    comp_ref = scratch[0] if compensated else None
     j = pl.program_id(1)
     tb = pl.program_id(2)
     ta = pl.program_id(3)
@@ -68,6 +75,8 @@ def chain_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
     @pl.when((tb == 0) & (ta == 0))
     def _init_acc():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     @pl.when(ta == 0)
     def _init_partial():
@@ -83,10 +92,18 @@ def chain_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
 
     @pl.when(ta == t_a - 1)
     def _stage_b():
-        acc_ref[...] += jax.lax.dot_general(
+        p = jax.lax.dot_general(
             p_ref[...], cb_ref[...].astype(jnp.float32),
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if compensated:
+            acc = acc_ref[...]
+            tot = acc + p
+            comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                       (acc - tot) + p, (p - tot) + acc)
+            acc_ref[...] = tot
+        else:
+            acc_ref[...] += p
 
     # The completed partial IS y1 for this (i, tb, j) block — emit it.
     @pl.when(ta == t_a - 1)
@@ -95,17 +112,26 @@ def chain_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
 
     @pl.when((tb == t_b - 1) & (ta == t_a - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bna",
-                                             "t_a", "t_b", "interpret"))
+                                             "t_a", "t_b", "interpret",
+                                             "accum"))
 def _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
-                bu, bka, bnb, bna, t_a, t_b, interpret):
+                bu, bka, bnb, bna, t_a, t_b, interpret, accum="plain"):
     u, nb, na = x3.shape
     ka = ca.shape[1]
     kb = cb.shape[1]
     grid = (u // bu, ka // bka, t_b, t_a)
+    out_dtype = jnp.float32 if accum != "plain" else x3.dtype
+    scratch = [
+        pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
+        pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
+    ]
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bu, bka, kb), jnp.float32))  # comp
 
     def x_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
         return (i, idx_b_ref[0, tb], idx_a_ref[j, ta])
@@ -123,7 +149,7 @@ def _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
         return (i, idx_b_ref[0, tb], j)
 
     return pl.pallas_call(
-        functools.partial(chain_gemt_kernel, t_a=t_a, t_b=t_b),
+        functools.partial(chain_gemt_kernel, t_a=t_a, t_b=t_b, accum=accum),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
@@ -136,14 +162,11 @@ def _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
                 pl.BlockSpec((bu, bka, kb), o_map),
                 pl.BlockSpec((bu, bnb, bka), o1_map),  # emitted y1 block
             ],
-            scratch_shapes=[
-                pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
-                pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((u, ka, kb), x3.dtype),
-            jax.ShapeDtypeStruct((u, nb, ka), x3.dtype),
+            jax.ShapeDtypeStruct((u, ka, kb), out_dtype),
+            jax.ShapeDtypeStruct((u, nb, ka), out_dtype),
         ),
         interpret=interpret,
     )(counts_a, idx_a, idx_b, x3, ca, cb)
@@ -159,6 +182,7 @@ def chain_gemt_pallas(
     bna: int = 128,
     interpret: bool = False,
     plan_a: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, jnp.ndarray, dict | None]:
     """``y, y1 = (X3 ×_a C_a) ×_b C_b`` with the intermediate emitted.
 
@@ -184,7 +208,7 @@ def chain_gemt_pallas(
     idx_b, t_b = dense_slab_plan(nb, bnb)
 
     y, y1 = _chain_call(x3, ca, cb, counts_a, idx_a, idx_b,
-                        bu, bka, bnb, bna, t_a, t_b, interpret)
+                        bu, bka, bnb, bna, t_a, t_b, interpret, accum=accum)
     if live_a is None:
         return y, y1, None
     dense_a = (na // bna) * (ka // bka)
@@ -199,9 +223,15 @@ def chain_gemt_pallas(
 
 def chain3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
                        x_ref, ca_ref, cb_ref, cc_ref, o_ref, o1_ref, o2_ref,
-                       p1_ref, p2_ref, acc_ref, *,
-                       t_a: int, t_b: int, t_c: int):
-    """Fused triple with both partials emitted as extra outputs."""
+                       p1_ref, p2_ref, acc_ref, *scratch,
+                       t_a: int, t_b: int, t_c: int, accum: str = "plain"):
+    """Fused triple with both partials emitted as extra outputs.
+
+    ``accum="compensated"`` Neumaier-compensates the outermost (t_c)
+    reduction into the output accumulator, like ``fused3_gemt_kernel``.
+    """
+    compensated = accum == "compensated"
+    comp_ref = scratch[0] if compensated else None
     j = pl.program_id(1)
     tc = pl.program_id(2)
     tb = pl.program_id(3)
@@ -210,6 +240,8 @@ def chain3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
     @pl.when((tc == 0) & (tb == 0) & (ta == 0))
     def _init_acc():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     @pl.when((tb == 0) & (ta == 0))
     def _init_p2():
@@ -241,10 +273,18 @@ def chain3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
 
     @pl.when((tb == t_b - 1) & (ta == t_a - 1))
     def _stage_3():
-        acc_ref[...] += jax.lax.dot_general(
+        p = jax.lax.dot_general(
             p2_ref[...], cc_ref[...].astype(jnp.float32),
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if compensated:
+            acc = acc_ref[...]
+            tot = acc + p
+            comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                       (acc - tot) + p, (p - tot) + acc)
+            acc_ref[...] = tot
+        else:
+            acc_ref[...] += p
 
     # The completed stage-2 partial IS y2 for this (i, tc, j) block.
     @pl.when((tb == t_b - 1) & (ta == t_a - 1))
@@ -253,19 +293,29 @@ def chain3_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, idx_c_ref,
 
     @pl.when((tc == t_c - 1) & (tb == t_b - 1) & (ta == t_a - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bnc",
                                              "bna", "t_a", "t_b", "t_c",
-                                             "interpret"))
+                                             "interpret", "accum"))
 def _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
-                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret):
+                 bu, bka, bnb, bnc, bna, t_a, t_b, t_c, interpret,
+                 accum="plain"):
     u, nc, nb, na = x4.shape
     ka = ca.shape[1]
     kb = cb.shape[1]
     kc = cc.shape[1]
     grid = (u // bu, ka // bka, t_c, t_b, t_a)
+    out_dtype = jnp.float32 if accum != "plain" else x4.dtype
+    scratch = [
+        pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
+        pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
+        pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
+    ]
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bu, bka, kb, kc), jnp.float32))  # comp
 
     def x_map(i, j, tc, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref,
               idx_c_ref):
@@ -296,7 +346,8 @@ def _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
         return (i, idx_c_ref[0, tc], j, 0)
 
     return pl.pallas_call(
-        functools.partial(chain3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c),
+        functools.partial(chain3_gemt_kernel, t_a=t_a, t_b=t_b, t_c=t_c,
+                          accum=accum),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=grid,
@@ -311,16 +362,12 @@ def _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
                 pl.BlockSpec((bu, bnc, bnb, bka), o1_map),  # emitted y1
                 pl.BlockSpec((bu, bnc, bka, kb), o2_map),   # emitted y2
             ],
-            scratch_shapes=[
-                pltpu.VMEM((bu, bnc, bnb, bka), jnp.float32),  # stage-1 P1
-                pltpu.VMEM((bu, bnc, bka, kb), jnp.float32),   # stage-2 P2
-                pltpu.VMEM((bu, bka, kb, kc), jnp.float32),    # accumulator
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((u, ka, kb, kc), x4.dtype),
-            jax.ShapeDtypeStruct((u, nc, nb, ka), x4.dtype),
-            jax.ShapeDtypeStruct((u, nc, ka, kb), x4.dtype),
+            jax.ShapeDtypeStruct((u, ka, kb, kc), out_dtype),
+            jax.ShapeDtypeStruct((u, nc, nb, ka), out_dtype),
+            jax.ShapeDtypeStruct((u, nc, ka, kb), out_dtype),
         ),
         interpret=interpret,
     )(counts_a, idx_a, idx_b, idx_c, x4, ca, cb, cc)
@@ -338,6 +385,7 @@ def chain3_gemt_pallas(
     bna: int = 128,
     interpret: bool = False,
     plan_a: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict | None]:
     """``y, y1, y2 = ((X4 ×_a C_a) ×_b C_b) ×_c C_c`` with both
     intermediates emitted.
@@ -369,7 +417,7 @@ def chain3_gemt_pallas(
 
     y, y1, y2 = _chain3_call(x4, ca, cb, cc, counts_a, idx_a, idx_b, idx_c,
                              bu, bka, bnb, bnc, bna, t_a, t_b, t_c,
-                             interpret)
+                             interpret, accum=accum)
     if live_a is None:
         return y, y1, y2, None
     dense_a = (na // bna) * (ka // bka)

@@ -60,8 +60,20 @@ def kb_padded(kb: int) -> int:
 
 
 def fused_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
-                      cb_ref, o_ref, p_ref, acc_ref, *, t_a: int, t_b: int):
-    """One (i, j) output tile; dims 2/3 stream C_b slabs / C_a blocks."""
+                      cb_ref, o_ref, p_ref, acc_ref, *scratch,
+                      t_a: int, t_b: int, accum: str = "plain"):
+    """One (i, j) output tile; dims 2/3 stream C_b slabs / C_a blocks.
+
+    ``accum="compensated"`` adds a Neumaier comp scratch on the output
+    accumulator: the final contraction streams one slab-contribution per
+    t_b step, and the bits each ``acc + p`` drops are banked and folded
+    back at the flush (``docs/numerics.md``).  The stage-a partial is
+    already exact-in-f32 per slab (its accumulation depth is bounded by
+    t_a, restarted every slab), so only the long t_b reduction is
+    compensated — matching the reference oracle's final-stage treatment.
+    """
+    compensated = accum == "compensated"
+    comp_ref = scratch[0] if compensated else None
     j = pl.program_id(1)
     tb = pl.program_id(2)
     ta = pl.program_id(3)
@@ -69,6 +81,8 @@ def fused_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
     @pl.when((tb == 0) & (ta == 0))
     def _init_acc():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     @pl.when(ta == 0)
     def _init_partial():
@@ -88,24 +102,41 @@ def fused_gemt_kernel(counts_a_ref, idx_a_ref, idx_b_ref, x_ref, ca_ref,
     # slab without ever leaving VMEM — the fusion this kernel exists for.
     @pl.when(ta == t_a - 1)
     def _stage_b():
-        acc_ref[...] += jax.lax.dot_general(
+        p = jax.lax.dot_general(
             p_ref[...], cb_ref[...].astype(jnp.float32),
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if compensated:
+            acc = acc_ref[...]
+            tot = acc + p
+            comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                       (acc - tot) + p, (p - tot) + acc)
+            acc_ref[...] = tot
+        else:
+            acc_ref[...] += p
 
     @pl.when((tb == t_b - 1) & (ta == t_a - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bu", "bka", "bnb", "bna",
-                                             "t_a", "t_b", "interpret"))
+                                             "t_a", "t_b", "interpret",
+                                             "accum"))
 def _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
-                bu, bka, bnb, bna, t_a, t_b, interpret):
+                bu, bka, bnb, bna, t_a, t_b, interpret, accum="plain"):
     u, nb, na = x3.shape
     ka = ca.shape[1]
     kb = cb.shape[1]
     grid = (u // bu, ka // bka, t_b, t_a)
+    out_dtype = jnp.float32 if accum != "plain" else x3.dtype
+    scratch = [
+        pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
+        pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
+    ]
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bu, bka, kb), jnp.float32))  # comp
 
     def x_map(i, j, tb, ta, counts_a_ref, idx_a_ref, idx_b_ref):
         return (i, idx_b_ref[0, tb], idx_a_ref[j, ta])
@@ -120,7 +151,7 @@ def _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
         return (i, j, 0)
 
     return pl.pallas_call(
-        functools.partial(fused_gemt_kernel, t_a=t_a, t_b=t_b),
+        functools.partial(fused_gemt_kernel, t_a=t_a, t_b=t_b, accum=accum),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,  # counts_a, idx_a, idx_b drive the dataflow
             grid=grid,
@@ -130,12 +161,9 @@ def _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
                 pl.BlockSpec((bnb, kb), cb_map),      # resident C_b slab
             ],
             out_specs=pl.BlockSpec((bu, bka, kb), o_map),
-            scratch_shapes=[
-                pltpu.VMEM((bu, bnb, bka), jnp.float32),  # stage-a partial
-                pltpu.VMEM((bu, bka, kb), jnp.float32),   # output accumulator
-            ],
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((u, ka, kb), x3.dtype),
+        out_shape=jax.ShapeDtypeStruct((u, ka, kb), out_dtype),
         interpret=interpret,
     )(counts_a, idx_a, idx_b, x3, ca, cb)
 
@@ -150,6 +178,7 @@ def fused_gemt_pallas(
     bna: int = 128,
     interpret: bool = False,
     plan: tuple | None = None,
+    accum: str = "plain",
 ) -> tuple[jnp.ndarray, dict | None]:
     """Y = (X3 ×_a C_a) ×_b C_b fused; shapes must be block multiples.
 
@@ -178,7 +207,7 @@ def fused_gemt_pallas(
         live_a = None
 
     y = _fused_call(x3, ca, cb, counts_a, idx_a, idx_b,
-                    bu, bka, bnb, bna, t_a, t_b, interpret)
+                    bu, bka, bnb, bna, t_a, t_b, interpret, accum=accum)
     if live_a is None:
         return y, None
     dense_a = (na // bna) * (ka // bka)

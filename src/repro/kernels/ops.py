@@ -136,6 +136,23 @@ def _is_traced(*arrays) -> bool:
     return any(isinstance(a, jax.core.Tracer) for a in arrays)
 
 
+_ACCUM_MODES = ("plain", "f32", "compensated")
+
+
+def _norm_accum(accum, *arrays) -> str:
+    """Default/validate an ``accum`` knob; complex operands force
+    ``"plain"`` (the kernels and the compensation algebra are real-valued —
+    the planner pins complex stages to einsum anyway)."""
+    accum = "plain" if accum is None else accum
+    if accum not in _ACCUM_MODES:
+        raise ValueError(
+            f"accum must be one of {_ACCUM_MODES} (or None), got {accum!r}")
+    if accum != "plain" and any(
+            a is not None and jnp.iscomplexobj(a) for a in arrays):
+        return "plain"
+    return accum
+
+
 def _linear_custom_vjp(prim, bwd_x, bwd_c, x, c, out):
     """Wrap the bilinear kernel dispatch ``prim(x, c, out)`` in a custom VJP.
 
@@ -150,6 +167,11 @@ def _linear_custom_vjp(prim, bwd_x, bwd_c, x, c, out):
     Built per call because ESOP's ``prim`` closes over unhashable
     prefetch-plan device arrays; SR-GEMM, the forward hot path, gets the
     memoized :func:`_sr_gemm_vjp` factory instead.
+
+    Cotangents are cast back to the primal dtypes: under a promoted
+    ``accum`` the forward output (hence ``g``) is float32 while the
+    operands may be bf16 — ``custom_vjp`` requires matching avals.  The
+    casts are identities on the plain path.
     """
     if out is None:
         @jax.custom_vjp
@@ -157,46 +179,55 @@ def _linear_custom_vjp(prim, bwd_x, bwd_c, x, c, out):
             return prim(x, c, None)
 
         f.defvjp(lambda x, c: (prim(x, c, None), (x, c)),
-                 lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g)))
+                 lambda res, g: (bwd_x(g, res[1]).astype(res[0].dtype),
+                                 bwd_c(res[0], g).astype(res[1].dtype)))
         return f(x, c)
+
+    odt = out.dtype
 
     @jax.custom_vjp
     def fo(x, c, out):
         return prim(x, c, out)
 
     fo.defvjp(lambda x, c, out: (prim(x, c, out), (x, c)),
-              lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g), g))
+              lambda res, g: (bwd_x(g, res[1]).astype(res[0].dtype),
+                              bwd_c(res[0], g).astype(res[1].dtype),
+                              g.astype(odt)))
     return fo(x, c, out)
 
 
 def _sr_dispatch(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None,
-                 bm: int, bn: int, bk: int, use_pallas: bool) -> jnp.ndarray:
+                 bm: int, bn: int, bk: int, use_pallas: bool,
+                 accum: str = "plain") -> jnp.ndarray:
     """Raw (non-differentiable) SR-GEMM dispatch: pad → kernel → crop."""
     if not use_pallas:
-        return ref.ref_sr_gemm(x, c, out)
+        return ref.ref_sr_gemm(x, c, out, accum=accum)
     interpret = not on_tpu()
     m, n = x.shape[0], c.shape[1]
     xp = _pad_to(x, (bm, bk))
     cp = _pad_to(c, (bk, bn))
     op = _pad_to(out, (bm, bn)) if out is not None else None
-    y = sr_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = sr_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                       accum=accum)
     return y[:m, :n]
 
 
 @functools.lru_cache(maxsize=None)
 def _sr_gemm_vjp(bm: int, bn: int, bk: int, use_pallas: bool,
-                 has_out: bool):
+                 has_out: bool, accum: str = "plain"):
     """Module-level custom-VJP builder for SR-GEMM, memoized per static
     config.
 
     SR-GEMM is the engine's dense workhorse and runs on forward-only
     serving hot loops too, so — unlike the rarer ESOP/fused ops, whose
     unhashable prefetch-plan operands force per-call closures — its
-    wrapper is built once per ``(tiles, dispatch, out)`` config, not per
-    call.
+    wrapper is built once per ``(tiles, dispatch, out, accum)`` config,
+    not per call.  The backward GEMMs always run plain accumulation (the
+    cotangent is already float32 under a promoted forward) and cast back
+    to the primal dtypes — identities on the plain path.
     """
     def prim(x, c, out):
-        return _sr_dispatch(x, c, out, bm, bn, bk, use_pallas)
+        return _sr_dispatch(x, c, out, bm, bn, bk, use_pallas, accum=accum)
 
     def bwd_x(g, c):
         # dX (m, k) = g (m, n) @ C^T (n, k): output cols k, contraction n.
@@ -213,8 +244,10 @@ def _sr_gemm_vjp(bm: int, bn: int, bk: int, use_pallas: bool,
         def fo(x, c, out):
             return prim(x, c, out)
 
-        fo.defvjp(lambda x, c, out: (prim(x, c, out), (x, c)),
-                  lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g), g))
+        fo.defvjp(lambda x, c, out: (prim(x, c, out), (x, c, out)),
+                  lambda res, g: (bwd_x(g, res[1]).astype(res[0].dtype),
+                                  bwd_c(res[0], g).astype(res[1].dtype),
+                                  g.astype(res[2].dtype)))
         return fo
 
     @jax.custom_vjp
@@ -222,27 +255,33 @@ def _sr_gemm_vjp(bm: int, bn: int, bk: int, use_pallas: bool,
         return prim(x, c, None)
 
     f.defvjp(lambda x, c: (prim(x, c, None), (x, c)),
-             lambda res, g: (bwd_x(g, res[1]), bwd_c(res[0], g)))
+             lambda res, g: (bwd_x(g, res[1]).astype(res[0].dtype),
+                             bwd_c(res[0], g).astype(res[1].dtype)))
     return f
 
 
 def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
             bm: int = 128, bn: int = 128, bk: int = 128,
-            use_pallas: bool | None = None) -> jnp.ndarray:
+            use_pallas: bool | None = None,
+            accum: str | None = None) -> jnp.ndarray:
     """Y = (out +) X @ C via the streaming outer-product kernel.
 
     VJP-safe: ``dX = g @ C^T`` and ``dC = X^T @ g`` run the same kernel
-    dispatch with the tile roles swapped.
+    dispatch with the tile roles swapped.  ``accum`` selects the
+    accumulation mode (``docs/numerics.md``): promoted modes flush in
+    float32 instead of rounding back to the operand dtype.
     """
     if use_pallas is None:
         use_pallas = on_tpu()
-    f = _sr_gemm_vjp(bm, bn, bk, use_pallas, out is not None)
+    accum = _norm_accum(accum, x, c, out)
+    f = _sr_gemm_vjp(bm, bn, bk, use_pallas, out is not None, accum)
     return f(x, c, out) if out is not None else f(x, c)
 
 
 def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
               bm: int = 128, bn: int = 128, bk: int = 128,
-              use_pallas: bool | None = None, plan: tuple | None = None):
+              use_pallas: bool | None = None, plan: tuple | None = None,
+              accum: str | None = None):
     """Block-ESOP Y = (out +) X @ C skipping zero C blocks. Returns (y, info).
 
     The block schedule and its accounting are memoized on C's identity
@@ -250,16 +289,18 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
     streamed-block savings the Pallas kernel realizes.  ``plan`` optionally
     supplies that ``(counts, idx, t_steps, stats)`` tuple precomputed from
     the concrete matrix — required when ``c`` here is a tracer (e.g. a
-    replicated operand inside a ``shard_map`` body).
+    replicated operand inside a ``shard_map`` body).  ``accum`` as in
+    :func:`sr_gemm` (``docs/numerics.md``).
     """
     if use_pallas is None:
         use_pallas = on_tpu()
+    accum = _norm_accum(accum, x, c, out)
     counts, idx, t_steps, stats = (plan if plan is not None
                                    else esop_plan_cached(c, bk, bn))
 
     def prim(x, c, out):
         if not use_pallas:
-            return ref.ref_esop_gemm(x, c, (bk, bn), out)
+            return ref.ref_esop_gemm(x, c, (bk, bn), out, accum=accum)
         interpret = not on_tpu()
         m, n = x.shape[0], c.shape[1]
         xp = _pad_to(x, (bm, bk))
@@ -267,7 +308,7 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
         op = _pad_to(out, (bm, bn)) if out is not None else None
         yk, _ = esop_gemm_pallas(xp, cp, op, bm=bm, bn=bn, bk=bk,
                                  interpret=interpret,
-                                 plan=(counts, idx, t_steps))
+                                 plan=(counts, idx, t_steps), accum=accum)
         return yk[:m, :n]
 
     def bwd_x(g, c):
@@ -294,7 +335,8 @@ def esop_gemm(x: jnp.ndarray, c: jnp.ndarray, out: jnp.ndarray | None = None,
 
 def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                bu: int = 128, bka: int = 128, bnb: int = 32, bna: int = 128,
-               use_pallas: bool | None = None, plans: tuple | None = None):
+               use_pallas: bool | None = None, plans: tuple | None = None,
+               accum: str | None = None):
     """Fused two-stage GEMT ``Y = (X3 ×_a C_a) ×_b C_b``. Returns (y, info).
 
     ``x3`` is the u-major unfolding ``(U, Nb, Na)`` (``engine.lower``
@@ -309,6 +351,7 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         use_pallas = on_tpu()
     if jnp.iscomplexobj(x3) or jnp.iscomplexobj(ca) or jnp.iscomplexobj(cb):
         use_pallas = False
+    accum = _norm_accum(accum, x3, ca, cb)
     u, nb, na = x3.shape
     # Validate before padding: post-pad extents can line up by accident and
     # the kernel would silently contract against garbage rows.
@@ -344,14 +387,15 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
 
     def prim(x3, ca, cb):
         if not use_pallas:
-            return ref.ref_fused_gemt(x3, ca, cb)
+            return ref.ref_fused_gemt(x3, ca, cb, accum=accum)
         interpret = not on_tpu()
         xp = _pad_to(x3, (bu, bnb, bna))
         cap = _pad_to(ca, (bna, bka))
         cbp = _pad_to(cb, (bnb, kbp))
         yk, _ = fused_gemt_pallas(
             xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna,
-            interpret=interpret, plan=(counts_a, idx_a, t_a, idx_b, t_b))
+            interpret=interpret, plan=(counts_a, idx_a, t_a, idx_b, t_b),
+            accum=accum)
         return yk[:u, :ka, :kb]
 
     @jax.custom_vjp
@@ -373,12 +417,13 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
             dx3, _ = fused_gemt(gsw, transposed_cached(car),
                                 transposed_cached(cbr), bu=bu,
                                 use_pallas=use_pallas)
-        dx3 = jnp.swapaxes(dx3, 1, 2)
+        dx3 = jnp.swapaxes(dx3, 1, 2).astype(x3r.dtype)
         # Coefficient cotangents are mode-unfolded rank-k products; the
         # engine-level VJP owns the training hot path with planned kernels,
-        # this direct-op safety net contracts them in place.
-        dca = jnp.einsum("uba,ukl,bl->ak", x3r, g, cbr)
-        dcb = jnp.einsum("uba,ak,ukl->bl", x3r, car, g)
+        # this direct-op safety net contracts them in place.  Casts are
+        # identities unless a promoted accum made g float32.
+        dca = jnp.einsum("uba,ukl,bl->ak", x3r, g, cbr).astype(car.dtype)
+        dcb = jnp.einsum("uba,ak,ukl->bl", x3r, car, g).astype(cbr.dtype)
         return dx3, dca, dcb
 
     f.defvjp(lambda x3, ca, cb: (prim(x3, ca, cb), (x3, ca, cb)), bwd)
@@ -388,7 +433,8 @@ def fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
 def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                 cc: jnp.ndarray, bu: int = 8, bka: int = 128, bnb: int = 16,
                 bnc: int = 16, bna: int = 128,
-                use_pallas: bool | None = None, plans: tuple | None = None):
+                use_pallas: bool | None = None, plans: tuple | None = None,
+                accum: str | None = None):
     """Whole-transform fused GEMT ``Y = ((X4 ×_a C_a) ×_b C_b) ×_c C_c``.
     Returns (y, info).
 
@@ -404,6 +450,7 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         use_pallas = on_tpu()
     if any(jnp.iscomplexobj(t) for t in (x4, ca, cb, cc)):
         use_pallas = False
+    accum = _norm_accum(accum, x4, ca, cb, cc)
     u, nc, nb, na = x4.shape
     # Validate before padding: post-pad extents can line up by accident and
     # the kernel would silently contract against garbage rows.
@@ -448,7 +495,7 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
 
     def prim(x4, ca, cb, cc):
         if not use_pallas:
-            return ref.ref_fused3_gemt(x4, ca, cb, cc)
+            return ref.ref_fused3_gemt(x4, ca, cb, cc, accum=accum)
         interpret = not on_tpu()
         xp = _pad_to(x4, (bu, bnc, bnb, bna))
         cap = _pad_to(ca, (bna, bka))
@@ -457,7 +504,8 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         yk, _ = fused3_gemt_pallas(
             xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
             interpret=interpret,
-            plan=(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c))
+            plan=(counts_a, idx_a, t_a, idx_b, t_b, idx_c, t_c),
+            accum=accum)
         return yk[:u, :ka, :kb, :kc]
 
     @jax.custom_vjp
@@ -479,10 +527,13 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                                  transposed_cached(cbr),
                                  transposed_cached(ccr), bu=bu,
                                  use_pallas=use_pallas)
-        dx4 = jnp.transpose(dx4, (0, 3, 2, 1))
-        dca = jnp.einsum("ucba,uklm,bl,cm->ak", x4r, g, cbr, ccr)
-        dcb = jnp.einsum("ucba,ak,uklm,cm->bl", x4r, car, g, ccr)
-        dcc = jnp.einsum("ucba,ak,bl,uklm->cm", x4r, car, cbr, g)
+        dx4 = jnp.transpose(dx4, (0, 3, 2, 1)).astype(x4r.dtype)
+        dca = jnp.einsum("ucba,uklm,bl,cm->ak",
+                         x4r, g, cbr, ccr).astype(car.dtype)
+        dcb = jnp.einsum("ucba,ak,uklm,cm->bl",
+                         x4r, car, g, ccr).astype(cbr.dtype)
+        dcc = jnp.einsum("ucba,ak,bl,uklm->cm",
+                         x4r, car, cbr, g).astype(ccr.dtype)
         return dx4, dca, dcb, dcc
 
     f.defvjp(lambda x4, ca, cb, cc: (prim(x4, ca, cb, cc), (x4, ca, cb, cc)),
@@ -492,7 +543,8 @@ def fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
 
 def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                bu: int = 128, bka: int = 128, bnb: int = 32, bna: int = 128,
-               use_pallas: bool | None = None, plan_a: tuple | None = None):
+               use_pallas: bool | None = None, plan_a: tuple | None = None,
+               accum: str | None = None):
     """Chain pair ``y, y1 = (X3 ×_a C_a) ×_b C_b`` with the intermediate
     emitted.  Returns ``(y, y1, info)``; layouts ``(U, Ka, Kb)`` /
     ``(U, Nb, Ka)``.
@@ -509,6 +561,7 @@ def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         use_pallas = on_tpu()
     if jnp.iscomplexobj(x3) or jnp.iscomplexobj(ca) or jnp.iscomplexobj(cb):
         use_pallas = False
+    accum = _norm_accum(accum, x3, ca, cb)
     u, nb, na = x3.shape
     if ca.shape[0] != na or cb.shape[0] != nb:
         raise ValueError(
@@ -517,7 +570,7 @@ def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     if use_pallas and plan_a is None and _is_traced(ca):
         use_pallas = False  # no host-readable ESOP schedule for a tracer
     if not use_pallas:
-        y, y1 = ref.ref_chain_gemt(x3, ca, cb)
+        y, y1 = ref.ref_chain_gemt(x3, ca, cb, accum=accum)
         return y, y1, {"t_steps_dense": (-(-na // bna), nb // bnb)}
     ka, kb = ca.shape[1], cb.shape[1]
     kbp = kb_padded(kb)
@@ -528,7 +581,7 @@ def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     cbp = _pad_to(cb, (bnb, kbp))
     yk, y1k, _ = chain_gemt_pallas(
         xp, cap, cbp, bu=bu, bka=bka, bnb=bnb, bna=bna,
-        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a))
+        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a), accum=accum)
     info = {
         "blocks_dense_a": stats_a["blocks_dense"],
         "blocks_live_a": stats_a["blocks_live"],
@@ -541,7 +594,8 @@ def chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
 def chain3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
                 cc: jnp.ndarray, bu: int = 8, bka: int = 128, bnb: int = 16,
                 bnc: int = 16, bna: int = 128,
-                use_pallas: bool | None = None, plan_a: tuple | None = None):
+                use_pallas: bool | None = None, plan_a: tuple | None = None,
+                accum: str | None = None):
     """Chain triple ``y, y1, y2 = ((X4 ×_a C_a) ×_b C_b) ×_c C_c`` with both
     intermediates emitted.  Returns ``(y, y1, y2, info)``; layouts
     ``(U, Ka, Kb, Kc)`` / ``(U, Nc, Nb, Ka)`` / ``(U, Nc, Ka, Kb)``.
@@ -555,6 +609,7 @@ def chain3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
         use_pallas = on_tpu()
     if any(jnp.iscomplexobj(t) for t in (x4, ca, cb, cc)):
         use_pallas = False
+    accum = _norm_accum(accum, x4, ca, cb, cc)
     u, nc, nb, na = x4.shape
     if ca.shape[0] != na or cb.shape[0] != nb or cc.shape[0] != nc:
         raise ValueError(
@@ -563,7 +618,7 @@ def chain3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     if use_pallas and plan_a is None and _is_traced(ca):
         use_pallas = False
     if not use_pallas:
-        y, y1, y2 = ref.ref_chain3_gemt(x4, ca, cb, cc)
+        y, y1, y2 = ref.ref_chain3_gemt(x4, ca, cb, cc, accum=accum)
         return y, y1, y2, {"t_steps_dense": (-(-na // bna), nb // bnb,
                                              nc // bnc)}
     ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
@@ -576,7 +631,7 @@ def chain3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
     ccp = _pad_to(cc, (bnc, kcp))
     yk, y1k, y2k, _ = chain3_gemt_pallas(
         xp, cap, cbp, ccp, bu=bu, bka=bka, bnb=bnb, bnc=bnc, bna=bna,
-        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a))
+        interpret=not on_tpu(), plan_a=(counts_a, idx_a, t_a), accum=accum)
     info = {
         "blocks_dense_a": stats_a["blocks_dense"],
         "blocks_live_a": stats_a["blocks_live"],

@@ -7,6 +7,8 @@ dispatch in ``ops.py`` runs these in production too.  See
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -14,10 +16,79 @@ __all__ = ["ref_sr_gemm", "ref_esop_gemm", "ref_fused_gemt",
            "ref_fused3_gemt", "ref_chain_gemt", "ref_chain3_gemt",
            "ref_coeff_grad_batch", "ref_attention"]
 
+# K-chunk width of the compensated reference reduction — mirrors the
+# kernels' bk streaming granularity (docs/numerics.md).
+_NEUMAIER_CHUNK = 64
+
+
+def _accum_out_dtype(dtype, accum: str):
+    """Flush dtype under an accumulation mode (kernel-local mirror of
+    ``engine.numerics.accum_out_dtype`` — kernels stay engine-free)."""
+    dtype = jnp.dtype(dtype)
+    if accum == "plain" or jnp.issubdtype(dtype, jnp.complexfloating):
+        return dtype
+    if jnp.issubdtype(dtype, jnp.floating) and dtype.itemsize < 4:
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def _promoted(accum: str, *operands) -> bool:
+    """True when ``accum`` promotes these operands (real, non-plain)."""
+    return accum != "plain" and not any(
+        jnp.issubdtype(o.dtype, jnp.complexfloating) for o in operands)
+
+
+def _neumaier_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                     out: jnp.ndarray | None = None) -> jnp.ndarray:
+    """f32 matmul with a Neumaier-compensated reduction across K chunks.
+
+    Each ``_NEUMAIER_CHUNK``-wide slab is a plain f32 dot; the slabs are
+    folded with Neumaier's update — the lost low-order bits of every
+    ``acc + p`` ride in ``comp`` and are added back at the flush, so the
+    reduction error is independent of K (the reference-path analogue of
+    the kernels' comp scratch).  Shapes are static, so the python loop
+    unrolls under jit.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    k = a.shape[1]
+    if out is None:
+        acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    else:
+        acc = out.astype(jnp.float32)
+    comp = jnp.zeros_like(acc)
+    for s in range(0, k, _NEUMAIER_CHUNK):
+        p = jnp.dot(a[:, s:s + _NEUMAIER_CHUNK], b[s:s + _NEUMAIER_CHUNK, :])
+        t = acc + p
+        comp = comp + jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                (acc - t) + p, (p - t) + acc)
+        acc = t
+    return acc + comp
+
+
+def _ref_matmul(a: jnp.ndarray, b: jnp.ndarray, accum: str,
+                out: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One f32 contraction under an accumulation mode (f32 in, f32 out)."""
+    if accum == "compensated":
+        return _neumaier_matmul(a, b, out=out)
+    y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    if out is not None:
+        y = y + out.astype(jnp.float32)
+    return y
+
 
 def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
-                out: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Oracle for the streaming outer-product SR-GEMM: Y (+)= X @ C."""
+                out: jnp.ndarray | None = None,
+                accum: str = "plain") -> jnp.ndarray:
+    """Oracle for the streaming outer-product SR-GEMM: Y (+)= X @ C.
+
+    ``accum`` selects the flush: ``"plain"`` rounds back to the operand
+    dtype, ``"f32"``/``"compensated"`` keep float32 (the latter with the
+    Neumaier-compensated chunk reduction).  See ``docs/numerics.md``.
+    """
+    if _promoted(accum, x, c):
+        y = _ref_matmul(x, c, accum, out=out)
+        return y.astype(_accum_out_dtype(x.dtype, accum))
     y = jnp.dot(x.astype(jnp.float32), c.astype(jnp.float32))
     if out is not None:
         y = y + out.astype(jnp.float32)
@@ -26,19 +97,20 @@ def ref_sr_gemm(x: jnp.ndarray, c: jnp.ndarray,
 
 def ref_esop_gemm(x: jnp.ndarray, c: jnp.ndarray,
                   block: tuple[int, int],
-                  out: jnp.ndarray | None = None) -> jnp.ndarray:
+                  out: jnp.ndarray | None = None,
+                  accum: str = "plain") -> jnp.ndarray:
     """Oracle for block-ESOP: identical to SR-GEMM with *block-zeroed* C.
 
     Zero blocks of C contribute nothing; the kernel skips them.  Because
     skipped blocks are exactly zero, the oracle is just the dense product.
     """
     del block  # exactness of zero-skipping: dense result is the oracle
-    return ref_sr_gemm(x, c, out=out)
+    return ref_sr_gemm(x, c, out=out, accum=accum)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum",))
 def ref_fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
-                   cb: jnp.ndarray) -> jnp.ndarray:
+                   cb: jnp.ndarray, accum: str = "plain") -> jnp.ndarray:
     """Oracle for the fused two-stage GEMT (u-major layout).
 
     ``Y[u, ka, kb] = Σ_nb Σ_na X3[u, nb, na] · C_a[na, ka] · C_b[nb, kb]``
@@ -46,27 +118,42 @@ def ref_fused_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
     inside the compiled computation — the reference-path analogue of the
     kernel's VMEM-resident intermediate.  (The explicit two-step form beats
     the equivalent three-operand einsum on CPU by ~1.7× at serving sizes.)
-    Handles complex dtypes (DFT stages).
+    Handles complex dtypes (DFT stages).  Promoted ``accum`` modes run
+    both GEMMs in f32 (Neumaier-compensated when ``"compensated"``) and
+    flush in float32.
     """
     u, nb, na = x3.shape
     ka, kb = ca.shape[1], cb.shape[1]
+    if _promoted(accum, x3, ca, cb):
+        p = _ref_matmul(x3.reshape(u * nb, na), ca, accum).reshape(u, nb, ka)
+        y = _ref_matmul(jnp.swapaxes(p, 1, 2).reshape(u * ka, nb), cb, accum)
+        return y.reshape(u, ka, kb).astype(_accum_out_dtype(x3.dtype, accum))
     p = (x3.reshape(u * nb, na) @ ca).reshape(u, nb, ka)
     return (jnp.swapaxes(p, 1, 2).reshape(u * ka, nb) @ cb).reshape(u, ka, kb)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum",))
 def ref_fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
-                    cc: jnp.ndarray) -> jnp.ndarray:
+                    cc: jnp.ndarray, accum: str = "plain") -> jnp.ndarray:
     """Oracle for the whole-transform fused GEMT (u-major layout).
 
     ``Y[u,ka,kb,kc] = Σ_nc Σ_nb Σ_na X4[u,nc,nb,na]·C_a·C_b·C_c`` as three
     flat GEMMs under one jit, so neither intermediate ever exists outside
     the compiled computation — the reference-path analogue of the
     megakernel's two VMEM-resident partials.  Handles complex dtypes
-    (DFT stages).
+    (DFT stages); promoted ``accum`` modes as in :func:`ref_fused_gemt`.
     """
     u, nc, nb, na = x4.shape
     ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    if _promoted(accum, x4, ca, cb, cc):
+        p1 = _ref_matmul(x4.reshape(u * nc * nb, na), ca,
+                         accum).reshape(u, nc, nb, ka)
+        p2 = _ref_matmul(jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb),
+                         cb, accum).reshape(u, nc, ka, kb)
+        y = _ref_matmul(jnp.moveaxis(p2, 1, 3).reshape(u * ka * kb, nc),
+                        cc, accum)
+        return y.reshape(u, ka, kb, kc).astype(
+            _accum_out_dtype(x4.dtype, accum))
     p1 = (x4.reshape(u * nc * nb, na) @ ca).reshape(u, nc, nb, ka)
     p2 = (jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb)
           @ cb).reshape(u, nc, ka, kb)
@@ -74,26 +161,44 @@ def ref_fused3_gemt(x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
             @ cc).reshape(u, ka, kb, kc)
 
 
-@jax.jit
-def ref_chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray,
-                   cb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+@functools.partial(jax.jit, static_argnames=("accum",))
+def ref_chain_gemt(x3: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
+                   accum: str = "plain") -> tuple[jnp.ndarray, jnp.ndarray]:
     """Oracle for the chain pair: fused result *plus* the emitted
-    intermediate ``y1 = X ×_a C_a`` in its ``(U, Nb, Ka)`` layout."""
+    intermediate ``y1 = X ×_a C_a`` in its ``(U, Nb, Ka)`` layout.
+    Promoted ``accum`` modes emit both in float32."""
     u, nb, na = x3.shape
     ka, kb = ca.shape[1], cb.shape[1]
+    if _promoted(accum, x3, ca, cb):
+        odt = _accum_out_dtype(x3.dtype, accum)
+        p = _ref_matmul(x3.reshape(u * nb, na), ca, accum).reshape(u, nb, ka)
+        y = _ref_matmul(jnp.swapaxes(p, 1, 2).reshape(u * ka, nb), cb, accum)
+        return y.reshape(u, ka, kb).astype(odt), p.astype(odt)
     p = (x3.reshape(u * nb, na) @ ca).reshape(u, nb, ka)
     y = (jnp.swapaxes(p, 1, 2).reshape(u * ka, nb) @ cb).reshape(u, ka, kb)
     return y, p
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum",))
 def ref_chain3_gemt(
         x4: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray,
-        cc: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        cc: jnp.ndarray, accum: str = "plain"
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Oracle for the chain triple: fused result plus both emitted
-    intermediates ``y1 (U, Nc, Nb, Ka)`` and ``y2 (U, Nc, Ka, Kb)``."""
+    intermediates ``y1 (U, Nc, Nb, Ka)`` and ``y2 (U, Nc, Ka, Kb)``.
+    Promoted ``accum`` modes emit all three in float32."""
     u, nc, nb, na = x4.shape
     ka, kb, kc = ca.shape[1], cb.shape[1], cc.shape[1]
+    if _promoted(accum, x4, ca, cb, cc):
+        odt = _accum_out_dtype(x4.dtype, accum)
+        p1 = _ref_matmul(x4.reshape(u * nc * nb, na), ca,
+                         accum).reshape(u, nc, nb, ka)
+        p2 = _ref_matmul(jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb),
+                         cb, accum).reshape(u, nc, ka, kb)
+        y = _ref_matmul(jnp.moveaxis(p2, 1, 3).reshape(u * ka * kb, nc),
+                        cc, accum)
+        return (y.reshape(u, ka, kb, kc).astype(odt),
+                p1.astype(odt), p2.astype(odt))
     p1 = (x4.reshape(u * nc * nb, na) @ ca).reshape(u, nc, nb, ka)
     p2 = (jnp.swapaxes(p1, 2, 3).reshape(u * nc * ka, nb)
           @ cb).reshape(u, nc, ka, kb)

@@ -28,8 +28,19 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["sr_gemm_kernel", "sr_gemm_pallas"]
 
 
-def sr_gemm_kernel(*refs, k_steps: int, affine: bool):
-    """One (i, j) output tile; grid dim 2 streams C's contraction blocks."""
+def sr_gemm_kernel(*refs, k_steps: int, affine: bool, accum: str = "plain"):
+    """One (i, j) output tile; grid dim 2 streams C's contraction blocks.
+
+    ``accum="compensated"`` carries a second VMEM scratch (``comp_ref``)
+    holding the Neumaier compensation: the low-order bits lost by each
+    ``acc + p`` rank-update are banked there and folded back at the flush,
+    so the reduction error stops growing with ``k_steps``
+    (``docs/numerics.md``).  ``"f32"`` needs no kernel change — it is the
+    same fp32 accumulator with a float32 ``o_ref`` (no downcast).
+    """
+    compensated = accum == "compensated"
+    if compensated:
+        *refs, comp_ref = refs
     if affine:
         o_init_ref, x_ref, c_ref, o_ref, acc_ref = refs
     else:
@@ -43,20 +54,29 @@ def sr_gemm_kernel(*refs, k_steps: int, affine: bool):
         # buffer is ever allocated or fetched.
         acc_ref[...] = (o_init_ref[...].astype(acc_ref.dtype) if affine
                         else jnp.zeros(acc_ref.shape, acc_ref.dtype))
+        if compensated:
+            comp_ref[...] = jnp.zeros(comp_ref.shape, comp_ref.dtype)
 
     # Rank-bk update: the streamed coefficient block crosses the resident
     # data block exactly like the paper's (column-vector ∘ row-vector) step.
-    acc_ref[...] += jnp.dot(
-        x_ref[...], c_ref[...], preferred_element_type=jnp.float32
-    )
+    p = jnp.dot(x_ref[...], c_ref[...], preferred_element_type=jnp.float32)
+    if compensated:
+        acc = acc_ref[...]
+        t = acc + p
+        comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(p),
+                                   (acc - t) + p, (p - t) + acc)
+        acc_ref[...] = t
+    else:
+        acc_ref[...] += p
 
     @pl.when(k == k_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        flushed = acc_ref[...] + comp_ref[...] if compensated else acc_ref[...]
+        o_ref[...] = flushed.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "accum")
 )
 def sr_gemm_pallas(
     x: jnp.ndarray,
@@ -66,12 +86,16 @@ def sr_gemm_pallas(
     bn: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    accum: str = "plain",
 ) -> jnp.ndarray:
     """Y = (out +) X @ C with X: (M, K), C: (K, N), out: (M, N) or None.
 
     Shapes must be multiples of the block shape (``ops.sr_gemm`` pads).
     ``out=None`` initializes the accumulator to zero in-kernel; an affine
-    seed is only streamed (and aliased) when actually provided.
+    seed is only streamed (and aliased) when actually provided.  Promoted
+    ``accum`` modes flush in float32 (``"compensated"`` adds the Neumaier
+    scratch — one extra f32 output tile of VMEM, folded into the planner's
+    footprint ladders).
     """
     m, kdim = x.shape
     k2, n = c.shape
@@ -80,6 +104,11 @@ def sr_gemm_pallas(
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (x.shape, c.shape, (bm, bn, bk))
     k_steps = kdim // bk
     affine = out is not None
+    out_dtype = (jnp.float32 if accum != "plain"
+                 else (out.dtype if affine else x.dtype))
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]  # stationary tile
+    if accum == "compensated":
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))  # Neumaier comp
 
     grid = (m // bm, n // bn, k_steps)
     in_specs = [
@@ -91,12 +120,14 @@ def sr_gemm_pallas(
         in_specs.insert(0, pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
         operands.insert(0, out)  # o_init (aliased)
     return pl.pallas_call(
-        functools.partial(sr_gemm_kernel, k_steps=k_steps, affine=affine),
+        functools.partial(sr_gemm_kernel, k_steps=k_steps, affine=affine,
+                          accum=accum),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out.dtype if affine else x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],  # stationary tile
-        input_output_aliases={0: 0} if affine else {},
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        input_output_aliases=(
+            {0: 0} if affine and out_dtype == out.dtype else {}),
         interpret=interpret,
     )(*operands)

@@ -13,7 +13,14 @@ patterns and injects
 * ``vmem_pressure`` — raise :class:`VmemPressure` (RESOURCE_EXHAUSTED:
   the tile working set no longer fits on-chip),
 * ``device_loss`` — raise :class:`DeviceLoss` with the surviving device
-  count (half the pod disappears mid-request).
+  count (half the pod disappears mid-request),
+* ``nan`` — arm a *poison* flag instead of raising: the hook fires before
+  the work a span times, so a silent-corruption drill cannot corrupt the
+  output from here.  The serving runtime polls
+  :func:`consume_nan_poison` after each transform and multiplies the
+  result by NaN when armed — modeling a kernel that completed with
+  corrupted accumulators, which only a finite-guard can catch
+  (``docs/numerics.md``).
 
 Each spec carries a ``times`` budget and an ``after`` skip so drills can
 script "the second fused_triple launch fails twice, then heals".  The
@@ -45,9 +52,28 @@ __all__ = [
     "VmemPressure",
     "DeviceLoss",
     "inject_faults",
+    "consume_nan_poison",
 ]
 
-FAULT_KINDS = ("exception", "delay", "vmem_pressure", "device_loss")
+FAULT_KINDS = ("exception", "delay", "vmem_pressure", "device_loss", "nan")
+
+# Pending silent-corruption injections ("nan" kind): armed by the hook,
+# drained by the runtime's finite-guard path via consume_nan_poison().
+_nan_poison_pending = 0
+
+
+def consume_nan_poison() -> bool:
+    """Drain one armed ``nan`` fault; True if one was pending.
+
+    The serving runtime calls this after each transform and poisons the
+    output itself — the span hook runs *before* the work, so this is the
+    only way an injector can model silent output corruption.
+    """
+    global _nan_poison_pending
+    if _nan_poison_pending > 0:
+        _nan_poison_pending -= 1
+        return True
+    return False
 
 
 class FaultError(InjectedFailure):
@@ -121,7 +147,10 @@ class FaultInjector:
                                  {"at": name, "match": spec.match}):
                     pass
             msg = spec.message or f"injected {spec.kind} at span {name!r}"
-            if spec.kind == "delay":
+            if spec.kind == "nan":
+                global _nan_poison_pending
+                _nan_poison_pending += 1
+            elif spec.kind == "delay":
                 self._sleep(spec.delay_s)
             elif spec.kind == "vmem_pressure":
                 raise VmemPressure(msg)
@@ -137,6 +166,11 @@ class FaultInjector:
     def uninstall(self) -> None:
         _trace.set_fault_hook(self._prev)
         self._prev = None
+        # Unconsumed poison must not leak into the next drill (a request
+        # admitted after the injector leaves would fail its finite-guard
+        # with no matching faults.injected.nan in *its* accounting window).
+        global _nan_poison_pending
+        _nan_poison_pending = 0
 
     @property
     def exhausted(self) -> bool:

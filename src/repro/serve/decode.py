@@ -110,6 +110,8 @@ class DxtServeSession:
     batch_axis: Any = None  # mesh axis sharding the request batch dim
     vmem_budget: int | None = None  # None = engine.DEFAULT_VMEM_BUDGET
     backend: str | None = None  # pin every stage ("einsum"); None = auto
+    accum: str | None = None  # accumulation mode (engine.numerics)
+    error_budget: float | None = None  # a-priori rounding-bound ceiling
 
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
@@ -160,7 +162,8 @@ class DxtServeSession:
 
     def transform(self, batch, inverse: bool | None = None, *,
                   fuse=_UNSET, use_pallas=_UNSET, vmem_budget=_UNSET,
-                  backend=_UNSET) -> jnp.ndarray:
+                  backend=_UNSET, accum=_UNSET,
+                  error_budget=_UNSET) -> jnp.ndarray:
         """Apply the transform to a (B, N1, N2, N3) batch.
 
         ``inverse`` overrides the session's direction for this request
@@ -170,16 +173,21 @@ class DxtServeSession:
         the same engine plans and autotuned tiles.
 
         The keyword-only ``fuse``/``use_pallas``/``vmem_budget``/
-        ``backend`` override the session defaults for this request —
-        the degradation-ladder hooks :class:`repro.serve.ResilientDxtServer`
-        uses to replan a failing request one tier down without touching
-        the session's steady-state configuration.
+        ``backend``/``accum``/``error_budget`` override the session
+        defaults for this request — the degradation-ladder hooks
+        :class:`repro.serve.ResilientDxtServer` uses to replan a failing
+        request one tier down (or with compensated accumulation forced,
+        after a nonfinite output) without touching the session's
+        steady-state configuration.
         """
         from ..engine import DEFAULT_VMEM_BUDGET, gemt3_planned
 
         fuse = self.fuse if fuse is _UNSET else fuse
         use_pallas = self.use_pallas if use_pallas is _UNSET else use_pallas
         backend = self.backend if backend is _UNSET else backend
+        accum = self.accum if accum is _UNSET else accum
+        if error_budget is _UNSET:
+            error_budget = self.error_budget
         if vmem_budget is _UNSET:
             vmem_budget = self.vmem_budget
         if vmem_budget is None:
@@ -205,7 +213,8 @@ class DxtServeSession:
         with sp:
             y, info = gemt3_planned(x, c1, c2, c3, fuse=fuse,
                                     vmem_budget=vmem_budget,
-                                    backend=backend,
+                                    backend=backend, accum=accum,
+                                    error_budget=error_budget,
                                     autotune=self.autotune,
                                     autotune_cache=self.autotune_cache,
                                     use_pallas=use_pallas,

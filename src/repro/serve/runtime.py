@@ -34,6 +34,21 @@ The einsum tier is the floor: it is attempted even with its breaker open,
 because shedding a request the queue already admitted is the one thing
 the runtime never does.
 
+A **finite-guard** (off by default; ``finite_check_every=N`` checks every
+N-th attempt) catches *silent* corruption the exception paths never see:
+a NaN/Inf output classifies as a retryable
+:class:`repro.engine.numerics.NonfiniteOutput`, counted in
+``numerics.nonfinite.detected``.  Recovery pins the request one ladder
+rung below the failing tier (a per-request floor — the breaker ladder
+still applies on top) and forces ``accum="compensated"`` on every
+subsequent attempt, so the retry runs with guarded accumulation
+(``docs/numerics.md``).  The ``nan`` fault kind of
+:mod:`repro.runtime.faults` drills exactly this path: the injector arms a
+poison flag, the runtime multiplies the transform output by NaN when the
+flag is armed (:func:`repro.runtime.faults.consume_nan_poison`), and the
+drill balances ``serve.retry`` / ``numerics.nonfinite.detected`` against
+``faults.injected.nan``.
+
 Two fault kinds bypass the ladder:
 
 * **VMEM pressure** (:class:`repro.runtime.faults.VmemPressure`) —
@@ -63,9 +78,10 @@ import time
 from collections import deque
 from typing import Any, Callable
 
+from ..engine.numerics import NonfiniteOutput, finite_guard
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
-from ..runtime.faults import DeviceLoss, VmemPressure
+from ..runtime.faults import DeviceLoss, VmemPressure, consume_nan_poison
 from .decode import DxtServeSession
 
 __all__ = [
@@ -176,6 +192,10 @@ class Request:
     info: dict | None = None
     error: BaseException | None = None
     events: list = dataclasses.field(default_factory=list)
+    # Nonfinite-recovery state: a per-request ladder floor (the failing
+    # tier's successor) and a forced accumulation mode for retries.
+    tier_floor: str | None = None
+    force_accum: str | None = None
 
 
 class ResilientDxtServer:
@@ -198,6 +218,7 @@ class ResilientDxtServer:
                  breaker_cooldown_s: float = 1.0,
                  vmem_shrink: float = 0.5,
                  min_vmem_budget: int = 1 << 18,
+                 finite_check_every: int = 0,
                  devices=None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
@@ -211,6 +232,10 @@ class ResilientDxtServer:
         self.retry = retry or RetryPolicy()
         self.vmem_shrink = float(vmem_shrink)
         self.min_vmem_budget = int(min_vmem_budget)
+        # 0 = finite-guard off; N > 0 checks every N-th attempt for
+        # NaN/Inf (a host sync — sample, don't pay it on every request).
+        self.finite_check_every = int(finite_check_every)
+        self._finite_seq = 0
         self._devices = devices
         self._clock = clock
         self._sleep = sleep
@@ -226,7 +251,7 @@ class ResilientDxtServer:
         self.counts = {k: 0 for k in
                        ("admitted", "completed", "failed", "shed", "retries",
                         "timeouts", "degraded", "remeshes", "recovered",
-                        "deadline_exceeded")}
+                        "deadline_exceeded", "nonfinite")}
 
     # -- admission ---------------------------------------------------------
 
@@ -274,8 +299,13 @@ class ResilientDxtServer:
         self.counts[key] += n
         _metrics.inc(_COUNTERS[key], n)
 
-    def _pick_tier(self) -> str:
-        for tier in LADDER_TIERS:
+    def _pick_tier(self, req: Request | None = None) -> str:
+        start = 0
+        if req is not None and req.tier_floor is not None:
+            # Nonfinite recovery pinned this request at (or below) the
+            # failing tier's successor; breaker health applies below it.
+            start = LADDER_TIERS.index(req.tier_floor)
+        for tier in LADDER_TIERS[start:]:
             if self.breakers[tier].allow():
                 return tier
         # Every breaker open: the einsum floor runs anyway — admitted
@@ -292,8 +322,24 @@ class ResilientDxtServer:
         knobs = dict(_TIER_KNOBS[tier])
         if self.vmem_budget is not None:
             knobs["vmem_budget"] = self.vmem_budget
+        if req.force_accum is not None:
+            knobs["accum"] = req.force_accum
         t0 = self._clock()
         y = self.session.transform(req.batch, inverse=req.inverse, **knobs)
+        if consume_nan_poison():
+            # An armed "nan" drill fault: the span hook fired before the
+            # work, so the corruption is applied here — after the
+            # transform, before the guard, exactly where a kernel with
+            # rotted accumulators would hand the runtime a poisoned array.
+            y = y * float("nan")
+        self._finite_seq += 1
+        if (self.finite_check_every > 0
+                and self._finite_seq % self.finite_check_every == 0
+                and not finite_guard(y)):
+            self._count("nonfinite")
+            raise NonfiniteOutput(
+                f"nonfinite transform output (tier {tier}, "
+                f"request {req.id}, attempt {req.attempts})")
         elapsed = self._clock() - t0
         if (self.attempt_timeout_s is not None
                 and elapsed > self.attempt_timeout_s):
@@ -317,7 +363,7 @@ class ResilientDxtServer:
         prev_tier = None
         cause = "kernel_failure"
         while True:
-            tier = self._pick_tier()
+            tier = self._pick_tier(req)
             if (prev_tier is not None
                     and LADDER_TIERS.index(tier) > LADDER_TIERS.index(prev_tier)):
                 self._degrade(req, tier, reason=cause)
@@ -333,6 +379,24 @@ class ResilientDxtServer:
             except DeviceLoss as e:
                 self._on_device_loss(req, e)
                 cause = "device_loss"
+                err = e
+            except NonfiniteOutput as e:
+                # Silent corruption caught by the finite-guard: health-wise
+                # a tier failure, recovery-wise a *numerics* failure — the
+                # retry is pinned one rung down with compensated
+                # accumulation forced, so it cannot re-run the exact
+                # configuration that produced the NaN.
+                breaker.record_failure()
+                floor = LADDER_TIERS[min(LADDER_TIERS.index(tier) + 1,
+                                         len(LADDER_TIERS) - 1)]
+                req.tier_floor = floor
+                req.force_accum = "compensated"
+                req.events.append({"kind": "numerics_recovery",
+                                   "reason": "nonfinite_output",
+                                   "tier": tier, "tier_floor": floor,
+                                   "force_accum": "compensated",
+                                   "attempt": req.attempts})
+                cause = "nonfinite_output"
                 err = e
             except TimeoutError as e:
                 # timeouts count against the tier's health: a tier that is
@@ -466,4 +530,5 @@ _COUNTERS = {
     "remeshes": "serve.remesh",
     "recovered": "serve.recovered",
     "deadline_exceeded": "serve.deadline_exceeded",
+    "nonfinite": "numerics.nonfinite.detected",
 }

@@ -140,7 +140,8 @@ def build_train_step(cfg, ctx: ShardCtx, opt_cfg: OptConfig,
     return train_step
 
 
-def build_dxt_fit_step(opt_cfg: OptConfig, **engine_kwargs):
+def build_dxt_fit_step(opt_cfg: OptConfig, skip_nonfinite: bool = True,
+                       **engine_kwargs):
     """Fitting step for the engine-backed DXT layer (``core.layers``).
 
     Returns ``fit_step(state, batch) -> (state, metrics)`` minimizing the
@@ -152,8 +153,16 @@ def build_dxt_fit_step(opt_cfg: OptConfig, **engine_kwargs):
     (docs/engine.md, "Differentiation"); ``repro.engine.grad_stats()``
     counts the lowered backward kernels.  ``engine_kwargs`` (``fuse=``,
     ``autotune=``, ``mesh=``, …) pass through to the engine.
+
+    ``skip_nonfinite`` (default on — docs/numerics.md) guards the update:
+    when the loss or any gradient leaf is NaN/Inf, the step returns the
+    *old* state unchanged instead of poisoning the optimizer, reports
+    ``metrics["skipped_nonfinite"] = 1.0``, and (when running eagerly)
+    counts ``train.nonfinite_skipped``.  The guard is a ``where``-select,
+    so the step stays jittable and shape-stable.
     """
     from ..core.layers import apply_dxt3d_layer
+    from ..obs import metrics as _metrics
 
     def loss_fn(params, batch):
         pred = apply_dxt3d_layer(params, batch["x"], **engine_kwargs)
@@ -165,7 +174,19 @@ def build_dxt_fit_step(opt_cfg: OptConfig, **engine_kwargs):
         loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
         new_params, new_opt, om = adamw_update(state["params"], grads,
                                                state["opt"], opt_cfg)
-        return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+        metrics = {"loss": loss, **om}
+        if skip_nonfinite:
+            finite = jnp.isfinite(loss)
+            for g in jax.tree.leaves(grads):
+                finite &= jnp.isfinite(g).all()
+            keep = lambda new, old: jax.tree.map(  # noqa: E731
+                lambda n, o: jnp.where(finite, n, o), new, old)
+            new_params = keep(new_params, state["params"])
+            new_opt = keep(new_opt, state["opt"])
+            metrics["skipped_nonfinite"] = 1.0 - finite.astype(jnp.float32)
+            if not isinstance(finite, jax.core.Tracer) and not bool(finite):
+                _metrics.inc("train.nonfinite_skipped")
+        return {"params": new_params, "opt": new_opt}, metrics
 
     return fit_step
 

@@ -90,3 +90,28 @@ def test_serving_page_covers_lifecycle_and_is_cross_linked():
                   os.path.join("docs", "observability.md")):
         linked = open(os.path.join(_ROOT, other), encoding="utf-8").read()
         assert "serving.md" in linked, f"{other} does not link docs/serving.md"
+
+
+@pytest.mark.docs_health
+def test_numerics_page_covers_guards_and_is_cross_linked():
+    """docs/numerics.md documents the guarded-numerics layer (accum modes,
+    error model + budget escalation, nonfinite recovery, ckpt/train guards)
+    and the neighbouring pages link to it."""
+    page = os.path.join(_ROOT, "docs", "numerics.md")
+    assert os.path.exists(page), "docs/numerics.md is missing"
+    text = open(page, encoding="utf-8").read()
+    for needed in ("ACCUM_MODES", "compensated", "Neumaier",
+                   "stage_error_bound", "plan_error_bound",
+                   "enforce_error_budget", "numerics_degradation",
+                   "error_budget", "budget_met", "NonfiniteOutput",
+                   "finite_guard", "finite_check_every", "tier_floor",
+                   "force_accum", "consume_nan_poison",
+                   "numerics.nonfinite.detected", "faults.injected.nan",
+                   "skip_nonfinite", "CorruptCheckpoint",
+                   "ckpt.restore.corrupt_recovered"):
+        assert needed in text, f"numerics.md does not mention {needed!r}"
+    for other in ("README.md", os.path.join("docs", "engine.md"),
+                  os.path.join("docs", "serving.md")):
+        linked = open(os.path.join(_ROOT, other), encoding="utf-8").read()
+        assert "numerics.md" in linked, (
+            f"{other} does not link docs/numerics.md")

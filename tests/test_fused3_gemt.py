@@ -394,9 +394,9 @@ class TestFused3Autotune:
                            vmem_budget=1 << 23)
         b = make_fused_key(64, 32, 32, 32, 32, jnp.float32, "s",
                            vmem_budget=1 << 20)
-        # v1 (unbudgeted), v2 (pre-differentiable timings) and v3
-        # (pre-adjoint-role tile sharing) orphaned
-        assert a != b and a.startswith("fused:v4:")
+        # v1 (unbudgeted), v2 (pre-differentiable timings), v3
+        # (pre-adjoint-role tile sharing) and v4 (pre-accum-mode) orphaned
+        assert a != b and a.startswith("fused:v5:")
         a3 = make_fused3_key(8, 32, 32, 32, 32, 32, 32, jnp.float32, "s",
                              vmem_budget=1 << 23)
         b3 = make_fused3_key(8, 32, 32, 32, 32, 32, 32, jnp.float32, "s",

@@ -388,7 +388,7 @@ class TestAdjointPlan:
             differentiable=True) ** 2))(x)
         assert len(cache) > n_fwd  # adjoint missed the forward entries
         assert any("|adj|" in k for k in cache._entries)
-        assert all(k.startswith("v3:") for k in cache._entries)
+        assert all(k.startswith("v4:") for k in cache._entries)
 
 
 class TestEsopMemoLRU:

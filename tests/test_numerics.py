@@ -1,0 +1,529 @@
+"""Guarded numerics (marker: ``numerics_smoke``) — docs/numerics.md.
+
+Four layers under test:
+
+* the error model itself (``unit_roundoff`` / ``stage_error_bound`` /
+  ``plan_error_bound`` / ``enforce_error_budget``) and its integration
+  into the planner (``error_budget=`` escalates the accumulation mode,
+  the compensated carry scratch demotes fusion depth);
+* the kernels: a property sweep under adversarial magnitudes (denormals,
+  ±1e±30, signed zeros) asserting compensated accumulation is never less
+  accurate than plain against a float64 oracle, plus interpret-mode
+  Pallas parity with the reference path;
+* nonfinite recovery in serving: a ``nan`` chaos drill where every
+  admitted request completes with the fault-free result and
+  ``faults.injected.nan == numerics.nonfinite.detected == serve.retry``;
+* the train-step skip-nonfinite guard and the checkpoint checksum /
+  torn-file fallback.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro import ckpt as ckpt_lib
+from repro import obs
+from repro.ckpt import CorruptCheckpoint
+from repro.core.transforms import coefficient_matrix
+from repro.engine import (ACCUM_MODES, NonfiniteOutput, accum_out_dtype,
+                          build_plan, enforce_error_budget, finite_guard,
+                          gemt3_planned, normalize_accum, plan_error_bound,
+                          plan_gemt3, stage_error_bound, unit_roundoff)
+from repro.kernels.ops import esop_gemm, fused_gemt, sr_gemm
+from repro.optim import OptConfig
+from repro.runtime.faults import FaultSpec, inject_faults
+from repro.serve import DxtServeSession, ResilientDxtServer
+from repro.train.step import build_dxt_fit_step, init_dxt_fit_state
+
+ATOL = 1e-5
+
+
+class _Stage:
+    def __init__(self, n):
+        self.n = n
+
+
+# ---------------------------------------------------------------------------
+# error model
+
+
+@pytest.mark.numerics_smoke
+class TestErrorModel:
+    def test_normalize_accum(self):
+        assert normalize_accum(None) == "plain"
+        for m in ACCUM_MODES:
+            assert normalize_accum(m) == m
+        with pytest.raises(ValueError):
+            normalize_accum("fp64")
+
+    def test_accum_out_dtype(self):
+        bf16 = jnp.dtype(jnp.bfloat16)
+        assert accum_out_dtype(bf16, "plain") == bf16
+        assert accum_out_dtype(bf16, "f32") == jnp.float32
+        assert accum_out_dtype(bf16, "compensated") == jnp.float32
+        assert accum_out_dtype(jnp.float32, "compensated") == jnp.float32
+        # complex (DFT factors) never promotes
+        assert accum_out_dtype(jnp.complex64, "f32") == jnp.complex64
+
+    def test_unit_roundoff(self):
+        assert unit_roundoff(jnp.float32) == 2.0 ** -24
+        assert unit_roundoff(jnp.bfloat16) > unit_roundoff(jnp.float32)
+        assert unit_roundoff(jnp.complex64) == unit_roundoff(jnp.float32)
+        with pytest.raises(ValueError):
+            unit_roundoff(jnp.int32)
+
+    def test_stage_bound_shapes(self):
+        """Plain grows linearly with depth; compensated is depth-flat and
+        strictly tighter at serving depths."""
+        b32 = stage_error_bound(32, jnp.bfloat16, "plain")
+        b256 = stage_error_bound(256, jnp.bfloat16, "plain")
+        assert b256 > b32
+        c32 = stage_error_bound(32, jnp.bfloat16, "compensated")
+        c256 = stage_error_bound(256, jnp.bfloat16, "compensated")
+        assert c32 == c256  # Neumaier: 2·u_acc, independent of K
+        assert c32 < b32
+        # f32 keeps the K-term but drops the bf16 downcast term
+        f = stage_error_bound(32, jnp.bfloat16, "f32")
+        assert c32 < f < b32
+
+    def test_plan_bound_sums_stages(self):
+        stages = [_Stage(16), _Stage(32), _Stage(64)]
+        total = plan_error_bound(stages, jnp.bfloat16, "f32")
+        assert total == pytest.approx(sum(
+            stage_error_bound(s.n, jnp.bfloat16, "f32") for s in stages))
+
+    def test_enforce_budget_escalates_with_events(self):
+        stages = [_Stage(64)] * 3
+        accum, bound, events = enforce_error_budget(
+            stages, jnp.bfloat16, "plain", error_budget=1e-6)
+        assert accum == "compensated"
+        assert bound == plan_error_bound(stages, jnp.bfloat16, "compensated")
+        assert [e["accum_to"] for e in events] == ["f32", "compensated"]
+        for e in events:
+            assert e["kind"] == "numerics_degradation"
+            assert e["reason"] == "error_budget"
+            assert e["bound_after"] < e["bound_before"]
+            assert e["error_budget"] == 1e-6
+        assert events[-1]["budget_met"] == (bound <= 1e-6)
+
+    def test_enforce_budget_met_is_quiet(self):
+        stages = [_Stage(16)] * 3
+        accum, _, events = enforce_error_budget(
+            stages, jnp.float32, "plain", error_budget=1.0)
+        assert accum == "plain" and events == []
+
+    def test_enforce_budget_complex_never_escalates(self):
+        stages = [_Stage(64)] * 3
+        accum, _, events = enforce_error_budget(
+            stages, jnp.complex64, "plain", error_budget=1e-12)
+        assert accum == "plain" and events == []
+
+    def test_finite_guard(self):
+        assert finite_guard(jnp.ones((4, 4)))
+        assert not finite_guard(jnp.array([1.0, jnp.nan]))
+        assert not finite_guard(jnp.array([1.0, jnp.inf]))
+
+
+# ---------------------------------------------------------------------------
+# planner integration
+
+
+@pytest.mark.numerics_smoke
+class TestPlannerNumerics:
+    def test_budget_escalates_accum_and_surfaces_info(self):
+        n = 16
+        c = coefficient_matrix("dct", n).astype(jnp.bfloat16)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(2, n, n, n)), jnp.bfloat16)
+        with obs.session("numerics-plan", enable_tracing=False) as s:
+            from repro.engine import clear_plan_cache
+            clear_plan_cache()
+            y, info = gemt3_planned(x, c, c, c, error_budget=1e-9,
+                                    with_info=True)
+            num = info["numerics"]
+            assert num["accum"] == "compensated"  # 1e-9 is unmeetable
+            assert num["error_budget"] == 1e-9
+            assert num["error_bound"] > 0
+            assert [e["accum_to"] for e in num["events"]] == [
+                "f32", "compensated"]
+            assert num["events"][-1]["budget_met"] is False
+            # promoted accumulation keeps the result in float32
+            assert y.dtype == jnp.float32
+            assert s.registry.value("plan.numerics_degradations") == 2
+
+    def test_default_plan_is_untouched(self):
+        n = 16
+        c = coefficient_matrix("dct", n)
+        plan = plan_gemt3((2, n, n, n), jnp.float32, c, c, c)
+        assert plan.accum == "plain"
+        assert plan.error_budget is None
+        assert plan.error_bound > 0  # the bound is always evaluated
+        assert not [e for e in plan.events
+                    if e.get("kind") == "numerics_degradation"]
+        # the memo key is byte-identical to the pre-PR-9 default form
+        assert "ac=" not in plan.key and "eb=" not in plan.key
+        forced = plan_gemt3((2, n, n, n), jnp.float32, c, c, c,
+                            accum="compensated")
+        assert "ac=compensated" in forced.key
+
+    def test_compensated_scratch_demotes_fusion_depth(self):
+        """The carry tile is real VMEM: near the triple-fusion footprint
+        floor there is a budget band where a plain plan still fuses all
+        three stages but a compensated one must demote to pair fusion."""
+        n = 32
+        c = coefficient_matrix("dct", n).astype(jnp.float32)
+        shape, dt = (4, n, n, n), jnp.float32
+        found = None
+        budget = 1 << 24
+        while budget > 1 << 12:
+            plain = build_plan(shape, dt, c, c, c, fuse=True,
+                               vmem_budget=budget, accum="plain")
+            comp = build_plan(shape, dt, c, c, c, fuse=True,
+                              vmem_budget=budget, accum="compensated")
+            if plain.fused3 is not None and comp.fused3 is None:
+                found = (plain, comp, budget)
+                break
+            budget = int(budget / 1.05)
+        assert found, "no budget band separates plain/compensated triple"
+        plain, comp, budget = found
+        # the demotion is accounted as a fusion event, not silently
+        assert any(e.get("kind") == "fusion_degradation"
+                   for e in comp.events), comp.events
+
+    def test_blown_budget_can_demote_fusion(self):
+        """error_budget -> compensated -> bigger footprint -> shallower
+        fusion: the numerics walk and the fusion walk compose, each leg
+        leaving its own event."""
+        n = 32
+        c = coefficient_matrix("dct", n).astype(jnp.bfloat16)
+        shape, dt = (4, n, n, n), jnp.bfloat16
+        budget = 1 << 24
+        while budget > 1 << 12:
+            plain = build_plan(shape, dt, c, c, c, fuse=True,
+                               vmem_budget=budget)
+            comp = build_plan(shape, dt, c, c, c, fuse=True,
+                              vmem_budget=budget, error_budget=1e-9)
+            if plain.fused3 is not None and comp.fused3 is None:
+                break
+            budget = int(budget / 1.05)
+        else:
+            pytest.fail("no budget band separates plain/budgeted triple")
+        assert comp.accum == "compensated"
+        kinds = [e.get("kind") for e in comp.events]
+        assert "numerics_degradation" in kinds
+        assert "fusion_degradation" in kinds
+        ev = next(e for e in comp.events
+                  if e.get("kind") == "numerics_degradation")
+        assert ev["bound_before"] > ev["bound_after"] > 0
+        assert ev["error_budget"] == 1e-9
+
+
+# ---------------------------------------------------------------------------
+# kernels: adversarial property sweep + interpret parity
+
+
+# Magnitude palette: signed zeros, bf16/f32 denormals, and ±1e±30 —
+# products stay ≤ ~1e30 so the fp32 accumulator never overflows.
+_SCALES = [0.0, -0.0, 1e-38, -1e-38, 1e-30, 1e30, -1e30, 1e-8, 1.0, -1.0]
+
+
+def _adversarial(rng, shape, dtype=jnp.bfloat16):
+    base = rng.normal(size=shape)
+    scale = rng.choice(_SCALES, size=shape)
+    return jnp.asarray(base * scale, dtype)
+
+
+def _err(y, oracle):
+    return float(np.max(np.abs(np.asarray(y, np.float64) - oracle)))
+
+
+@pytest.mark.numerics_smoke
+class TestCompensatedKernels:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000), st.sampled_from([16, 48, 96]))
+    def test_sr_gemm_compensated_no_worse_than_plain(self, seed, k):
+        rng = np.random.default_rng(seed)
+        x = _adversarial(rng, (24, k))
+        c = jnp.asarray(rng.normal(size=(k, 16)) / np.sqrt(k), jnp.bfloat16)
+        oracle = np.asarray(x, np.float64) @ np.asarray(c, np.float64)
+        e_plain = _err(sr_gemm(x, c), oracle)
+        e_comp = _err(sr_gemm(x, c, accum="compensated"), oracle)
+        assert e_comp <= e_plain * (1 + 1e-9) + 1e-30
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_esop_and_fused_compensated_no_worse(self, seed):
+        rng = np.random.default_rng(seed)
+        # block-sparse coefficient so ESOP actually skips blocks
+        c_np = rng.normal(size=(32, 32)) / np.sqrt(32)
+        c_np[:16, 16:] = 0.0
+        c = jnp.asarray(c_np, jnp.bfloat16)
+        x = _adversarial(rng, (24, 32))
+        oracle = np.asarray(x, np.float64) @ np.asarray(c, np.float64)
+        (yp, _), (yc, _) = (esop_gemm(x, c),
+                            esop_gemm(x, c, accum="compensated"))
+        assert _err(yc, oracle) <= _err(yp, oracle) * (1 + 1e-9) + 1e-30
+
+        x3 = _adversarial(rng, (8, 32, 32))
+        oracle3 = np.einsum("unm,mk,nl->ukl",
+                            np.asarray(x3, np.float64),
+                            np.asarray(c, np.float64),
+                            np.asarray(c, np.float64))
+        (yp3, _), (yc3, _) = (fused_gemt(x3, c, c),
+                              fused_gemt(x3, c, c, accum="compensated"))
+        assert _err(yc3, oracle3) <= _err(yp3, oracle3) * (1 + 1e-9) + 1e-30
+
+    def test_compensated_beats_plain_on_serving_shapes(self):
+        """On well-scaled bf16 data (the bench's N1 case) the gain is
+        large — the acceptance bar is >= 4x, dominated by skipping the
+        bf16 output downcast."""
+        rng = np.random.default_rng(7)
+        n = 32
+        x = jnp.asarray(rng.normal(size=(4, n, n, n)), jnp.bfloat16)
+        c = coefficient_matrix("dct", n).astype(jnp.bfloat16)
+        oracle = np.einsum("uijk,ia,jb,kc->uabc",
+                           *[np.asarray(a, np.float64)
+                             for a in (x, c, c, c)], optimize=True)
+        e_plain = _err(gemt3_planned(x, c, c, c), oracle)
+        e_comp = _err(gemt3_planned(x, c, c, c, accum="compensated"), oracle)
+        assert e_comp * 4.0 <= e_plain
+
+    def test_interpret_kernel_matches_reference(self):
+        """Pallas interpret-mode kernels agree with the reference path for
+        every accumulation mode (the comp-scratch kernels are the code
+        under test; off-TPU the default dispatch is the reference)."""
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(24, 32)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        for accum in ACCUM_MODES:
+            y_pal = sr_gemm(x, c, bm=8, bn=8, bk=8, use_pallas=True,
+                            accum=accum)
+            y_ref = sr_gemm(x, c, use_pallas=False, accum=accum)
+            assert y_pal.dtype == y_ref.dtype
+            np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                       atol=1e-5, rtol=1e-5)
+        x3 = jnp.asarray(rng.normal(size=(4, 16, 16)), jnp.float32)
+        c2 = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+        yp, _ = fused_gemt(x3, c2, c2, bu=8, bka=8, bnb=8, bna=8,
+                           use_pallas=True, accum="compensated")
+        yr, _ = fused_gemt(x3, c2, c2, use_pallas=False, accum="compensated")
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yr),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving: the nan chaos drill
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _server(**kw):
+    clock = FakeClock()
+    kw.setdefault("breaker_threshold", 1)
+    kw.setdefault("breaker_cooldown_s", 60.0)
+    return ResilientDxtServer(session=DxtServeSession(), clock=clock,
+                              sleep=lambda s: None, **kw), clock
+
+
+@pytest.mark.numerics_smoke
+@pytest.mark.chaos_smoke
+class TestNonfiniteRecovery:
+    def test_nan_drill_recovers_and_counters_balance(self):
+        """Silent NaN corruption on two consecutive attempts: the finite
+        guard catches both, recovery pins the ladder floor + forces
+        compensated accumulation, and the admitted request completes with
+        the fault-free result.  Exact accounting:
+        faults.injected.nan == numerics.nonfinite.detected == serve.retry.
+        """
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(2, 16, 16, 16)).astype(np.float32)
+        with obs.session("nan-drill", enable_tracing=False) as s:
+            server, _ = _server(finite_check_every=1)
+            y0 = server.transform(x)  # fault-free baseline
+            with inject_faults(FaultSpec(match="serve.request", kind="nan",
+                                         times=2)) as inj:
+                req = server.submit(x)
+                server.drain()
+            assert req.status == "done"
+            assert float(jnp.max(jnp.abs(req.result - y0))) <= ATOL
+            assert inj.specs[0].injected == 2
+            reg = s.registry
+            assert reg.value("faults.injected.nan") == 2
+            assert reg.value("numerics.nonfinite.detected") == 2
+            assert reg.value("serve.retry") == 2
+            st_ = server.stats()
+            assert st_["failed"] == 0 and st_["shed"] == 0
+            assert st_["nonfinite"] == 2
+            # recovery state is visible on the request
+            recov = [e for e in req.events
+                     if e.get("kind") == "numerics_recovery"]
+            assert len(recov) == 2
+            assert all(e["reason"] == "nonfinite_output" for e in recov)
+            assert req.force_accum == "compensated"
+            assert req.tier_floor is not None
+
+    def test_finite_guard_is_off_by_default(self):
+        """finite_check_every=0 (default): the guard never runs, a
+        poisoned result flows through as NaN — detection is opt-in
+        because the isfinite reduction is a host sync."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(2, 8, 8, 8)).astype(np.float32)
+        with obs.session("nan-off", enable_tracing=False) as s:
+            server, _ = _server()
+            with inject_faults(FaultSpec(match="serve.request", kind="nan",
+                                         times=1)):
+                y = server.transform(x)
+            assert not bool(jnp.isfinite(y).all())
+            assert s.registry.value("numerics.nonfinite.detected") == 0
+            assert s.registry.value("serve.retry") == 0
+
+    def test_sampled_guard_checks_every_nth(self):
+        """finite_check_every=2 samples: attempt seq 1 (unchecked) lets a
+        poisoned result through; the drill still balances when the check
+        lands on the poisoned attempt."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(2, 8, 8, 8)).astype(np.float32)
+        with obs.session("nan-sampled", enable_tracing=False) as s:
+            server, _ = _server(finite_check_every=2)
+            with inject_faults(FaultSpec(match="serve.request", kind="nan",
+                                         times=1)):
+                y = server.transform(x)  # seq 1: guard skipped
+            assert not bool(jnp.isfinite(y).all())
+            assert s.registry.value("numerics.nonfinite.detected") == 0
+            with inject_faults(FaultSpec(match="serve.request", kind="nan",
+                                         times=1)):
+                y2 = server.transform(x)  # seq 2: guard fires, recovers
+            assert bool(jnp.isfinite(y2).all())
+            assert s.registry.value("numerics.nonfinite.detected") == 1
+
+
+# ---------------------------------------------------------------------------
+# train: skip-nonfinite guard
+
+
+@pytest.mark.numerics_smoke
+class TestTrainGuard:
+    def _state_and_batch(self, nan_target=False):
+        dims = (8, 8, 8)
+        state = init_dxt_fit_state(dims, OptConfig(lr=1e-2),
+                                   key=jax.random.PRNGKey(0),
+                                   init_scale=0.1)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2, *dims)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(2, *dims)), jnp.float32)
+        if nan_target:
+            y = y.at[0, 0, 0, 0].set(jnp.nan)
+        return state, {"x": x, "y": y}
+
+    def test_nonfinite_update_is_skipped(self):
+        state, batch = self._state_and_batch(nan_target=True)
+        fit_step = build_dxt_fit_step(OptConfig(lr=1e-2))
+        with obs.session("train-guard", enable_tracing=False) as s:
+            new_state, metrics = fit_step(state, batch)
+            assert float(metrics["skipped_nonfinite"]) == 1.0
+            assert s.registry.value("train.nonfinite_skipped") == 1
+        for n, o in zip(jax.tree.leaves(new_state["params"]),
+                        jax.tree.leaves(state["params"])):
+            np.testing.assert_array_equal(np.asarray(n), np.asarray(o))
+
+    def test_finite_update_proceeds(self):
+        state, batch = self._state_and_batch()
+        fit_step = build_dxt_fit_step(OptConfig(lr=1e-2))
+        new_state, metrics = fit_step(state, batch)
+        assert float(metrics["skipped_nonfinite"]) == 0.0
+        changed = any(
+            not np.array_equal(np.asarray(n), np.asarray(o))
+            for n, o in zip(jax.tree.leaves(new_state["params"]),
+                            jax.tree.leaves(state["params"])))
+        assert changed
+
+    def test_guard_is_jittable(self):
+        state, batch = self._state_and_batch(nan_target=True)
+        fit_step = jax.jit(build_dxt_fit_step(OptConfig(lr=1e-2)))
+        new_state, metrics = fit_step(state, batch)
+        assert float(metrics["skipped_nonfinite"]) == 1.0
+        for n, o in zip(jax.tree.leaves(new_state["params"]),
+                        jax.tree.leaves(state["params"])):
+            np.testing.assert_array_equal(np.asarray(n), np.asarray(o))
+
+    def test_guard_can_be_disabled(self):
+        state, batch = self._state_and_batch(nan_target=True)
+        fit_step = build_dxt_fit_step(OptConfig(lr=1e-2),
+                                      skip_nonfinite=False)
+        new_state, metrics = fit_step(state, batch)
+        assert "skipped_nonfinite" not in metrics
+        assert not bool(jnp.isfinite(
+            jax.tree.leaves(new_state["params"])[0]).all())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+
+
+def _truncate_a_leaf(ckpt_dir, step):
+    d = os.path.join(str(ckpt_dir), f"step_{step:08d}")
+    leaf = next(f for f in sorted(os.listdir(d)) if f.endswith(".npy"))
+    path = os.path.join(d, leaf)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    return path
+
+
+@pytest.mark.numerics_smoke
+class TestCheckpointIntegrity:
+    def _save_two(self, tmp_path):
+        for s in (1, 2):
+            ckpt_lib.save(str(tmp_path), s,
+                          {"w": jnp.full((8, 8), float(s)),
+                           "b": jnp.full((8,), float(s))})
+
+    def test_truncated_latest_falls_back(self, tmp_path):
+        self._save_two(tmp_path)
+        _truncate_a_leaf(tmp_path, 2)
+        with obs.session("ckpt-torn", enable_tracing=False) as s:
+            tree, step = ckpt_lib.restore(str(tmp_path))
+            assert step == 1
+            np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                          np.ones((8, 8)))
+            assert s.registry.value("ckpt.restore.corrupt_recovered") == 1
+
+    def test_explicit_step_raises(self, tmp_path):
+        self._save_two(tmp_path)
+        _truncate_a_leaf(tmp_path, 2)
+        with pytest.raises(CorruptCheckpoint):
+            ckpt_lib.restore(str(tmp_path), step=2)
+        # the older step is still individually restorable
+        tree, step = ckpt_lib.restore(str(tmp_path), step=1)
+        assert step == 1
+
+    def test_all_corrupt_raises(self, tmp_path):
+        self._save_two(tmp_path)
+        _truncate_a_leaf(tmp_path, 1)
+        _truncate_a_leaf(tmp_path, 2)
+        with pytest.raises(CorruptCheckpoint):
+            ckpt_lib.restore(str(tmp_path))
+
+    def test_pre_checksum_manifest_loads_unverified(self, tmp_path):
+        """Manifests written before the sha256 field restore fine
+        (back-compat): verification is skipped, not failed."""
+        ckpt_lib.save(str(tmp_path), 3, {"w": jnp.ones((4,))})
+        mpath = os.path.join(str(tmp_path), "step_00000003", "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for meta in manifest["leaves"].values():
+            meta.pop("sha256")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        tree, step = ckpt_lib.restore(str(tmp_path))
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(tree["w"]), np.ones((4,)))
