@@ -1,0 +1,112 @@
+"""S2: steady-state serving throughput — warmup, coalescing, pipelining.
+
+The same request stream (tiny single-item S-series batches, where host
+dispatch overhead dominates device work) is served twice by a
+:class:`ResilientDxtServer`:
+
+* **serial** — the historical one-request-at-a-time drain
+  (``max_coalesce=1``, ``pipeline_depth=1``);
+* **coalesced** — bucket-coalesced launches with double-buffered dispatch
+  (``max_coalesce=8``, ``pipeline_depth=2``).
+
+Both servers are warmed first (:meth:`ResilientDxtServer.warmup` over the
+request bucket), so the steady-state phase must pay **zero** plan builds
+and autotune probes — the row records the steady-state ``plan*`` /
+``autotune*`` span counts as deterministic keys to pin that down, next to
+the banded throughput keys (requests/sec, queue-inclusive p99 latency,
+and attainment against the serial run's p99 as the SLO).  ``max_abs_err``
+is the worst deviation of any coalesced result from its serial
+counterpart — de-stacking must be numerically invisible.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.serve import ResilientDxtServer
+
+_N = 16  # S-series transform dims (N, N, N)
+_REQUESTS = 32
+_MAX_COALESCE = 8
+
+
+def _percentile(vals, q):
+    vals = sorted(vals)
+    idx = int(round(q / 100.0 * (len(vals) - 1)))
+    return vals[min(max(idx, 0), len(vals) - 1)]
+
+
+def _serve(reqs, *, coalesce: bool, cache_path: str):
+    """Warm a server, serve the stream, return (requests, stats, spans)."""
+    with obs.session(name="bench-serve-throughput",
+                     enable_tracing=True) as s:
+        server = ResilientDxtServer(
+            kind="dct", autotune=True, autotune_cache=cache_path,
+            max_coalesce=_MAX_COALESCE if coalesce else 1,
+            coalesce_window_s=60.0 if coalesce else 0.0,
+            pipeline_depth=2 if coalesce else 1)
+        server.warmup([(_MAX_COALESCE, _N, _N, _N)])
+        n_warm = len(s.tracer.spans())
+        t0 = time.perf_counter()
+        rs = [server.submit(r) for r in reqs]
+        server.drain()
+        jax.block_until_ready([r.result for r in rs])
+        wall_s = time.perf_counter() - t0
+        steady = [sp.name for sp in s.tracer.spans()[n_warm:]]
+        return rs, server.stats(), steady, wall_s
+
+
+def bench_serve_throughput(rows):
+    rng = np.random.default_rng(29)
+    reqs = [jnp.asarray(rng.normal(size=(1, _N, _N, _N)).astype(np.float32))
+            for _ in range(_REQUESTS)]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = os.path.join(tmp, "autotune.json")
+        ser_rs, ser_st, ser_spans, ser_wall = _serve(
+            reqs, coalesce=False, cache_path=cache)
+        co_rs, co_st, co_spans, co_wall = _serve(
+            reqs, coalesce=True, cache_path=cache)
+
+    err = max(float(jnp.max(jnp.abs(a.result - b.result)))
+              for a, b in zip(co_rs, ser_rs))
+    # Queue-inclusive per-request latency (submit -> finish, server clock);
+    # the serial run's p99 is the SLO the coalesced run is held to.
+    ser_lat = [(r.finished_at - r.submitted_at) * 1e6 for r in ser_rs]
+    co_lat = [(r.finished_at - r.submitted_at) * 1e6 for r in co_rs]
+    slo_us = _percentile(ser_lat, 99)
+    attain = sum(1 for v in co_lat if v <= slo_us) / len(co_lat)
+    rps_serial = _REQUESTS / max(ser_wall, 1e-9)
+    rps_coalesced = _REQUESTS / max(co_wall, 1e-9)
+
+    def _steady(spans):
+        return sum(1 for n in spans
+                   if n == "plan" or n.startswith("autotune"))
+
+    rows.append((
+        "S2_serve_throughput_coalesced", co_wall / _REQUESTS * 1e6,
+        f"serial_per_req_us={ser_wall / _REQUESTS * 1e6:.1f};"
+        f"rps_serial={rps_serial:.1f};"
+        f"rps_coalesced={rps_coalesced:.1f};"
+        f"coalesced_vs_serial_speedup={rps_coalesced / rps_serial:.2f}x;"
+        f"serial_p99_us={_percentile(ser_lat, 99):.1f};"
+        f"coalesced_p99_us={_percentile(co_lat, 99):.1f};"
+        f"slo_us={slo_us:.1f};"
+        f"slo_attainment_coalesced={attain:.2f};"
+        f"requests={_REQUESTS};"
+        f"admitted={co_st['admitted']};"
+        f"completed={co_st['completed']};"
+        f"failed={co_st['failed']};"
+        f"retries={co_st['retries']};"
+        f"batches={co_st['batches']};"
+        f"coalesced={co_st['coalesced']};"
+        f"plan_spans_steady_serial={_steady(ser_spans)};"
+        f"plan_spans_steady_coalesced={_steady(co_spans)};"
+        f"warmed_buckets={len(ser_st['session']['warmed'])};"
+        f"max_abs_err={err:.1e}"))

@@ -25,7 +25,7 @@ import sys
 
 def _benches():
     from . import (bench_core, bench_distributed, bench_engine, bench_kernels,
-                   bench_numerics, bench_roofline)
+                   bench_numerics, bench_roofline, bench_serve_throughput)
 
     return [
         bench_core.bench_linear_timesteps,
@@ -48,6 +48,7 @@ def _benches():
         bench_engine.bench_fused3_gemt,
         bench_engine.bench_grad_engine,
         bench_engine.bench_serve_resilience,
+        bench_serve_throughput.bench_serve_throughput,
         bench_numerics.bench_compensated_accum,
     ]
 
@@ -68,13 +69,16 @@ _ROW_PREFIXES = {
     "E3": "bench_planned_vs_einsum", "E4": "bench_autotune_cache",
     "F1": "bench_fused_gemt", "F2": "bench_fused3_gemt",
     "G1": "bench_grad_engine",
-    "S1": "bench_serve_resilience",
+    "S1": "bench_serve_resilience", "S2": "bench_serve_throughput",
     "N1": "bench_compensated_accum",
 }
 
 # Derived keys whose values are wall-clock measurements (or booleans derived
-# from them): compared under the --tol-time band, never exactly.
-_NOISY_MARKERS = ("_us", "us_", "speedup", "wallclock", "no_worse", "warm")
+# from them): compared under the --tol-time band, never exactly.  Queueing-
+# sensitive serving keys (requests/sec, SLO attainment) live here too — a
+# loaded CI host shifts them without any code regression.
+_NOISY_MARKERS = ("_us", "us_", "speedup", "wallclock", "no_worse", "warm",
+                  "rps", "slo")
 
 # Counter-snapshot keys that legitimately vary between the recording run and
 # a fresh check (process-warm plan/memo/autotune caches shift hit/miss/build
@@ -84,7 +88,7 @@ _NOISY_MARKERS = ("_us", "us_", "speedup", "wallclock", "no_worse", "warm")
 _CACHE_COUNTER_MARKERS = ("hit", "miss", "evict", "load", "write", "build",
                           "degradation", "probe")
 _TIMING_COUNTER_MARKERS = ("_us", "latency", ".mean", ".p50", ".p90", ".p99",
-                           ".max", ".min")
+                           ".max", ".min", ".sum")
 
 
 def _parse_derived(derived: str) -> dict[str, str]:

@@ -101,6 +101,13 @@ def make_fused3_key(u: int, na: int, ka: int, nb: int, kb: int,
             f"|{jnp.dtype(dtype).name}|{role}|{accum}|{sig}|vb{vmem_budget}")
 
 
+# Key prefixes the current key builders emit.  Anything else in a loaded
+# cache file is an orphan from an earlier key version (the v3/v4/v5 bumps
+# that added the adjoint role and the accumulation mode) — those entries
+# can never be hit again and only bloat the file, so load() prunes them.
+_LIVE_KEY_PREFIXES = ("v4:", "fused:v5:", "fused3:v4:")
+
+
 class AutotuneCache:
     """JSON-backed ``key -> {bm, bn, bk, us}`` store."""
 
@@ -130,7 +137,25 @@ class AutotuneCache:
             self._entries = {}
             _metrics.inc("autotune.cache.corrupt_recovered")
             return
+        self.prune()
         _metrics.inc("autotune.cache.loads")
+
+    def prune(self) -> int:
+        """Drop entries whose key no longer matches a live key version.
+
+        The v3/v4/v5 key bumps (adjoint role, accumulation mode) orphaned
+        every entry written under the old scheme — they are unreachable by
+        ``get`` yet were re-persisted on every ``save``, growing the file
+        forever.  Runs on every ``load``; counted in
+        ``autotune.cache.pruned``.  Returns how many entries fell.
+        """
+        stale = [k for k in self._entries
+                 if not k.startswith(_LIVE_KEY_PREFIXES)]
+        for k in stale:
+            del self._entries[k]
+        if stale:
+            _metrics.inc("autotune.cache.pruned", len(stale))
+        return len(stale)
 
     def save(self) -> None:
         """Atomically persist: write a *uniquely named* temp file in the

@@ -672,6 +672,24 @@ def _match_cotangent(t: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
     return t.astype(like.dtype)
 
 
+def _rebatched_plan(plan: GemtPlan, batch: int, isz: int) -> GemtPlan:
+    """Re-evaluate a plan's byte model for a different batch size.
+
+    Stage schedules are batch-independent (``StagePlan.rows`` excludes the
+    batch axis; the executors fold the actual batch in at dispatch), so a
+    plan built for one batch size executes correctly for any other — only
+    the modeled ``hbm_bytes_*`` totals scale with the batch.  The serving
+    layer's batched-entry reuse (``DxtServeSession.warmup``) plans once
+    per *bucket* and rescales here, so coalesced launches of varying size
+    never rebuild a plan.
+    """
+    return dataclasses.replace(
+        plan,
+        hbm_bytes_staged=plan_hbm_bytes(plan.stages, None, batch, isz),
+        hbm_bytes_moved=plan_hbm_bytes(plan.stages, plan.fused, batch, isz,
+                                       fused3=plan.fused3))
+
+
 def _tuned_plan(plan: GemtPlan, cs: dict[int, jnp.ndarray], batch: int,
                 autotune_cache, use_pallas, vmem_budget: int,
                 x_dtype) -> GemtPlan:
@@ -1459,6 +1477,7 @@ def gemt3_planned(
     mesh=None,
     axes=None,
     batch_axis=None,
+    batch_bucket: int | None = None,
 ):
     """Planned three-mode GEMT ẍ = X ×₁C1 ×₂C2 ×₃C3 (+ out).
 
@@ -1499,6 +1518,16 @@ def gemt3_planned(
     planning to dense sr_gemm/einsum backends and skip autotuning — zero
     structure is unreadable from a tracer.
 
+    ``batch_bucket`` (single-device, 4-D inputs) plans and autotunes as if
+    the leading batch axis had the bucket's size: stage schedules are
+    batch-independent, so every batch size that maps to the same bucket
+    reuses one plan-cache entry and one tuned variant, and only the byte
+    model is re-evaluated for the actual batch.  This is the engine half
+    of the serving layer's shape-bucketed warmup + request coalescing
+    (``docs/serving.md``, "Throughput") — a warmed bucket's coalesced
+    launches pay zero plan/probe work regardless of how many requests were
+    stacked.
+
     ``differentiable=True`` wraps the execution in the engine's custom VJP
     (docs/engine.md, "Differentiation"): ``jax.grad``/``jax.vjp`` then
     lower the backward pass *through the engine* — the X-cotangent as the
@@ -1510,17 +1539,30 @@ def gemt3_planned(
     """
     if mesh is not None and axes is None:
         axes = default_mode_axes(mesh, batch_axis)
-    plan = plan_gemt3(x.shape, x.dtype, c1, c2, c3, order=order,
+    # Batched-entry plan reuse: ``batch_bucket`` plans (and tunes) as if the
+    # batch were the bucket size, so coalesced launches of varying batch
+    # share one plan-cache entry — the serving layer's warmed buckets
+    # (docs/serving.md, "Throughput").  Single-device only: under a mesh
+    # the per-shard batch is part of the schedule.
+    plan_shape = tuple(x.shape)
+    if (batch_bucket is not None and mesh is None and x.ndim == 4
+            and int(batch_bucket) != int(x.shape[0])):
+        plan_shape = (int(batch_bucket),) + tuple(x.shape[1:])
+    plan = plan_gemt3(plan_shape, x.dtype, c1, c2, c3, order=order,
                       esop_threshold=esop_threshold, block_sizes=block_sizes,
                       fuse=fuse, vmem_budget=vmem_budget, backend=backend,
                       accum=accum, error_budget=error_budget,
                       mesh=mesh, axes=axes, batch_axis=batch_axis)
     if autotune and not _is_traced(c1, c2, c3):
-        # Per-shard batch: the tuned tiles must see the local GEMM rows.
-        batch = ((int(x.shape[0]) if x.ndim == 4 else 1)
+        # Per-shard batch: the tuned tiles must see the local GEMM rows
+        # (the bucket batch when bucketed, so tuned variants are shared).
+        batch = ((plan_shape[0] if len(plan_shape) == 4 else 1)
                  // max(plan.batch_shards, 1))
         plan = _tuned_plan(plan, {1: c1, 2: c2, 3: c3}, batch,
                            autotune_cache, use_pallas, vmem_budget, x.dtype)
+    if plan_shape != tuple(x.shape):
+        plan = _rebatched_plan(plan, int(x.shape[0]),
+                               jnp.dtype(x.dtype).itemsize)
     if differentiable:
         y, info = _execute_differentiable(
             plan, mesh, x, c1, c2, c3, use_pallas=use_pallas,

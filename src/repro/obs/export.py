@@ -8,6 +8,12 @@ structured attributes plus ``span_id``/``parent_id``.  Load the file in
 part of the Chrome schema; both viewers ignore unknown keys) embeds the
 metrics-registry snapshot taken at export time.
 
+The snapshot schema is *additive-only*: histogram stats may gain keys
+(``.sum`` joined ``.count/.mean/.p50/.p90/.p99/.max``) but existing keys
+keep their meaning, so traces and BENCH artifacts recorded under an older
+schema still load and compare — ``benchmarks/run.py`` iterates the
+recorded keys and never requires the fresh snapshot to be key-identical.
+
 ``python -m repro.obs TRACE.json [--json]`` prints a per-span-name
 aggregate report (count / total / mean µs) of a saved trace.
 """

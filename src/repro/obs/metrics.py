@@ -97,10 +97,14 @@ class Histogram:
 
     def summary(self) -> dict:
         if not self.count:
-            return {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
-                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
+            return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                    "max": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
         return {
             "count": self.count,
+            # exact running total (not window-bounded): throughput math
+            # (requests / sum-of-latency) no longer estimates from
+            # count x p50
+            "sum": self.total,
             "mean": self.total / self.count,
             "min": self.min,
             "max": self.max,
@@ -163,8 +167,11 @@ class MetricsRegistry:
 
     def snapshot(self) -> dict:
         """Flat ``{name: number}`` view: counters and gauges verbatim,
-        histograms expanded to ``name.count`` / ``.mean`` / ``.p50`` /
-        ``.p90`` / ``.p99`` / ``.max`` entries."""
+        histograms expanded to ``name.count`` / ``.sum`` / ``.mean`` /
+        ``.p50`` / ``.p90`` / ``.p99`` / ``.max`` entries.  The ``.sum``
+        stat is additive over the historical schema — consumers comparing
+        recorded snapshots (``benchmarks/run.py``) iterate the *recorded*
+        keys, so artifacts written before it appeared still check clean."""
         out: dict = {}
         for name, c in sorted(self._counters.items()):
             out[name] = c.value
@@ -172,7 +179,7 @@ class MetricsRegistry:
             out[name] = g.value
         for name, h in sorted(self._histograms.items()):
             s = h.summary()
-            for stat in ("count", "mean", "p50", "p90", "p99", "max"):
+            for stat in ("count", "sum", "mean", "p50", "p90", "p99", "max"):
                 out[f"{name}.{stat}"] = s[stat]
         return out
 

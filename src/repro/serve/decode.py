@@ -112,9 +112,15 @@ class DxtServeSession:
     backend: str | None = None  # pin every stage ("einsum"); None = auto
     accum: str | None = None  # accumulation mode (engine.numerics)
     error_budget: float | None = None  # a-priori rounding-bound ceiling
+    # Plan-key batch bucketing: round the leading batch axis up to the next
+    # power of two when keying the engine's plan cache, so coalesced
+    # launches of varying size reuse one plan per bucket.  Off by default
+    # (exact-shape keys, the historical behaviour); warmup() turns it on.
+    bucket_batches: bool = False
 
     def __post_init__(self):
         self._coeffs: dict[tuple, tuple] = {}
+        self.warmed: list[dict] = []  # bucket records from warmup()
         self.requests_served = 0
         self.fused_served = 0  # requests that ran any fused kernel
         self.fused3_served = 0  # … of those, the whole-transform megakernel
@@ -159,6 +165,157 @@ class DxtServeSession:
         if batch_axis is not _UNSET:
             self.batch_axis = batch_axis
         return dropped
+
+    # -- warmup / bucketing ------------------------------------------------
+
+    _KNOB_NAMES = ("fuse", "use_pallas", "vmem_budget", "backend", "accum",
+                   "error_budget")
+
+    def _resolve_knobs(self, fuse=_UNSET, use_pallas=_UNSET,
+                       vmem_budget=_UNSET, backend=_UNSET, accum=_UNSET,
+                       error_budget=_UNSET) -> dict:
+        """Per-request knobs resolved against the session defaults."""
+        from ..engine import DEFAULT_VMEM_BUDGET
+
+        if vmem_budget is _UNSET:
+            vmem_budget = self.vmem_budget
+        if vmem_budget is None:
+            vmem_budget = DEFAULT_VMEM_BUDGET
+        return {
+            "fuse": self.fuse if fuse is _UNSET else fuse,
+            "use_pallas": (self.use_pallas if use_pallas is _UNSET
+                           else use_pallas),
+            "backend": self.backend if backend is _UNSET else backend,
+            "accum": self.accum if accum is _UNSET else accum,
+            "error_budget": (self.error_budget if error_budget is _UNSET
+                             else error_budget),
+            "vmem_budget": vmem_budget,
+        }
+
+    @staticmethod
+    def _pow2_bucket(b) -> int:
+        """Smallest power of two >= ``b`` — the plan-key batch bucket."""
+        return 1 << max(int(b) - 1, 0).bit_length()
+
+    def _batch_bucket(self, batch: int) -> int | None:
+        """Plan-cache batch bucket for a live request (None = exact keys).
+
+        Bucketing applies only on a single device — under a mesh the
+        per-shard batch is part of the distributed schedule, so those
+        plans stay exact-shape."""
+        if not self.bucket_batches or self.mesh is not None:
+            return None
+        return self._pow2_bucket(batch)
+
+    def _warmup_spec(self, cfg, inverse, dtype, overrides: dict) -> dict:
+        """Normalize one warmup entry (shape tuple or config dict) into
+        ``{dims, batch, dtype, inverse, knobs}``."""
+        per: dict = {}
+        if isinstance(cfg, dict):
+            cfg = dict(cfg)
+            shape = tuple(cfg.pop("dims", None) or cfg.pop("shape"))
+            batch = int(cfg.pop("batch", 0))
+            dtype = cfg.pop("dtype", dtype)
+            inverse = cfg.pop("inverse", inverse)
+            unknown = sorted(set(cfg) - set(self._KNOB_NAMES))
+            if unknown:
+                raise ValueError(f"unknown warmup config keys {unknown} "
+                                 f"(knobs: {self._KNOB_NAMES})")
+            per = cfg
+        else:
+            shape = tuple(int(d) for d in cfg)
+            batch = 0
+        if len(shape) == 4:
+            batch, shape = (batch or int(shape[0])), shape[1:]
+        if len(shape) != 3:
+            raise ValueError(
+                f"warmup shape must be (N1, N2, N3) or (B, N1, N2, N3), "
+                f"got {shape}")
+        knobs = {k: overrides.get(k, _UNSET) for k in self._KNOB_NAMES}
+        for k, v in per.items():
+            knobs[k] = v
+        return {
+            "dims": tuple(int(d) for d in shape),
+            "batch": max(int(batch), 1),
+            "dtype": jnp.dtype(dtype or jnp.float32),
+            "inverse": (self.inverse if inverse is None else bool(inverse)),
+            "knobs": self._resolve_knobs(**knobs),
+        }
+
+    def warmup(self, shapes, *, inverse: bool | None = None,
+               adjoint: bool = True, dtype=None, **overrides) -> list[dict]:
+        """Pre-build plans, adjoint plans and autotune entries per bucket.
+
+        ``shapes`` is an iterable of ``(N1, N2, N3)`` / ``(B, N1, N2, N3)``
+        tuples or config dicts (``{"dims"|"shape", "batch", "dtype",
+        "inverse"}`` plus any per-request knob — ``fuse``/``use_pallas``/
+        ``vmem_budget``/``backend``/``accum``/``error_budget``).  Each
+        entry describes a *(dims, dtype, fuse, accum)* bucket; keyword
+        ``overrides`` apply to every entry (a per-entry knob wins).
+
+        For each bucket every power-of-two batch up to the entry's batch
+        is warmed — one dummy ``gemt3_planned`` call per sub-bucket builds
+        the plan, runs autotuning (when the session tunes), and compiles
+        the kernels; ``adjoint=True`` additionally pulls a VJP through the
+        differentiable engine so the adjoint/chain plans and their
+        autotune role are warm too (skipped for complex-coefficient kinds
+        — the adjoint kernels are real-valued).  Warmup also flips
+        ``bucket_batches`` on, so steady-state requests key the plan cache
+        by the same power-of-two buckets: a warmed session pays **zero**
+        ``plan`` / ``autotune.probe`` spans for any batch size that lands
+        in a warmed bucket — in particular every coalesced batch the
+        server can assemble under ``max_coalesce <= B``.
+
+        Warmup work is counted in ``serve.warmup`` (one per sub-bucket,
+        under a ``serve.warmup`` span) and deliberately does **not** touch
+        the served-request telemetry (``serve.requests``, latency
+        histogram, byte counters).  Returns one record per entry.
+        """
+        import jax
+
+        from ..engine import gemt3_planned
+
+        done = []
+        for cfg in shapes:
+            spec = self._warmup_spec(cfg, inverse, dtype, overrides)
+            c1, c2, c3 = self._coeffs_for(spec["dims"], spec["inverse"])
+            self.bucket_batches = True
+            buckets, bb = [], 1
+            while bb <= self._pow2_bucket(spec["batch"]):
+                buckets.append(bb)
+                bb *= 2
+            for bb in buckets:
+                sp = _trace.NULL_SPAN
+                if _trace.enabled():
+                    sp = _trace.span("serve.warmup",
+                                     {"kind": self.kind,
+                                      "dims": spec["dims"], "batch": bb,
+                                      "dtype": spec["dtype"].name,
+                                      "inverse": spec["inverse"]})
+                with sp:
+                    x0 = jnp.zeros((bb,) + spec["dims"], spec["dtype"])
+                    if jnp.iscomplexobj(c1) and not jnp.iscomplexobj(x0):
+                        x0 = x0.astype(c1.dtype)
+                    kw = dict(spec["knobs"], autotune=self.autotune,
+                              autotune_cache=self.autotune_cache,
+                              mesh=self.mesh, axes=self.axes,
+                              batch_axis=self.batch_axis, batch_bucket=bb)
+                    y = gemt3_planned(x0, c1, c2, c3, **kw)
+                    if adjoint and not jnp.iscomplexobj(c1):
+                        yv, vjp = jax.vjp(
+                            lambda t: gemt3_planned(t, c1, c2, c3,
+                                                    differentiable=True,
+                                                    **kw), x0)
+                        jax.block_until_ready(vjp(yv))
+                    jax.block_until_ready(y)
+                _metrics.inc("serve.warmup")
+            rec = {"dims": spec["dims"], "dtype": spec["dtype"].name,
+                   "inverse": spec["inverse"], "buckets": tuple(buckets),
+                   "fuse": spec["knobs"]["fuse"],
+                   "accum": spec["knobs"]["accum"]}
+            self.warmed.append(rec)
+            done.append(rec)
+        return done
 
     def transform(self, batch, inverse: bool | None = None, *,
                   fuse=_UNSET, use_pallas=_UNSET, vmem_budget=_UNSET,
@@ -220,7 +377,9 @@ class DxtServeSession:
                                     use_pallas=use_pallas,
                                     with_info=True, mesh=self.mesh,
                                     axes=self.axes,
-                                    batch_axis=self.batch_axis)
+                                    batch_axis=self.batch_axis,
+                                    batch_bucket=self._batch_bucket(
+                                        int(x.shape[0])))
         self._latency_us.record((time.perf_counter_ns() - t0) / 1e3)
         _metrics.inc("serve.requests")
         self.requests_served += int(x.shape[0])
@@ -247,6 +406,8 @@ class DxtServeSession:
             "hbm_bytes_staged": self.hbm_bytes_staged,
             "collective_bytes": self.collective_bytes,
             "latency_us": self._latency_us.summary(),
+            "warmed": list(self.warmed),
+            "bucket_batches": self.bucket_batches,
         }
 
 

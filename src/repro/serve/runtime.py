@@ -69,6 +69,34 @@ its last error after the retry budget/deadline is exhausted — it is never
 silently dropped.  Chaos drills script faults with
 :mod:`repro.runtime.faults` and balance the ``serve.*`` counters against
 ``faults.injected.*``.
+
+**Throughput mode** (``docs/serving.md``, "Throughput") is opt-in and
+layers three mechanisms on the same lifecycle:
+
+* **request coalescing** — ``max_coalesce > 1`` stacks queued requests
+  that share a *bucket* (trailing dims, dtype, direction, per-request
+  overrides) and were submitted within ``coalesce_window_s`` of the
+  bucket head into one batched launch, de-stacked per caller afterwards
+  (``serve.coalesced`` counts the stacked requests, ``serve.batch``
+  spans the launch).  A request with a different override set simply
+  lands in its own bucket — it splits the batch, it never poisons it;
+* **double-buffered dispatch** — ``pipeline_depth=2`` keeps two batches
+  in flight using JAX async dispatch: batch *n+1* is assembled (with
+  donated input buffers where the backend supports donation) and
+  dispatched while batch *n*'s results are still being synced, so host
+  assembly and HBM transfer overlap device compute;
+* **shape-bucketed warmup** — :meth:`warmup` delegates to
+  :meth:`DxtServeSession.warmup` per ladder tier so steady-state
+  requests (and every coalesced batch size) hit pre-built, pre-tuned,
+  pre-compiled plans.
+
+Failure semantics are preserved per *sub-request*: a fault that corrupts
+a batched launch re-enqueues only the failing members (one
+``serve.retry`` each — the ``faults.injected.* == serve.retry`` drill
+identities keep balancing), a deadline that expires while a request sits
+queued sheds it before any launch is paid, and with the defaults
+(``max_coalesce=1``, ``pipeline_depth=1``) the runtime runs the exact
+historical one-request-at-a-time path.
 """
 from __future__ import annotations
 
@@ -82,7 +110,7 @@ from ..engine.numerics import NonfiniteOutput, finite_guard
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from ..runtime.faults import DeviceLoss, VmemPressure, consume_nan_poison
-from .decode import DxtServeSession
+from .decode import _UNSET, DxtServeSession
 
 __all__ = [
     "LADDER_TIERS",
@@ -196,6 +224,14 @@ class Request:
     # tier's successor) and a forced accumulation mode for retries.
     tier_floor: str | None = None
     force_accum: str | None = None
+    # Throughput-mode fields: submit/finish timestamps (server clock, for
+    # queue-inclusive latency), the per-request knob overrides that define
+    # the request's coalescing bucket, and how many requests shared the
+    # launch that produced the result (1 = solo).
+    submitted_at: float = 0.0
+    finished_at: float | None = None
+    overrides: dict = dataclasses.field(default_factory=dict)
+    coalesced: int = 1
 
 
 class ResilientDxtServer:
@@ -219,6 +255,10 @@ class ResilientDxtServer:
                  vmem_shrink: float = 0.5,
                  min_vmem_budget: int = 1 << 18,
                  finite_check_every: int = 0,
+                 max_coalesce: int = 1,
+                 coalesce_window_s: float = 0.0,
+                 pipeline_depth: int = 1,
+                 donate_inputs: bool = True,
                  devices=None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
@@ -230,6 +270,14 @@ class ResilientDxtServer:
         self.default_deadline_s = default_deadline_s
         self.attempt_timeout_s = attempt_timeout_s
         self.retry = retry or RetryPolicy()
+        # Throughput knobs: >1 turns on batched draining (coalescing /
+        # double-buffered dispatch); the defaults keep the historical
+        # strictly-serial per-request path.
+        self.max_coalesce = int(max_coalesce)
+        self.coalesce_window_s = float(coalesce_window_s)
+        self.pipeline_depth = int(pipeline_depth)
+        self.donate_inputs = bool(donate_inputs)
+        self._concat_fns: dict = {}  # arity -> jitted donating concat
         self.vmem_shrink = float(vmem_shrink)
         self.min_vmem_budget = int(min_vmem_budget)
         # 0 = finite-guard off; N > 0 checks every N-th attempt for
@@ -251,40 +299,71 @@ class ResilientDxtServer:
         self.counts = {k: 0 for k in
                        ("admitted", "completed", "failed", "shed", "retries",
                         "timeouts", "degraded", "remeshes", "recovered",
-                        "deadline_exceeded", "nonfinite")}
+                        "deadline_exceeded", "nonfinite", "coalesced",
+                        "batches")}
 
     # -- admission ---------------------------------------------------------
 
     def submit(self, batch, inverse: bool | None = None,
-               deadline_s: float | None = None) -> Request | None:
+               deadline_s: float | None = None, *,
+               fuse=_UNSET, use_pallas=_UNSET, backend=_UNSET,
+               vmem_budget=_UNSET, accum=_UNSET,
+               error_budget=_UNSET) -> Request | None:
         """Admit a request, or shed it (returns None) when the queue is
-        full — mirroring ``SlotManager.admit``'s admit-on-free contract."""
+        full — mirroring ``SlotManager.admit``'s admit-on-free contract.
+
+        The keyword-only engine knobs are per-request overrides (same
+        meaning as :meth:`DxtServeSession.transform`).  They become part
+        of the request's coalescing bucket: requests with different
+        override sets are never stacked into one launch — an override
+        splits the batch rather than changing how everyone else runs.
+        """
         if len(self._queue) >= self.max_queue:
             self._count("shed")
             return None
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         deadline = None if deadline_s is None else self._clock() + deadline_s
+        overrides = {k: v for k, v in (("fuse", fuse),
+                                       ("use_pallas", use_pallas),
+                                       ("backend", backend),
+                                       ("vmem_budget", vmem_budget),
+                                       ("accum", accum),
+                                       ("error_budget", error_budget))
+                     if v is not _UNSET}
         req = Request(id=self._next_id, batch=batch, inverse=inverse,
-                      deadline=deadline)
+                      deadline=deadline, submitted_at=self._clock(),
+                      overrides=overrides)
         self._next_id += 1
         self._queue.append(req)
         self._count("admitted")
+        _metrics.set_gauge("serve.queue_depth", len(self._queue))
         return req
 
     def drain(self) -> list[Request]:
-        """Process every queued request in admission order."""
+        """Process every queued request in admission order.
+
+        With the default ``max_coalesce=1`` / ``pipeline_depth=1`` this is
+        the historical strictly-serial path; either knob above 1 switches
+        to the batched drain (coalesced launches, up to ``pipeline_depth``
+        batches in flight)."""
+        if self.max_coalesce > 1 or self.pipeline_depth > 1:
+            return self._drain_batched()
         done = []
         while self._queue:
-            done.append(self._process(self._queue.popleft()))
+            req = self._queue.popleft()
+            _metrics.set_gauge("serve.queue_depth", len(self._queue))
+            done.append(self._process(req))
         return done
 
     def transform(self, batch, inverse: bool | None = None, *,
-                  deadline_s: float | None = None):
+                  deadline_s: float | None = None, **overrides):
         """Submit-and-drain convenience: returns the transformed batch or
         raises (:class:`Overloaded`, :class:`DeadlineExceeded`, or the
-        request's final error)."""
-        req = self.submit(batch, inverse=inverse, deadline_s=deadline_s)
+        request's final error).  ``overrides`` are :meth:`submit`'s
+        per-request engine knobs."""
+        req = self.submit(batch, inverse=inverse, deadline_s=deadline_s,
+                          **overrides)
         if req is None:
             raise Overloaded(
                 f"admission queue full ({self.max_queue} requests)")
@@ -292,6 +371,38 @@ class ResilientDxtServer:
         if req.status != "done":
             raise req.error
         return req.result
+
+    def warmup(self, shapes, *, tiers=("auto",), **kwargs) -> list[dict]:
+        """Pre-build plans/tunings/kernels for the given shape buckets —
+        :meth:`DxtServeSession.warmup` run once per requested ladder tier
+        (each tier's knobs become warmup overrides), so a degraded server
+        replans into warm caches too.  When the server coalesces, the
+        batch-assembly programs (member concat, per-member de-stack
+        slices) are warmed for every bucket as well — the first real
+        coalesced launch then pays zero host-side compiles.  ``kwargs``
+        pass through to the session (``inverse``/``adjoint``/``dtype`` +
+        engine knobs)."""
+        import jax
+        import jax.numpy as jnp
+
+        done = []
+        for tier in tiers:
+            if tier not in _TIER_KNOBS:
+                raise ValueError(
+                    f"unknown tier {tier!r} (tiers: {LADDER_TIERS})")
+            done.extend(
+                self.session.warmup(shapes, **{**_TIER_KNOBS[tier],
+                                               **kwargs}))
+        if self.max_coalesce > 1 or self.pipeline_depth > 1:
+            for rec in done:
+                dims, dtype = rec["dims"], rec["dtype"]
+                for bb in rec["buckets"]:
+                    if bb < 2:
+                        continue
+                    x0 = jnp.zeros((1,) + tuple(dims), dtype)
+                    y = self._assemble([x0] * bb)
+                    jax.block_until_ready([y[i: i + 1] for i in range(bb)])
+        return done
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -357,7 +468,9 @@ class ResilientDxtServer:
             sp = _trace.Span(_trace.get_tracer(), "serve.lifecycle",
                              {"request": req.id})
         with sp:
-            return self._process_inner(req)
+            req = self._process_inner(req)
+        req.finished_at = self._clock()
+        return req
 
     def _process_inner(self, req: Request) -> Request:
         prev_tier = None
@@ -449,6 +562,280 @@ class ResilientDxtServer:
             self._count("retries")
             self._sleep(self.retry.delay(req.attempts, req.id))
 
+    # -- batched drain: coalescing + double-buffered dispatch --------------
+
+    def _bucket_key(self, req: Request):
+        """Coalescing bucket: trailing dims + dtype + direction + the
+        per-request override set (+ any nonfinite-recovery pins, so a
+        recovering request never drags a clean batch to its floor).
+        None = never co-batch (malformed inputs run — and fail — alone)."""
+        import numpy as np
+
+        shape = np.shape(req.batch)
+        if len(shape) != 4:
+            return None
+        inv = self.session.inverse if req.inverse is None else bool(
+            req.inverse)
+        return (tuple(shape[1:]), str(getattr(req.batch, "dtype", "")), inv,
+                tuple(sorted(req.overrides.items())), req.tier_floor,
+                req.force_accum)
+
+    def _expired(self, req: Request, done: list, *, queued: bool) -> bool:
+        """Fail ``req`` with DeadlineExceeded if its deadline has passed
+        (before paying a launch when ``queued``); True = it was shed."""
+        if req.deadline is None or self._clock() < req.deadline:
+            return False
+        req.status = "failed"
+        req.error = DeadlineExceeded(
+            f"request {req.id} deadline expired "
+            + ("while queued (shed before launch)" if queued
+               else f"after {req.attempts} attempts"))
+        if queued:
+            req.events.append({"kind": "queued_shed",
+                               "reason": "deadline_exceeded",
+                               "request": req.id})
+        req.finished_at = self._clock()
+        self._count("deadline_exceeded")
+        self._count("failed")
+        done.append(req)
+        return True
+
+    def _next_group(self, done: list) -> list[Request]:
+        """Pop the queue head and every queued request in its bucket that
+        was submitted within ``coalesce_window_s`` of it (admission order,
+        up to ``max_coalesce``); expired members shed before launch."""
+        head = self._queue.popleft()
+        group = [head]
+        key = self._bucket_key(head)
+        if self.max_coalesce > 1 and key is not None:
+            rest = []
+            for r in self._queue:
+                if (len(group) < self.max_coalesce
+                        and self._bucket_key(r) == key
+                        and (r.submitted_at - head.submitted_at
+                             <= self.coalesce_window_s)):
+                    group.append(r)
+                else:
+                    rest.append(r)
+            self._queue = deque(rest)
+        _metrics.set_gauge("serve.queue_depth", len(self._queue))
+        group = [r for r in group if not self._expired(r, done, queued=True)]
+        if len(group) > 1:
+            self._count("coalesced", len(group))
+            for r in group:
+                r.coalesced = len(group)
+        return group
+
+    def _assemble(self, parts: list):
+        """Stack member batches along axis 0.  On backends that support
+        buffer donation (TPU/GPU) the concat is a jitted program donating
+        every input, so the members' staging buffers are reused for the
+        batch instead of living until the launch completes."""
+        import jax
+        import jax.numpy as jnp
+
+        arrs = [jnp.asarray(p) for p in parts]
+        if len(arrs) == 1:
+            return arrs[0]
+        if self.donate_inputs and jax.default_backend() in ("tpu", "gpu"):
+            fn = self._concat_fns.get(len(arrs))
+            if fn is None:
+                fn = jax.jit(lambda *xs: jnp.concatenate(xs, axis=0),
+                             donate_argnums=tuple(range(len(arrs))))
+                self._concat_fns[len(arrs)] = fn
+            return fn(*arrs)
+        return jnp.concatenate(arrs, axis=0)
+
+    def _drain_batched(self) -> list[Request]:
+        """Coalescing drain with up to ``pipeline_depth`` batches in
+        flight: batch *n+1* is assembled and dispatched (JAX async
+        dispatch — ``session.transform`` returns unsynced futures) before
+        batch *n* is finalized, so host-side assembly and input transfer
+        overlap device compute."""
+        done: list[Request] = []
+        inflight: deque = deque()
+        depth = max(self.pipeline_depth, 1)
+        while self._queue or inflight:
+            while self._queue and len(inflight) < depth:
+                group = self._next_group(done)
+                if not group:
+                    continue
+                state = self._launch(group, done)
+                if state is not None:
+                    inflight.append(state)
+            if inflight:
+                self._finalize(inflight.popleft(), done)
+        return done
+
+    def _launch(self, group: list[Request], done: list):
+        """Dispatch one coalesced batch; retries launch-time failures
+        (VMEM pressure, device loss, kernel raise) as a batch — one
+        ``serve.retry`` per failed batch attempt, so an injected fault
+        still balances one-for-one.  Returns the in-flight state (result
+        future + bookkeeping) or None if every member resolved here."""
+        prev_tier = None
+        cause = "kernel_failure"
+        while True:
+            group = [r for r in group
+                     if not self._expired(r, done, queued=False)]
+            if not group:
+                return None
+            head = group[0]
+            tier = self._pick_tier(head)
+            if (prev_tier is not None
+                    and LADDER_TIERS.index(tier)
+                    > LADDER_TIERS.index(prev_tier)):
+                self._degrade(head, tier, reason=cause)
+            for r in group:
+                r.attempts += 1
+                r.tier = tier
+            breaker = self.breakers[tier]
+            knobs = dict(_TIER_KNOBS[tier])
+            knobs.update(head.overrides)
+            if self.vmem_budget is not None:
+                knobs["vmem_budget"] = self.vmem_budget
+            if head.force_accum is not None:
+                knobs["accum"] = head.force_accum
+            _metrics.set_gauge("serve.batch_size", len(group))
+            sp = _trace.NULL_SPAN
+            if _trace.get_tracer().enabled:
+                sp = _trace.Span(_trace.get_tracer(), "serve.batch",
+                                 {"requests": len(group), "tier": tier,
+                                  "head": head.id})
+            t0 = self._clock()
+            try:
+                with sp:
+                    x = self._assemble([r.batch for r in group])
+                    y = self.session.transform(x, inverse=head.inverse,
+                                               **knobs)
+            except VmemPressure as e:
+                self._on_vmem_pressure(head, e)
+                cause = "vmem_pressure"
+                err = e
+            except DeviceLoss as e:
+                self._on_device_loss(head, e)
+                cause = "device_loss"
+                err = e
+            except (ValueError, TypeError) as e:
+                # malformed batch: not transient, no retry budget burned
+                for r in group:
+                    r.status = "failed"
+                    r.error = e
+                    r.finished_at = self._clock()
+                    self._count("failed")
+                    done.append(r)
+                return None
+            except Exception as e:  # kernel/collective failure
+                breaker.record_failure()
+                cause = "kernel_failure"
+                err = e
+            else:
+                self._count("batches")
+                return {"group": group, "y": y, "tier": tier, "t0": t0,
+                        "poisoned": consume_nan_poison()}
+            for r in group:
+                r.error = err
+            if head.attempts >= self.retry.max_attempts:
+                for r in group:
+                    r.status = "failed"
+                    r.finished_at = self._clock()
+                    self._count("failed")
+                    done.append(r)
+                return None
+            prev_tier = tier
+            head.retries += 1
+            self._count("retries")
+            self._sleep(self.retry.delay(head.attempts, head.id))
+
+    def _finalize(self, state: dict, done: list) -> None:
+        """Sync one in-flight batch, de-stack per member, and resolve.
+
+        An armed ``nan`` drill poison corrupts exactly one member's slice
+        (the batch head's) — the finite-guard then re-enqueues *only the
+        failing sub-requests*, one ``serve.retry`` each, through the
+        standard per-request lifecycle (which pins the recovery floor and
+        forces compensated accumulation); clean members complete
+        untouched from the same launch."""
+        import jax
+        import numpy as np
+
+        group, tier = state["group"], state["tier"]
+        breaker = self.breakers[tier]
+        try:
+            y = jax.block_until_ready(state["y"])
+        except Exception:
+            # Async dispatch surfaced the failure at sync time: retry
+            # every member through the per-request lifecycle.
+            breaker.record_failure()
+            for r in group:
+                r.retries += 1
+                self._count("retries")
+                done.append(self._process(r))
+            return
+        elapsed = self._clock() - state["t0"]
+        if (self.attempt_timeout_s is not None
+                and elapsed > self.attempt_timeout_s):
+            # Whole-batch SLO breach: one timeout, one retry, and the
+            # members replay individually (a leaner launch each).
+            self._count("timeouts")
+            group[0].events.append({"kind": "attempt_timeout", "tier": tier,
+                                    "attempt": group[0].attempts,
+                                    "batched": len(group)})
+            group[0].retries += 1
+            self._count("retries")
+            self._sleep(self.retry.delay(group[0].attempts, group[0].id))
+            for r in group:
+                done.append(self._process(r))
+            return
+        info = dict(self.session.last_info or {})
+        bad: list[Request] = []
+        off = 0
+        for i, r in enumerate(group):
+            n = int(np.shape(r.batch)[0])
+            part = y[off: off + n]
+            off += n
+            if state["poisoned"] and i == 0:
+                part = part * float("nan")
+            failed = False
+            if self.finite_check_every > 0:
+                self._finite_seq += 1
+                if (self._finite_seq % self.finite_check_every == 0
+                        and not finite_guard(part)):
+                    failed = True
+            if failed:
+                self._count("nonfinite")
+                floor = LADDER_TIERS[min(LADDER_TIERS.index(tier) + 1,
+                                         len(LADDER_TIERS) - 1)]
+                r.tier_floor = floor
+                r.force_accum = "compensated"
+                r.events.append({"kind": "numerics_recovery",
+                                 "reason": "nonfinite_output",
+                                 "tier": tier, "tier_floor": floor,
+                                 "force_accum": "compensated",
+                                 "attempt": r.attempts})
+                bad.append(r)
+                continue
+            r.status = "done"
+            r.result = part
+            r.info = {**info, "coalesced": r.coalesced,
+                      "batched_rows": int(np.shape(y)[0]),
+                      "events": tuple(info.get("events", ()))
+                      + tuple(r.events)}
+            r.finished_at = self._clock()
+            self._count("completed")
+            done.append(r)
+        if bad:
+            breaker.record_failure()
+            for r in bad:
+                r.retries += 1
+                self._count("retries")
+                self._sleep(self.retry.delay(r.attempts, r.id))
+                done.append(self._process(r))
+        elif group and breaker.record_success():
+            self._count("recovered")
+            group[0].events.append({"kind": "runtime_recovery", "tier": tier,
+                                    "attempt": group[0].attempts})
+
     # -- recovery paths ----------------------------------------------------
 
     def _on_vmem_pressure(self, req: Request, e: VmemPressure) -> None:
@@ -531,4 +918,6 @@ _COUNTERS = {
     "recovered": "serve.recovered",
     "deadline_exceeded": "serve.deadline_exceeded",
     "nonfinite": "numerics.nonfinite.detected",
+    "coalesced": "serve.coalesced",
+    "batches": "serve.batches",
 }

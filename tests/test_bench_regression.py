@@ -170,6 +170,46 @@ def test_serve_resilience_artifact_meets_acceptance_bar():
 
 
 @pytest.mark.bench_smoke
+@pytest.mark.serve_throughput_smoke
+def test_serve_throughput_artifact_has_no_model_regression():
+    """S2 must reproduce: the request/batch/coalescing accounting and the
+    zero-steady-state-plan-span counts are deterministic by construction
+    (warmed buckets, scripted stream); the queueing-sensitive keys
+    (rps/p99/SLO attainment) get the 4x band."""
+    failures = check_regression(_artifact("BENCH_serve_throughput.json"),
+                                tol_time=3.0)
+    assert not failures, "\n".join(failures)
+
+
+@pytest.mark.bench_smoke
+@pytest.mark.serve_throughput_smoke
+def test_serve_throughput_artifact_meets_acceptance_bar():
+    """The committed artifact carries the throughput acceptance bar:
+    coalesced serving sustains >= 1.5x the serial requests/sec on the
+    S-series shapes while holding the serial run's p99 as its SLO, every
+    request completed, warmed steady state paid zero plan builds or
+    autotune probes, and de-stacked results match serial to 1e-5."""
+    with open(_artifact("BENCH_serve_throughput.json")) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    assert rows, "empty artifact"
+    for row in rows:
+        kv = _parse_derived(row["derived"])
+        assert float(kv["max_abs_err"]) <= 1e-5, row["name"]
+        assert kv["completed"] == kv["admitted"] == kv["requests"], \
+            row["name"]
+        assert int(kv["failed"]) == 0 and int(kv["retries"]) == 0, row["name"]
+        speedup = float(kv["coalesced_vs_serial_speedup"].rstrip("x"))
+        assert speedup >= 1.5, f"{row['name']}: {speedup}x < 1.5x"
+        assert float(kv["slo_attainment_coalesced"]) >= 0.99, row["name"]
+        assert int(kv["plan_spans_steady_serial"]) == 0, row["name"]
+        assert int(kv["plan_spans_steady_coalesced"]) == 0, row["name"]
+        assert int(kv["coalesced"]) == int(kv["requests"]), row["name"]
+        # every launch carried a full or near-full stack
+        assert int(kv["batches"]) * 8 >= int(kv["requests"]), row["name"]
+
+
+@pytest.mark.bench_smoke
 @pytest.mark.numerics_smoke
 def test_numerics_artifact_has_no_model_regression():
     """N1 must reproduce: the resolved accumulation modes, a-priori error

@@ -93,6 +93,30 @@ def test_serving_page_covers_lifecycle_and_is_cross_linked():
 
 
 @pytest.mark.docs_health
+def test_serving_page_covers_throughput_and_is_cross_linked():
+    """docs/serving.md's Throughput section documents the warmup API,
+    coalescing-window semantics, the dispatch pipeline and the counter
+    accounting; README and docs/engine.md point at it (the engine page
+    owns the ``batch_bucket`` half of the contract)."""
+    page = os.path.join(_ROOT, "docs", "serving.md")
+    text = open(page, encoding="utf-8").read()
+    for needed in ("## Throughput", "warmup", "bucket_batches",
+                   "batch_bucket", "max_coalesce", "coalesce_window_s",
+                   "pipeline_depth", "donate", "serve.warmup",
+                   "serve.coalesced", "serve.batch", "serve.queue_depth",
+                   "serve.batch_size", "queued_shed",
+                   "BENCH_serve_throughput"):
+        assert needed in text, f"serving.md does not mention {needed!r}"
+    readme = open(os.path.join(_ROOT, "README.md"), encoding="utf-8").read()
+    assert "coalesc" in readme, "README does not mention coalescing"
+    engine = open(os.path.join(_ROOT, "docs", "engine.md"),
+                  encoding="utf-8").read()
+    assert "batch_bucket" in engine, (
+        "engine.md does not document batch_bucket")
+    assert "serving.md" in engine, "engine.md does not link docs/serving.md"
+
+
+@pytest.mark.docs_health
 def test_numerics_page_covers_guards_and_is_cross_linked():
     """docs/numerics.md documents the guarded-numerics layer (accum modes,
     error model + budget escalation, nonfinite recovery, ckpt/train guards)

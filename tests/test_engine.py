@@ -208,13 +208,33 @@ class TestAutotune:
     def test_cache_json_roundtrip(self, tmp_path):
         path = str(tmp_path / "autotune.json")
         cache = AutotuneCache(path)
-        cache.put("k1", {"bm": 64, "bn": 128, "bk": 32, "us": 1.5})
+        key = "v4:64x128x32|float32|dense|fwd|plain|s"
+        cache.put(key, {"bm": 64, "bn": 128, "bk": 32, "us": 1.5})
         cache.save()
         reloaded = AutotuneCache(path)
-        assert reloaded.get("k1") == {"bm": 64, "bn": 128, "bk": 32, "us": 1.5}
+        assert reloaded.get(key) == {"bm": 64, "bn": 128, "bk": 32, "us": 1.5}
         assert len(reloaded) == 1
         with open(path) as f:
-            assert "k1" in json.load(f)
+            assert key in json.load(f)
+
+    def test_cache_prunes_stale_keys_on_load(self, tmp_path):
+        # pre-role/stale-version keys are dropped on load (and counted),
+        # live-schema keys survive
+        from repro import obs
+
+        path = str(tmp_path / "autotune.json")
+        live = "fused:v5:16x16x16|float32|dense|fwd|plain|s|vb4194304"
+        stale = {"16x16x16|float32|dense|s": {"bm": 8},  # pre-role, no version
+                 "v3:16x16x16|float32|dense|fwd|plain|s": {"bm": 8},
+                 "fused:v4:16x16x16|float32|dense|fwd|plain|s": {"bm": 8}}
+        with open(path, "w") as f:
+            json.dump({live: {"bu": 8, "bka": 8, "bnb": 8}, **stale}, f)
+        with obs.session() as s:
+            cache = AutotuneCache(path)
+            assert len(cache) == 1 and cache.get(live) is not None
+            assert s.registry.value("autotune.cache.pruned") == len(stale)
+            # prune() is idempotent once the rubble is gone
+            assert cache.prune() == 0
 
     def test_corrupt_cache_tolerated(self, tmp_path):
         path = str(tmp_path / "autotune.json")

@@ -131,9 +131,16 @@ def test_registry_counters_gauges_histograms():
     snap = r.snapshot()
     assert snap["a.b"] == 4 and snap["g"] == 2.5
     assert snap["h.count"] == 100
+    # sum/mean are exact running totals (not window-bounded), so
+    # throughput math over a snapshot needs no percentile estimate
+    assert snap["h.sum"] == 5050.0
+    assert snap["h.mean"] == 50.5
     h = r.histogram("h")
     assert h.percentile(50) <= h.percentile(90) <= h.percentile(99)
     assert h.summary()["max"] == 100.0
+    assert h.summary()["sum"] == 5050.0
+    empty = obs.Histogram()
+    assert empty.summary()["sum"] == 0.0
     r.reset("a.")
     assert r.value("a.b") == 0 and r.gauge("g").value == 2.5
 
@@ -428,14 +435,16 @@ def test_autotune_cache_atomic_save_roundtrip(tmp_path):
     path = str(tmp_path / "autotune.json")
     with obs.session() as s:
         cache = AutotuneCache(path)
-        cache.put("k1", {"bm": 64, "bn": 64, "bk": 64, "us": 1.0})
+        # a live-schema key: load() prunes unrecognized (stale-version) keys
+        key = "v4:16x16x16|float32|dense|fwd|plain|s"
+        cache.put(key, {"bm": 64, "bn": 64, "bk": 64, "us": 1.0})
         cache.save()
         assert s.registry.value("autotune.cache.writes") == 1
         # no temp litter, and the file is complete valid JSON
         assert [f for f in os.listdir(tmp_path)] == ["autotune.json"]
-        assert json.loads(open(path).read())["k1"]["bm"] == 64
+        assert json.loads(open(path).read())[key]["bm"] == 64
         fresh = AutotuneCache(path)
-        assert fresh.get("k1")["bn"] == 64
+        assert fresh.get(key)["bn"] == 64
         assert s.registry.value("autotune.cache.loads") == 1
         assert s.registry.value("autotune.cache.hits") == 1
         assert fresh.get("absent") is None
@@ -457,9 +466,10 @@ def test_autotune_cache_corrupt_recovery(tmp_path):
         assert len(cache) == 0
         assert s.registry.value("autotune.cache.corrupt_recovered") == 2
         # recovery is silent for runs: put/save works over the rubble
-        cache.put("k", {"bm": 8, "bn": 8, "bk": 8})
+        key = "v4:8x8x8|float32|dense|fwd|plain|s"
+        cache.put(key, {"bm": 8, "bn": 8, "bk": 8})
         cache.save()
-        assert AutotuneCache(path).get("k")["bm"] == 8
+        assert AutotuneCache(path).get(key)["bm"] == 8
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,286 @@
+"""Throughput serving: shape-bucketed warmup, coalescing, pipelining.
+
+The ``serve_throughput_smoke``-marked tests pin the throughput-layer
+contracts (``docs/serving.md``, "Throughput"):
+
+* a warmed session/server pays **zero** plan builds and autotune probes
+  in steady state, for every batch size inside a warmed bucket;
+* coalesced results match the serial run element-for-element (atol 1e-5)
+  and requests only ever co-batch within their bucket — mixed dims,
+  directions, or per-request overrides split the batch;
+* failure semantics survive batching: a queued deadline sheds before any
+  launch is paid, and an injected fault re-enqueues only the failing
+  sub-requests (``faults.injected.* == serve.retry`` still balances).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import obs
+from repro.runtime.faults import FaultSpec, inject_faults
+from repro.serve import DxtServeSession, ResilientDxtServer
+
+ATOL = 1e-5
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _batch(n=8, b=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(b, n, n, n)).astype(np.float32)
+
+
+def _server(clock=None, **kw):
+    clock = clock or FakeClock()
+    kw.setdefault("max_coalesce", 4)
+    kw.setdefault("coalesce_window_s", 60.0)
+    kw.setdefault("pipeline_depth", 2)
+    return ResilientDxtServer(session=DxtServeSession(), clock=clock,
+                              sleep=lambda s: None, **kw), clock
+
+
+def _span_names(session_ns):
+    return [sp.name for sp in session_ns.tracer.spans()]
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed warmup
+
+
+@pytest.mark.serve_throughput_smoke
+class TestWarmup:
+    def test_pow2_buckets(self):
+        f = DxtServeSession._pow2_bucket
+        assert [f(b) for b in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+            [1, 1, 2, 4, 4, 8, 8, 16]
+
+    def test_warmed_session_pays_zero_plan_or_probe_spans(self, tmp_path):
+        """Every batch size inside a warmed bucket replans nothing: no
+        ``plan`` builds, no ``autotune.*`` probes, steady state is pure
+        execution."""
+        sess = DxtServeSession(kind="dct", autotune=True,
+                               autotune_cache=str(tmp_path / "a.json"))
+        with obs.session("warm", enable_tracing=True) as s:
+            recs = sess.warmup([(4, 8, 8, 8)])
+            assert recs[0]["buckets"] == (1, 2, 4)
+            assert sess.bucket_batches
+            assert s.registry.value("serve.warmup") == 3
+            n_warm = len(_span_names(s))
+            for b in (1, 2, 3, 4):  # 3 rides the 4-bucket's plan
+                sess.transform(_batch(b=b, seed=b))
+            steady = _span_names(s)[n_warm:]
+            assert steady.count("serve.request") == 4
+            assert not [n for n in steady
+                        if n == "plan" or n.startswith("autotune")], steady
+        # de-bucketed byte model: a bucketed request still reports its own
+        # batch's traffic, not the bucket's
+        info_b1 = sess.last_info
+        assert info_b1["hbm_bytes_moved"] > 0
+
+    def test_warmup_config_dicts_and_unknown_keys(self):
+        sess = DxtServeSession(kind="dct")
+        recs = sess.warmup([{"dims": (8, 8, 8), "batch": 2, "fuse": False,
+                             "inverse": True}], adjoint=False)
+        assert recs[0]["inverse"] is True
+        assert recs[0]["buckets"] == (1, 2)
+        assert recs[0]["fuse"] is False
+        with pytest.raises(ValueError, match="unknown warmup config"):
+            sess.warmup([{"dims": (8, 8, 8), "nope": 1}])
+        with pytest.raises(ValueError, match="warmup shape"):
+            sess.warmup([(8, 8)])
+
+    def test_server_warmup_tiers_validate(self):
+        server, _ = _server()
+        recs = server.warmup([(2, 8, 8, 8)], adjoint=False,
+                             tiers=("auto", "staged"))
+        assert len(recs) == 2  # one record per (entry, tier)
+        assert server.session.warmed == recs
+        with pytest.raises(ValueError, match="unknown tier"):
+            server.warmup([(8, 8, 8)], tiers=("hyperspace",))
+
+    def test_bucketed_output_matches_exact_shape_plan(self):
+        x = _batch(b=3, seed=5)
+        sess = DxtServeSession(kind="dct")
+        y_exact = np.asarray(sess.transform(x))
+        warm = DxtServeSession(kind="dct")
+        warm.warmup([(4, 8, 8, 8)], adjoint=False)
+        y_bucketed = np.asarray(warm.transform(x))
+        assert y_bucketed.shape == x.shape
+        np.testing.assert_allclose(y_bucketed, y_exact, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# request coalescing
+
+
+@pytest.mark.serve_throughput_smoke
+class TestCoalescing:
+    def test_same_bucket_coalesces_and_matches_serial(self):
+        xs = [_batch(seed=i) for i in range(4)]
+        serial = ResilientDxtServer(session=DxtServeSession())
+        refs = [np.asarray(serial.transform(x)) for x in xs]
+        server, _ = _server()
+        server.warmup([(4, 8, 8, 8)], adjoint=False)
+        reqs = [server.submit(x) for x in xs]
+        server.drain()
+        st = server.stats()
+        assert st["batches"] == 1 and st["coalesced"] == 4
+        for r, ref in zip(reqs, refs):
+            assert r.status == "done" and r.coalesced == 4
+            assert r.info["coalesced"] == 4
+            np.testing.assert_allclose(np.asarray(r.result), ref, atol=ATOL)
+
+    def test_mixed_dims_never_co_batched(self):
+        server, _ = _server()
+        r8a = server.submit(_batch(n=8, seed=0))
+        r4 = server.submit(_batch(n=4, seed=1))
+        r8b = server.submit(_batch(n=8, seed=2))
+        server.drain()
+        assert [r.status for r in (r8a, r4, r8b)] == ["done"] * 3
+        # the two 8-cubes coalesce around the 4-cube; it launches alone
+        assert r8a.coalesced == 2 and r8b.coalesced == 2
+        assert r4.coalesced == 1
+        assert np.asarray(r4.result).shape == (1, 4, 4, 4)
+
+    def test_override_splits_the_batch(self):
+        """A per-request knob puts the request in its own bucket — it
+        never changes how the rest of the batch runs."""
+        server, _ = _server()
+        plain = [server.submit(_batch(seed=i)) for i in range(2)]
+        pinned = server.submit(_batch(seed=9), backend="einsum", fuse=False)
+        more = server.submit(_batch(seed=3))
+        server.drain()
+        assert plain[0].coalesced == 3  # the three un-overridden requests
+        assert more.coalesced == 3
+        assert pinned.coalesced == 1 and pinned.status == "done"
+        assert pinned.info["backends"] == ("einsum",) * 3
+
+    def test_window_bounds_coalescing(self):
+        """Only requests submitted within the window of the bucket head
+        stack; later arrivals launch separately."""
+        server, clock = _server(coalesce_window_s=1.0)
+        early = [server.submit(_batch(seed=i)) for i in range(2)]
+        clock.t += 5.0
+        late = server.submit(_batch(seed=2))
+        server.drain()
+        assert early[0].coalesced == 2 and early[1].coalesced == 2
+        assert late.coalesced == 1
+        assert server.stats()["batches"] == 2
+
+    def test_max_coalesce_caps_the_batch(self):
+        server, _ = _server(max_coalesce=2)
+        reqs = [server.submit(_batch(seed=i)) for i in range(5)]
+        server.drain()
+        assert server.stats()["batches"] == 3
+        assert [r.coalesced for r in reqs] == [2, 2, 2, 2, 1]
+
+    def test_queued_deadline_sheds_before_launch(self):
+        """A deadline that expires while the request waits in the queue
+        fails it *before* any launch is paid — no batch slot, no engine
+        work, no retries."""
+        server, clock = _server()
+        live = server.submit(_batch(seed=0))
+        doomed = server.submit(_batch(seed=1), deadline_s=1.0)
+        clock.t += 5.0  # expires in the queue
+        done = server.drain()
+        assert doomed.status == "failed"
+        assert doomed.attempts == 0 and doomed.retries == 0
+        assert any(e["kind"] == "queued_shed" for e in doomed.events)
+        assert live.status == "done" and live.coalesced == 1
+        st = server.stats()
+        assert st["deadline_exceeded"] == 1 and st["completed"] == 1
+        assert {r.id for r in done} == {live.id, doomed.id}
+
+    def test_malformed_request_fails_alone_without_retries(self):
+        server, _ = _server()
+        good = server.submit(_batch(seed=0))
+        bad = server.submit(np.zeros((8, 8, 8), np.float32))  # 3-D
+        server.drain()
+        assert good.status == "done"
+        assert bad.status == "failed" and bad.retries == 0
+        assert isinstance(bad.error, (ValueError, TypeError))
+        assert server.stats()["retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# double-buffered dispatch + fault identity
+
+
+@pytest.mark.serve_throughput_smoke
+class TestPipelinedDispatch:
+    def test_pipeline_keeps_two_batches_in_flight(self):
+        server, _ = _server(max_coalesce=2, pipeline_depth=2)
+        reqs = [server.submit(_batch(seed=i)) for i in range(6)]
+        done = server.drain()
+        assert len(done) == 6
+        assert all(r.status == "done" for r in reqs)
+        assert server.stats()["batches"] == 3
+
+    def test_nan_fault_retries_only_failed_sub_requests(self):
+        """The chaos contract under coalescing: one injected ``nan``
+        poisons one member of one batched launch; exactly that member
+        retries (with the nonfinite-recovery pins) while its batchmates
+        complete from the same launch — ``faults.injected.nan ==
+        serve.retry == numerics.nonfinite.detected``."""
+        xs = [_batch(seed=i) for i in range(4)]
+        serial = ResilientDxtServer(session=DxtServeSession())
+        refs = [np.asarray(serial.transform(x)) for x in xs]
+        with obs.session("drill", enable_tracing=True) as s:
+            server, _ = _server(finite_check_every=1)
+            server.warmup([(4, 8, 8, 8)], adjoint=False)
+            with inject_faults(FaultSpec(match="serve.request", kind="nan",
+                                         times=1)) as inj:
+                reqs = [server.submit(x) for x in xs]
+                server.drain()
+            injected = sum(sp.injected for sp in inj.specs)
+            assert injected == 1
+            reg = s.registry
+            assert reg.value("serve.retry") == injected
+            assert reg.value("numerics.nonfinite.detected") == injected
+            st = server.stats()
+            assert st["completed"] == 4 and st["failed"] == 0
+            # only the poisoned member retried; its recovery pinned the
+            # floor + compensated accumulation
+            assert [r.retries for r in reqs] == [1, 0, 0, 0]
+            assert reqs[0].force_accum == "compensated"
+            assert any(e["kind"] == "numerics_recovery"
+                       for e in reqs[0].events)
+            for r, ref in zip(reqs, refs):
+                assert np.isfinite(np.asarray(r.result)).all()
+                np.testing.assert_allclose(np.asarray(r.result), ref,
+                                           atol=ATOL)
+
+    def test_vmem_pressure_retries_batch_once(self):
+        """A launch-time fault (VMEM pressure) is a *batch* failure: one
+        retry for the whole launch, budget tightened, then the batch
+        replays — still one ``serve.retry`` per injected fault."""
+        xs = [_batch(seed=i) for i in range(3)]
+        with obs.session("drill", enable_tracing=True) as s:
+            server, _ = _server()
+            with inject_faults(FaultSpec(match="serve.request",
+                                         kind="vmem_pressure",
+                                         times=1)) as inj:
+                reqs = [server.submit(x) for x in xs]
+                server.drain()
+            assert sum(sp.injected for sp in inj.specs) == 1
+            assert s.registry.value("serve.retry") == 1
+            assert all(r.status == "done" for r in reqs)
+            assert server.vmem_budget is not None  # tightened
+            assert server.stats()["degraded"] == 1
+
+    def test_default_knobs_keep_serial_path(self):
+        """``max_coalesce=1`` + ``pipeline_depth=1`` is the historical
+        strictly-serial drain: no batches, no coalescing counters."""
+        server = ResilientDxtServer(session=DxtServeSession())
+        reqs = [server.submit(_batch(seed=i)) for i in range(3)]
+        server.drain()
+        st = server.stats()
+        assert st["batches"] == 0 and st["coalesced"] == 0
+        assert all(r.status == "done" and r.coalesced == 1 for r in reqs)
+        assert all(r.finished_at is not None for r in reqs)
