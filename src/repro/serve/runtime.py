@@ -75,16 +75,19 @@ layers three mechanisms on the same lifecycle:
 
 * **request coalescing** — ``max_coalesce > 1`` stacks queued requests
   that share a *bucket* (trailing dims, dtype, direction, per-request
-  overrides) and were submitted within ``coalesce_window_s`` of the
-  bucket head into one batched launch, de-stacked per caller afterwards
+  overrides) and were submitted within ``coalesce_window_s`` (default
+  5 ms; a zero window stacks only same-instant submissions and warns) of
+  the bucket head into one batched launch, de-stacked per caller afterwards
   (``serve.coalesced`` counts the stacked requests, ``serve.batch``
   spans the launch).  A request with a different override set simply
   lands in its own bucket — it splits the batch, it never poisons it;
 * **double-buffered dispatch** — ``pipeline_depth=2`` keeps two batches
-  in flight using JAX async dispatch: batch *n+1* is assembled (with
-  donated input buffers where the backend supports donation) and
-  dispatched while batch *n*'s results are still being synced, so host
-  assembly and HBM transfer overlap device compute;
+  in flight using JAX async dispatch: batch *n+1* is assembled (donating
+  server-owned *staging copies* where the backend supports donation —
+  caller arrays and the retained ``Request.batch`` are never donated, so
+  retries always have a live buffer to replay) and dispatched while
+  batch *n*'s results are still being synced, so host assembly and HBM
+  transfer overlap device compute;
 * **shape-bucketed warmup** — :meth:`warmup` delegates to
   :meth:`DxtServeSession.warmup` per ladder tier so steady-state
   requests (and every coalesced batch size) hit pre-built, pre-tuned,
@@ -256,7 +259,7 @@ class ResilientDxtServer:
                  min_vmem_budget: int = 1 << 18,
                  finite_check_every: int = 0,
                  max_coalesce: int = 1,
-                 coalesce_window_s: float = 0.0,
+                 coalesce_window_s: float = 0.005,
                  pipeline_depth: int = 1,
                  donate_inputs: bool = True,
                  devices=None,
@@ -275,6 +278,17 @@ class ResilientDxtServer:
         # strictly-serial per-request path.
         self.max_coalesce = int(max_coalesce)
         self.coalesce_window_s = float(coalesce_window_s)
+        if self.max_coalesce > 1 and self.coalesce_window_s <= 0.0:
+            import warnings
+
+            # A zero window only stacks submissions with *identical*
+            # monotonic timestamps — on a real clock essentially nothing
+            # coalesces, which silently defeats max_coalesce.
+            warnings.warn(
+                "max_coalesce > 1 with coalesce_window_s <= 0: only "
+                "same-instant submissions coalesce; set a positive "
+                "window (default 0.005s) for real clocks",
+                RuntimeWarning, stacklevel=2)
         self.pipeline_depth = int(pipeline_depth)
         self.donate_inputs = bool(donate_inputs)
         self._concat_fns: dict = {}  # arity -> jitted donating concat
@@ -399,8 +413,11 @@ class ResilientDxtServer:
                 for bb in rec["buckets"]:
                     if bb < 2:
                         continue
-                    x0 = jnp.zeros((1,) + tuple(dims), dtype)
-                    y = self._assemble([x0] * bb)
+                    # bb *distinct* member arrays: the donating concat
+                    # must never see the same buffer twice.
+                    xs = [jnp.zeros((1,) + tuple(dims), dtype)
+                          for _ in range(bb)]
+                    y = self._assemble(xs)
                     jax.block_until_ready([y[i: i + 1] for i in range(bb)])
         return done
 
@@ -629,22 +646,37 @@ class ResilientDxtServer:
     def _assemble(self, parts: list):
         """Stack member batches along axis 0.  On backends that support
         buffer donation (TPU/GPU) the concat is a jitted program donating
-        every input, so the members' staging buffers are reused for the
-        batch instead of living until the launch completes."""
+        every input — but only ever *server-owned staging buffers*.  A
+        host input (numpy/list) is staged onto the device by
+        ``jnp.asarray`` (a fresh buffer, safe to donate); a member that
+        already is a ``jax.Array`` would be aliased by ``asarray``, so it
+        is staged through an explicit device copy first.  The caller's
+        array therefore always survives the launch, and every retry path
+        (batch re-assembly, ``_process`` replay) can reuse ``r.batch``
+        untouched."""
         import jax
         import jax.numpy as jnp
 
-        arrs = [jnp.asarray(p) for p in parts]
-        if len(arrs) == 1:
-            return arrs[0]
-        if self.donate_inputs and jax.default_backend() in ("tpu", "gpu"):
+        if len(parts) == 1:
+            return jnp.asarray(parts[0])
+        if self._donation_enabled():
+            arrs = [jnp.copy(p) if isinstance(p, jax.Array)
+                    else jnp.asarray(p) for p in parts]
             fn = self._concat_fns.get(len(arrs))
             if fn is None:
                 fn = jax.jit(lambda *xs: jnp.concatenate(xs, axis=0),
                              donate_argnums=tuple(range(len(arrs))))
                 self._concat_fns[len(arrs)] = fn
             return fn(*arrs)
-        return jnp.concatenate(arrs, axis=0)
+        return jnp.concatenate([jnp.asarray(p) for p in parts], axis=0)
+
+    def _donation_enabled(self) -> bool:
+        """True when batch assembly should donate its staging buffers —
+        only on backends where donation actually aliases (TPU/GPU; XLA
+        ignores it on CPU)."""
+        import jax
+
+        return self.donate_inputs and jax.default_backend() in ("tpu", "gpu")
 
     def _drain_batched(self) -> list[Request]:
         """Coalescing drain with up to ``pipeline_depth`` batches in
@@ -731,7 +763,12 @@ class ResilientDxtServer:
                 err = e
             else:
                 self._count("batches")
+                # Snapshot the session info for *this* dispatch now: with
+                # pipeline_depth >= 2 the next batch is dispatched before
+                # this one is finalized, so session.last_info will have
+                # moved on by sync time.
                 return {"group": group, "y": y, "tier": tier, "t0": t0,
+                        "info": dict(self.session.last_info or {}),
                         "poisoned": consume_nan_poison()}
             for r in group:
                 r.error = err
@@ -787,7 +824,7 @@ class ResilientDxtServer:
             for r in group:
                 done.append(self._process(r))
             return
-        info = dict(self.session.last_info or {})
+        info = state["info"]
         bad: list[Request] = []
         off = 0
         for i, r in enumerate(group):

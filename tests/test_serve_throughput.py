@@ -274,6 +274,24 @@ class TestPipelinedDispatch:
             assert server.vmem_budget is not None  # tightened
             assert server.stats()["degraded"] == 1
 
+    def test_pipelined_batches_keep_their_own_info(self):
+        """With two batches in flight, batch *n*'s requests carry batch
+        *n*'s plan info — ``last_info`` is captured at dispatch, not at
+        sync time (by then batch *n+1* has already overwritten it)."""
+        ref = DxtServeSession()
+        ref.transform(_batch(n=8, b=2, seed=0))
+        bytes8 = ref.last_info["hbm_bytes_moved"]
+        ref.transform(_batch(n=4, b=2, seed=0))
+        bytes4 = ref.last_info["hbm_bytes_moved"]
+        assert bytes8 != bytes4
+        server, _ = _server(max_coalesce=2, pipeline_depth=2)
+        r8 = [server.submit(_batch(n=8, seed=i)) for i in range(2)]
+        r4 = [server.submit(_batch(n=4, seed=i)) for i in range(2)]
+        server.drain()
+        assert server.stats()["batches"] == 2
+        assert all(r.info["hbm_bytes_moved"] == bytes8 for r in r8)
+        assert all(r.info["hbm_bytes_moved"] == bytes4 for r in r4)
+
     def test_default_knobs_keep_serial_path(self):
         """``max_coalesce=1`` + ``pipeline_depth=1`` is the historical
         strictly-serial drain: no batches, no coalescing counters."""
@@ -284,3 +302,90 @@ class TestPipelinedDispatch:
         assert st["batches"] == 0 and st["coalesced"] == 0
         assert all(r.status == "done" and r.coalesced == 1 for r in reqs)
         assert all(r.finished_at is not None for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# donation safety (the caller's buffers and Request.batch survive launches)
+
+
+def _spying_concat(server, arity, calls):
+    """Replace the cached donating concat for ``arity`` with a spy that
+    records the identities of the arrays the server hands it."""
+    def spy(*parts):
+        calls.append([id(p) for p in parts])
+        return jnp.concatenate(parts, axis=0)
+
+    server._concat_fns[arity] = spy
+
+
+@pytest.mark.serve_throughput_smoke
+class TestDonationSafety:
+    def test_assemble_donates_only_staging_copies(self):
+        """A caller-owned ``jax.Array`` must never reach the donating
+        concat: it is staged through a device copy first, so the caller's
+        array — and the retained ``Request.batch`` every retry path
+        replays — survives the launch."""
+        server, _ = _server()
+        server._donation_enabled = lambda: True
+        xs = [jnp.asarray(_batch(seed=i)) for i in range(2)]
+        calls = []
+        _spying_concat(server, 2, calls)
+        y = server._assemble(list(xs))
+        assert calls, "donating assembly path was not taken"
+        assert not set(calls[0]) & {id(x) for x in xs}
+        np.testing.assert_allclose(
+            np.asarray(y),
+            np.concatenate([np.asarray(x) for x in xs]), atol=0)
+        for x in xs:  # caller arrays still live and intact
+            assert np.isfinite(np.asarray(x)).all()
+
+    def test_assemble_same_buffer_twice_stages_distinct_copies(self):
+        """The same array submitted twice (or warmup's repeated zeros)
+        must become two distinct staging buffers — duplicate donation of
+        one buffer is a runtime error on TPU/GPU."""
+        server, _ = _server()
+        server._donation_enabled = lambda: True
+        x = jnp.asarray(_batch(seed=0))
+        calls = []
+        _spying_concat(server, 2, calls)
+        y = server._assemble([x, x])
+        assert len(set(calls[0])) == 2
+        assert np.asarray(y).shape == (2, 8, 8, 8)
+
+    def test_warmup_assembly_never_duplicates_donated_buffers(self):
+        """Server warmup pre-compiles the assembly for every bucket with
+        bb *distinct* members (each staged to its own copy) — the
+        donating concat never sees one buffer twice."""
+        server, _ = _server()
+        server._donation_enabled = lambda: True
+        calls = []
+        for arity in (2, 4):
+            _spying_concat(server, arity, calls)
+        server.warmup([(4, 8, 8, 8)], adjoint=False)
+        assert len(calls) == 2  # buckets 2 and 4
+        for seen in calls:
+            assert len(set(seen)) == len(seen)
+
+    @pytest.mark.filterwarnings(
+        "ignore:Some donated buffers were not usable")
+    def test_donated_coalesced_drain_leaves_inputs_replayable(self):
+        """End-to-end on the donation path: after a coalesced drain the
+        original submissions (``Request.batch``) are still live arrays —
+        a retry or a chaos replay can re-assemble them."""
+        server, _ = _server()
+        server._donation_enabled = lambda: True
+        xs = [jnp.asarray(_batch(seed=i)) for i in range(4)]
+        refs = [np.asarray(x) for x in xs]
+        reqs = [server.submit(x) for x in xs]
+        server.drain()
+        assert all(r.status == "done" for r in reqs)
+        for r, ref in zip(reqs, refs):
+            np.testing.assert_allclose(np.asarray(r.batch), ref, atol=0)
+
+    def test_zero_window_with_coalescing_warns(self):
+        with pytest.warns(RuntimeWarning, match="coalesce_window_s"):
+            ResilientDxtServer(session=DxtServeSession(), max_coalesce=2,
+                               coalesce_window_s=0.0)
+        # the default window is nonzero so max_coalesce>1 alone coalesces
+        assert ResilientDxtServer(
+            session=DxtServeSession()).coalesce_window_s > 0.0
